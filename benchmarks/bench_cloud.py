@@ -1,0 +1,66 @@
+"""Paper Figure 4: cloud scenario — one DGX-H100 vs four PIM-AI servers.
+
+Six panels: TTFT, encode energy, tokens/s, energy/token, QPS, energy/
+query, for Llama2-70B and Mixtral-8x22B under GQA=8 and MHA, at the
+paper's batch sizes (§4.1).
+"""
+from __future__ import annotations
+
+from benchmarks.common import print_table, r3
+from repro.core.scenarios import run_cloud
+
+PAPER_BANDS = {
+    "ttft_gqa": (2.4, 3.3, "PIM ~3x H100 (paper §4.1.1)"),
+    "ttft_mha": (1.35, 2.0, "PIM ~1.75x H100"),
+    "tokens_per_s": (1.7, 3.5, "paper band 2.23-2.75x"),
+    "energy_per_token": (1.15, 2.1, "paper: 15-40% less"),
+    "energy_per_query": (0.9, 1.4, "paper: equivalent"),
+    "tco_per_qps": (6.0, 8.0, "paper: 6.2-6.94x"),
+}
+
+
+def run(n_in=1000, n_out=100):
+    rows = []
+    results = {}
+    for model in ("llama2-70b", "mixtral-8x22b"):
+        for attn in ("gqa", "mha"):
+            r = run_cloud(model, attn, n_in, n_out)
+            results[(model, attn)] = r
+            h, p = r["dgx-h100"], r["pim-ai-4srv"]
+            rows.append([
+                model, attn.upper(),
+                f"{r['batch']['dgx-h100']}/{r['batch']['pim-ai']}",
+                r3(h.ttft_s), r3(p.ttft_s),
+                r3(h.tokens_per_s), r3(p.tokens_per_s),
+                r3(h.energy_per_token_j), r3(p.energy_per_token_j),
+                r3(h.qps), r3(p.qps),
+                r3(h.energy_per_query_j), r3(p.energy_per_query_j),
+            ])
+    print_table(
+        f"Fig 4 — cloud, {n_in} in / {n_out} out "
+        "(H100 = 1x DGX-H100; PIM = 4 servers, 12 engines)",
+        ["model", "attn", "batch H/P", "TTFT_H", "TTFT_P", "tok/s_H",
+         "tok/s_P", "E/tok_H", "E/tok_P", "QPS_H", "QPS_P", "EPQ_H",
+         "EPQ_P"], rows)
+
+    ratio_rows = []
+    for (model, attn), r in results.items():
+        ra = r["ratios"]
+        ratio_rows.append([model, attn.upper(), r3(ra["ttft"]),
+                           r3(ra["tokens_per_s"]),
+                           r3(ra["energy_per_token"]), r3(ra["qps"]),
+                           r3(ra["energy_per_query"]),
+                           r3(ra["tco_per_qps"])])
+    print_table(
+        "Fig 4 ratios (PIM advantage; TTFT = PIM/H100, others H100-norm)",
+        ["model", "attn", "TTFT", "tok/s", "E/tok", "QPS", "EPQ",
+         "TCO/QPS"], ratio_rows)
+    return results
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

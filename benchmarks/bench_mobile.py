@@ -1,0 +1,38 @@
+"""Paper Figure 5: mobile scenario — PIM-AI vs A17 Pro / Snapdragon 8
+Gen 3 / Dimensity 9300, Llama2-7B / Mistral-7B, W4A16, batch 1."""
+from __future__ import annotations
+
+from benchmarks.common import print_table, r3
+from repro.core.scenarios import run_mobile
+
+
+def run(n_in=1000, n_out=100):
+    results = {}
+    for model in ("llama2-7b", "mistral-7b"):
+        r = run_mobile(model, n_in, n_out)
+        results[model] = r
+        rows = []
+        for hw, m in r["profiles"].items():
+            rows.append([hw, r3(m.ttft_s), r3(m.tokens_per_s),
+                         r3(m.energy_per_token_j), r3(m.qps),
+                         r3(m.energy_per_query_j)])
+        print_table(
+            f"Fig 5 — mobile {model}, {n_in} in / {n_out} out, W4A16",
+            ["profile", "TTFT_s", "tok/s", "E/tok_J", "QPS", "EPQ_J"],
+            rows)
+        ratio_rows = [[hw, r3(ra["tokens_per_s"]),
+                       r3(ra["energy_per_token"]), r3(ra["qps"]),
+                       r3(ra["energy_per_query"])]
+                      for hw, ra in r["ratios"].items()]
+        print_table(
+            f"Fig 5 ratios — PIM-AI gain over each SoC ({model})",
+            ["vs profile", "tok/s", "E/token", "QPS", "EPQ"], ratio_rows)
+    return results
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

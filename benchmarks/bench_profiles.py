@@ -1,0 +1,39 @@
+"""Paper Table 1: hardware profiles + PIM-AI composition sanity.
+
+Prints every profile used by the simulator and verifies the chip ->
+DIMM -> server composition reproduces the Table-1 aggregate row
+(3072 TOPS, 39321.6 GB/s)."""
+from __future__ import annotations
+
+from benchmarks.common import print_table, r3
+from repro.core import profiles as HW
+
+
+def run():
+    rows = []
+    for p in (HW.PIM_AI_CHIP, HW.PIM_AI_CHIP_SERVER, HW.PIM_AI_MOBILE,
+              HW.pim_dimm(), HW.pim_engine(), HW.pim_server(),
+              HW.PIM_AI_SERVER, HW.A17_PRO, HW.SNAPDRAGON_8_GEN3,
+              HW.DIMENSITY_9300, HW.DGX_H100):
+        rows.append([p.name, r3(p.tops), r3(p.pj_per_op),
+                     r3(p.mem_bw_gbs), r3(p.mem_pj_per_bit),
+                     f"{r3(p.h2d_bw_gbs)}/{r3(p.d2h_bw_gbs)}",
+                     f"{r3(p.h2d_pj_per_bit)}/{r3(p.d2h_pj_per_bit)}"])
+    print_table(
+        "Table 1 — hardware profiles (+ composed PIM-AI hierarchy)",
+        ["profile", "TOPS", "pJ/OP", "mem GB/s", "mem pJ/bit",
+         "H2D/D2H GB/s", "H2D/D2H pJ/bit"], rows)
+
+    comp = HW.check_composition()
+    ok = all(abs(a - b) < 1e-6 for a, b in comp.values())
+    print(f"\ncomposition check (24 DIMM x 16 chip == Table-1 server): "
+          f"{comp} -> {'OK' if ok else 'MISMATCH'}")
+    return ok
+
+
+def main():
+    assert run()
+
+
+if __name__ == "__main__":
+    main()

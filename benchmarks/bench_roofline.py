@@ -1,0 +1,44 @@
+"""Roofline table: 3-term analysis of every dry-run cell.
+
+Reads ``results/dryrun.jsonl`` (written by ``repro.launch.dryrun``) and
+prints the per-(arch x shape x mesh) compute/memory/collective roofline
+terms vs TPU v5e constants. This is the §Roofline deliverable rendered
+as a benchmark table; the same module writes EXPERIMENTS.md content.
+"""
+from __future__ import annotations
+
+from benchmarks.common import print_table
+from repro.roofline.analysis import analyze_file, DEFAULT_RESULTS
+
+
+def _table(path: str, mesh: str, label: str):
+    cells = analyze_file(path, mesh=mesh)
+    rows = []
+    for c in cells:
+        rows.append([
+            c["arch"], c["shape"], f"{c['compute_s']:.2e}",
+            f"{c['memory_s']:.2e}", f"{c['collective_s']:.2e}",
+            c["bottleneck"], f"{c['model_flops_ratio']:.2f}",
+            f"{c['roofline_frac']:.2f}"])
+    print_table(
+        f"Roofline terms per cell — {label} ({mesh}-pod x TPU v5e)",
+        ["arch", "shape", "compute_s", "memory_s", "collective_s",
+         "bound", "useful/HLO", "roofline"], rows)
+    return cells
+
+
+def run(path: str = DEFAULT_RESULTS, mesh: str = "single"):
+    import os
+    cells = _table(path, mesh, "baseline (paper-faithful sharding)")
+    opt_path = path.replace("dryrun.jsonl", "dryrun_opt.jsonl")
+    if opt_path != path and os.path.exists(opt_path):
+        _table(opt_path, mesh, "optimized (post-§Perf defaults)")
+    return cells
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Paper §5.1: 3-year TCO per QPS — PIM-AI vs DGX-H100.
+
+$15k per PIM-AI server ($60k for 4), $300k per DGX-H100, electricity at
+the world-average $0.153/kWh. Paper claim: 6.2x-6.94x in PIM's favor.
+"""
+from __future__ import annotations
+
+from benchmarks.common import print_table, r3
+from repro.core.scenarios import run_cloud
+
+
+def run(n_in=1000, n_out=100):
+    rows = []
+    out = {}
+    for model in ("llama2-70b", "mixtral-8x22b"):
+        for attn in ("gqa", "mha"):
+            r = run_cloud(model, attn, n_in, n_out)
+            th, tp = r["tco"]["dgx-h100"], r["tco"]["pim-ai-4srv"]
+            ratio = th["tco_per_qps"] / tp["tco_per_qps"]
+            out[(model, attn)] = ratio
+            rows.append([
+                model, attn.upper(),
+                f"${th['capex_usd']:,.0f}", f"${tp['capex_usd']:,.0f}",
+                r3(th["avg_power_w"]), r3(tp["avg_power_w"]),
+                f"${th['tco_usd']:,.0f}", f"${tp['tco_usd']:,.0f}",
+                f"${th['tco_per_qps']:,.0f}", f"${tp['tco_per_qps']:,.0f}",
+                r3(ratio)])
+    print_table(
+        "§5.1 — 3-year TCO per QPS (paper claim: 6.2-6.94x)",
+        ["model", "attn", "capex_H", "capex_P", "W_H", "W_P", "TCO_H",
+         "TCO_P", "TCO/QPS_H", "TCO/QPS_P", "ratio"], rows)
+    return out
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

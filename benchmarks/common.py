@@ -1,0 +1,20 @@
+"""Shared table formatting for the benchmark harness."""
+from __future__ import annotations
+
+
+def fmt_row(cells, widths):
+    return " | ".join(str(c).ljust(w) for c, w in zip(cells, widths))
+
+
+def print_table(title: str, headers, rows):
+    widths = [max(len(str(h)), *(len(str(r[i])) for r in rows)) if rows
+              else len(str(h)) for i, h in enumerate(headers)]
+    print(f"\n== {title} ==")
+    print(fmt_row(headers, widths))
+    print("-+-".join("-" * w for w in widths))
+    for r in rows:
+        print(fmt_row(r, widths))
+
+
+def r3(x):
+    return f"{x:.3g}"

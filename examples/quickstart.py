@@ -1,0 +1,49 @@
+"""Quickstart: the PIM-AI simulator in five minutes.
+
+Reproduces the paper's headline numbers from the public API:
+ 1. pick a model config (paper's Llama2-7B),
+ 2. pick hardware profiles (Table 1),
+ 3. simulate a 1000-in/100-out query per profile,
+ 4. print the mobile-scenario comparison (Fig 5) + the cloud TCO (§5.1).
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.configs import registry
+from repro.core import profiles as HW
+from repro.core.metrics import battery_queries, tco_3yr
+from repro.core.scenarios import (MOBILE_ORCHESTRATION_S, run_cloud)
+from repro.core.simulator import LLMSimulator, SimConfig
+
+
+def main():
+    # --- mobile: Llama2-7B W4A16 on a phone -----------------------------
+    cfg = registry.get_config("llama2-7b")
+    print(f"model: llama2-7b ({cfg.param_count()/1e9:.1f}B params)")
+    print(f"{'profile':22s} {'TTFT_s':>8s} {'tok/s':>8s} {'mJ/tok':>8s} "
+          f"{'queries/charge':>14s}")
+    for hw in (HW.PIM_AI_MOBILE, HW.A17_PRO, HW.SNAPDRAGON_8_GEN3,
+               HW.DIMENSITY_9300):
+        sim = LLMSimulator(cfg, hw, SimConfig(
+            weight_bits=4, act_bits=16,
+            orchestration_s=MOBILE_ORCHESTRATION_S))
+        r = sim.generate(batch=1, n_in=1000, n_out=100)
+        per_charge = battery_queries(15.0, r["energy_per_query_j"])
+        print(f"{hw.name:22s} {r['ttft_s']:8.2f} {r['tokens_per_s']:8.2f} "
+              f"{r['energy_per_token_j']*1e3:8.1f} {per_charge:14.0f}")
+
+    # --- cloud: Llama2-70B, 1 DGX-H100 vs 4 PIM-AI servers --------------
+    r = run_cloud("llama2-70b", "gqa")
+    ra = r["ratios"]
+    print(f"\ncloud llama2-70b GQA (4 PIM servers vs 1 DGX-H100):")
+    print(f"  tokens/s advantage  : {ra['tokens_per_s']:.2f}x "
+          f"(paper: 2.23-2.75x)")
+    print(f"  queries/s advantage : {ra['qps']:.2f}x")
+    print(f"  3-yr TCO per QPS    : {ra['tco_per_qps']:.2f}x cheaper "
+          f"(paper: 6.2-6.94x)")
+    tco = r["tco"]["pim-ai-4srv"]
+    print(f"  PIM 3-yr TCO: ${tco['tco_usd']:,.0f} at "
+          f"{tco['avg_power_w']:.0f} W avg")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""End-to-end training driver: train a ~100M-param dense LM for a few
+hundred steps on the deterministic synthetic stream, with async
+checkpointing and restart-on-failure supervision.
+
+This is the (b)-deliverable end-to-end driver. On the CPU container it
+uses a ~10M reduced model by default so a few hundred steps finish in
+minutes; pass --full-100m for the real 100M config (same code path —
+sized for a single TPU host).
+
+Run:  PYTHONPATH=src python examples/train_100m.py [--steps 300]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs.base import ArchConfig
+from repro.data import make_train_stream
+from repro.distributed.fault_tolerance import RestartPolicy
+from repro.launch import steps as ST
+from repro.models import model as MD
+from repro.optim import AdamW, OptConfig
+
+
+def make_cfg(full: bool) -> ArchConfig:
+    if full:  # ~100M params (GPT-2-small-ish, RoPE+SwiGLU)
+        return ArchConfig(
+            name="repro-100m", family="dense", n_layers=12, d_model=768,
+            n_heads=12, n_kv_heads=12, d_ff=2048, vocab_size=32000,
+            dtype="bfloat16", remat="none", microbatch=1)
+    return ArchConfig(  # CPU-sized stand-in, same family/code path
+        name="repro-10m", family="dense", n_layers=4, d_model=256,
+        n_heads=8, n_kv_heads=8, d_ff=688, vocab_size=4096,
+        dtype="float32", remat="none", microbatch=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--full-100m", action="store_true")
+    ap.add_argument("--inject-failure-at", type=int, default=-1,
+                    help="crash once at this step to demo restart")
+    args = ap.parse_args()
+
+    cfg = make_cfg(args.full_100m)
+    params = MD.init_params(jax.random.PRNGKey(0), cfg)
+    n = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"{cfg.name}: {n/1e6:.1f}M params, {args.steps} steps, "
+          f"batch {args.batch} x seq {args.seq}")
+
+    opt = AdamW(OptConfig(lr=1e-3, warmup_steps=30, total_steps=args.steps,
+                          weight_decay=0.01))
+    stream = make_train_stream(cfg, args.batch, args.seq, seed=0)
+    jit_step = jax.jit(ST.build_train_step(cfg, opt))
+    losses = []
+
+    def step_fn(state, batch):
+        p, o, m = jit_step(state["params"], state["opt"], batch)
+        losses.append(float(m["loss"]))
+        if len(losses) % 20 == 0:
+            print(f"  step {len(losses):4d}  loss {losses[-1]:.4f}")
+        return {"params": p, "opt": o}
+
+    def data_at(i):
+        return {k: jnp.asarray(v) for k, v in stream.batch_at(i).items()}
+
+    crashed = []
+
+    def inject(step):
+        if step == args.inject_failure_at and not crashed:
+            crashed.append(step)
+            print(f"  !! injected node failure at step {step}")
+            raise RuntimeError("injected failure")
+
+    pol = RestartPolicy(CheckpointManager("checkpoints/train_100m", keep=2),
+                        checkpoint_every=50)
+    t0 = time.time()
+    state, end = pol.run(
+        state={"params": params, "opt": opt.init(params)},
+        step_fn=step_fn, data_at=data_at, n_steps=args.steps,
+        inject_failure=inject if args.inject_failure_at >= 0 else None)
+    dt = time.time() - t0
+    print(f"\nfinished {end} steps in {dt:.0f}s "
+          f"({dt/max(1, end)*1e3:.0f} ms/step), restarts={pol.restarts}")
+    print(f"loss: {np.mean(losses[:10]):.3f} (first 10) -> "
+          f"{np.mean(losses[-10:]):.3f} (last 10)")
+    assert np.mean(losses[-10:]) < np.mean(losses[:10]), "did not learn"
+    print("loss decreased — training works end to end.")
+
+
+if __name__ == "__main__":
+    main()

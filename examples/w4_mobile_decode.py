@@ -1,0 +1,151 @@
+"""W4A16 mobile decode — the paper's §3.4 on-device mode, end to end.
+
+Quantizes every dense projection of a real model to packed int4 +
+per-group scales (`kernels/ref.quantize_int4`), then runs greedy decode
+where every weight GEMV goes through the Pallas `quant_gemv` kernel
+(interpret mode on CPU; the same call compiles for TPU). Validates the
+quantized decode against the full-precision model and reports the
+simulator's W4-vs-W16 numbers on the mobile PIM package.
+
+Run:  PYTHONPATH=src python examples/w4_mobile_decode.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.core import profiles as HW
+from repro.core.simulator import LLMSimulator, SimConfig
+from repro.kernels import ops, ref
+from repro.models import layers as L
+from repro.models import model as MD
+
+PROJ_NAMES = {"wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down"}
+
+
+def quantize_layer_stack(layers_params, group):
+    """Quantize each (L, K, N) projection stack to per-layer int4."""
+    def walk(tree, name=""):
+        if isinstance(tree, dict):
+            return {k: walk(v, k) for k, v in tree.items()}
+        if name in PROJ_NAMES and tree.ndim == 3 \
+                and tree.shape[1] % group == 0:
+            packs, scales = [], []
+            for i in range(tree.shape[0]):
+                p, s = ref.quantize_int4(
+                    jnp.asarray(tree[i], jnp.float32), group=group)
+                packs.append(p)
+                scales.append(s)
+            return {"__w4__": True, "packed": jnp.stack(packs),
+                    "scales": jnp.stack(scales)}
+        return tree
+    return walk(layers_params)
+
+
+def layer_slice(tree, i):
+    if isinstance(tree, dict):
+        if tree.get("__w4__"):
+            return {"__w4__": True, "packed": tree["packed"][i],
+                    "scales": tree["scales"][i]}
+        return {k: layer_slice(v, i) for k, v in tree.items()}
+    return tree[i]
+
+
+def linear(x, w, group):
+    """x (..., K) @ w — quant_gemv when packed, matmul otherwise."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    if isinstance(w, dict) and w.get("__w4__"):
+        y = ops.quant_gemv(x2.astype(jnp.bfloat16), w["packed"],
+                           w["scales"], group=group).astype(jnp.float32)
+    else:
+        y = x2 @ w.astype(jnp.float32)
+    return y.reshape(lead + (-1,))
+
+
+def w4_decode_step(qp, cfg, tokens, cache, group):
+    """Greedy decode step for the dense family via quant_gemv."""
+    from repro.models.attention import decode_attention
+    x = L.embed_tokens(qp["embed"], tokens).astype(jnp.float32)  # (B,1,d)
+    n = cache["len"]
+    b = x.shape[0]
+
+    for i in range(cfg.n_layers):
+        lp = layer_slice(qp["layers"], i)
+        h = L.apply_norm(lp["ln1"], cfg, x)
+        q = linear(h, lp["attn"]["wq"], group).reshape(
+            b, 1, cfg.n_heads, cfg.d_head)
+        k1 = linear(h, lp["attn"]["wk"], group).reshape(
+            b, 1, cfg.n_kv_heads, cfg.d_head)
+        v1 = linear(h, lp["attn"]["wv"], group).reshape(
+            b, 1, cfg.n_kv_heads, cfg.d_head)
+        pos = jnp.full((1,), n, jnp.int32)
+        q = L.apply_rope(q, pos, cfg.rope_theta)
+        k1 = L.apply_rope(k1, pos, cfg.rope_theta)
+        o = decode_attention(q.astype(jnp.float32),
+                             cache["k"][i].astype(jnp.float32),
+                             cache["v"][i].astype(jnp.float32), n,
+                             extra_k=k1.astype(jnp.float32),
+                             extra_v=v1.astype(jnp.float32))
+        x = x + linear(o.reshape(b, 1, -1), lp["attn"]["wo"], group)
+        h = L.apply_norm(lp["ln2"], cfg, x)
+        g = linear(h, lp["mlp"]["w_gate"], group)
+        u = linear(h, lp["mlp"]["w_up"], group)
+        x = x + linear(jax.nn.silu(g) * u, lp["mlp"]["w_down"], group)
+        cache["k"] = cache["k"].at[i, :, n].set(
+            k1[:, 0].astype(cache["k"].dtype))
+        cache["v"] = cache["v"].at[i, :, n].set(
+            v1[:, 0].astype(cache["v"].dtype))
+    cache["len"] = n + 1
+    x = L.apply_norm(qp["final_norm"], cfg, x)
+    head = qp["embed"]["table"] if cfg.tie_embeddings else qp["head"]
+    return L.logits_from_hidden(head, x)[:, 0], cache
+
+
+def run(n_steps=8, group=64, verbose=True):
+    cfg = registry.get_smoke_config("phi3-mini-3.8b").replace(
+        dtype="float32", d_model=128, n_heads=4, n_kv_heads=4, d_head=32,
+        d_ff=256)
+    params = MD.init_params(jax.random.PRNGKey(0), cfg)
+    qp = dict(params, layers=quantize_layer_stack(params["layers"], group))
+
+    rng = np.random.default_rng(0)
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab_size, size=(1, 12)),
+                         jnp.int32)
+    logits, cache_a = MD.prefill(params, cfg, {"tokens": prompt}, 32)
+    cache_b = jax.tree.map(jnp.copy, cache_a)
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    # teacher-forced comparison (same token stream both paths): the
+    # smoke model has random weights, so greedy trajectories are
+    # tie-dominated; per-step logit fidelity is the meaningful metric.
+    corr, mad = [], []
+    for _ in range(n_steps):
+        la, cache_a = MD.decode_step(params, cfg, tok, cache_a)
+        lb, cache_b = w4_decode_step(qp, cfg, tok, cache_b, group)
+        a = np.asarray(jax.nn.log_softmax(la), np.float64).ravel()
+        b = np.asarray(jax.nn.log_softmax(lb), np.float64).ravel()
+        mad.append(float(np.max(np.abs(a - b))))
+        corr.append(float(np.corrcoef(a, b)[0, 1]))
+        tok = jnp.argmax(la, -1)[:, None].astype(jnp.int32)
+    if verbose:
+        print(f"logit fidelity over {n_steps} teacher-forced steps: "
+              f"min corr {min(corr):.4f}, max|dlogprob| {max(mad):.3f}")
+    return corr, mad
+
+
+def main():
+    run()
+
+    full = registry.get_config("phi3-mini-3.8b")
+    print("\nsimulator: phi3-mini on pim-ai-mobile, 1000 in / 100 out")
+    for bits in (16, 4):
+        sim = LLMSimulator(full, HW.PIM_AI_MOBILE,
+                           SimConfig(weight_bits=bits,
+                                     orchestration_s=0.09))
+        r = sim.generate(1, 1000, 100)
+        print(f"  W{bits:2d}: {r['tokens_per_s']:6.2f} tok/s, "
+              f"{r['energy_per_token_j']*1e3:6.1f} mJ/token")
+
+
+if __name__ == "__main__":
+    main()

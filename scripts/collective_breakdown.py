@@ -1,0 +1,90 @@
+"""One-off: per-shape trip-weighted collective breakdown for one cell."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import re, sys
+from collections import defaultdict
+
+def breakdown(hlo):
+    from repro.roofline.hlo import (_split_computations, _shape_bytes,
+                                    COLLECTIVES)
+    # re-split but keep per-op shapes: walk lines again per computation
+    comps = {}
+    cur = None
+    for raw in hlo.splitlines():
+        s = raw.strip()
+        if not raw.startswith((" ", "\t")) and (s.startswith("%") or s.startswith("ENTRY")):
+            name = s.split("(", 1)[0].replace("ENTRY", "").strip().lstrip("%").strip()
+            cur = name; comps.setdefault(name, [])
+            continue
+        if cur is None or " = " not in s: continue
+        rhs = s.split(" = ", 1)[1]
+        m = re.match(r"^(\([^)]*\)|\S+)\s+([\w\.\-]+)\s*\(", rhs)
+        if not m: continue
+        shape, opname = m.group(1), m.group(2)
+        base = opname.split(".")[0]
+        for k in COLLECTIVES:
+            if base == k or base == k + "-start":
+                comps[cur].append((k, shape, _shape_bytes(shape)))
+    # trip counts via the real parser's computation graph
+    from repro.roofline import hlo as H
+    graph = H._split_computations(hlo)
+    entry = graph.get("__entry__")
+    agg = defaultdict(float); cnt = defaultdict(int)
+    def visit(name, mult, depth=0):
+        comp = graph.get(name)
+        if comp is None or depth > 64: return
+        for k, shape, b in comps.get(name, []):
+            agg[(k, shape)] += b * mult; cnt[(k, shape)] += int(mult)
+        for body, cond, trip in comp.whiles:
+            if trip is None:
+                trip = graph[cond].max_const if cond in graph else 1
+            visit(body, mult*max(1,trip), depth+1); visit(cond, mult*max(1,trip), depth+1)
+        for c in comp.calls: visit(c, mult, depth+1)
+    visit(entry.name, 1.0)
+    return sorted(agg.items(), key=lambda kv: -kv[1])[:15], cnt
+
+from repro.launch.dryrun import run_cell
+import json
+arch, shape = sys.argv[1], sys.argv[2]
+overrides = json.loads(sys.argv[3]) if len(sys.argv) > 3 else None
+# reuse run_cell up to compile: easier to lower here directly
+from repro.configs import registry
+from repro.configs.base import SHAPES
+from repro.distributed import hints, sharding as SH
+from repro.launch import steps as ST
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as MD
+from repro.optim import AdamW, OptConfig
+from functools import partial
+import jax
+
+cfg = registry.get_config(arch)
+if overrides: cfg = cfg.replace(**overrides)
+spec = SHAPES[shape]
+mesh = make_production_mesh()
+with hints.use_mesh(mesh):
+    params_shape = jax.eval_shape(partial(MD.init_params, cfg=cfg), jax.random.PRNGKey(0))
+    p_sh = SH.param_shardings(mesh, params_shape)
+    opt = AdamW(OptConfig(moment_dtype=cfg.optimizer_state_dtype))
+    opt_shape = jax.eval_shape(opt.init, params_shape)
+    o_sh = SH.opt_state_shardings(mesh, opt_shape)
+    if spec.kind == "train":
+        batch = MD.batch_spec(cfg, spec.global_batch, spec.seq_len, "train")
+        b_sh = SH.batch_shardings(mesh, batch)
+        step = ST.build_train_step(cfg, opt)
+        compiled = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                           donate_argnums=(0, 1)).lower(
+            params_shape, opt_shape, batch).compile()
+    else:  # decode
+        tokens = MD.batch_spec(cfg, spec.global_batch, 1, "decode")["tokens"]
+        t_sh = SH.batch_shardings(mesh, tokens)
+        cache_shape = MD.cache_spec(cfg, spec.global_batch, spec.seq_len)
+        c_sh = SH.cache_shardings(mesh, cache_shape, cfg)
+        step = ST.build_serve_step(cfg)
+        compiled = jax.jit(step, in_shardings=(p_sh, t_sh, c_sh),
+                           out_shardings=(t_sh, None, c_sh),
+                           donate_argnums=(2,)).lower(
+            params_shape, tokens, cache_shape).compile()
+top, cnt = breakdown(compiled.as_text())
+for (k, shape_s), b in top:
+    print(f"{b/1e9:9.1f}GB  n={cnt[(k,shape_s)]:6d}  {k:18s} {shape_s[:90]}")

@@ -1,0 +1,34 @@
+"""Inject/refresh the roofline markdown tables in EXPERIMENTS.md.
+
+Idempotent: everything between a marker and the next '## ' heading is
+replaced.
+"""
+import re
+import sys
+sys.path.insert(0, "src")
+from repro.roofline.analysis import analyze_file, to_markdown
+
+md = open("EXPERIMENTS.md").read()
+
+
+def inject(md, marker, title, table):
+    block = f"{marker}\n\n{title}\n\n{table}\n\n"
+    pat = re.compile(re.escape(marker) + r".*?(?=\n## )", re.S)
+    if pat.search(md):
+        return pat.sub(lambda m: block, md)
+    return md.replace(marker, block)
+
+
+base = to_markdown(analyze_file("results/dryrun.jsonl", mesh="single"))
+md = inject(md, "<!-- ROOFLINE_BASELINE -->",
+            "### Baseline (paper-faithful sharding)", base)
+try:
+    opt = to_markdown(analyze_file("results/dryrun_opt.jsonl", mesh="single"))
+    md = inject(md, "<!-- ROOFLINE_OPT -->",
+                "### Optimized (post-§Perf defaults) — full single-pod table",
+                opt)
+except FileNotFoundError:
+    pass
+
+open("EXPERIMENTS.md", "w").write(md)
+print("tables injected")

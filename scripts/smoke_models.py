@@ -1,0 +1,33 @@
+"""Dev smoke: forward + prefill + decode for every assigned arch (reduced)."""
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.models import model as MD
+
+archs = sys.argv[1:] or registry.list_archs()
+key = jax.random.PRNGKey(0)
+for name in archs:
+    cfg = registry.get_smoke_config(name)
+    try:
+        params = MD.init_params(key, cfg)
+        n_params = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+        batch = MD.make_dummy_batch(key, cfg, 2, 32, "train")
+        loss, _ = MD.loss_fn(params, cfg, batch)
+        assert jnp.isfinite(loss), f"{name}: loss not finite"
+        # prefill 16 tokens, decode 3
+        pre = MD.make_dummy_batch(key, cfg, 2, 16, "prefill")
+        logits, cache = MD.prefill(params, cfg, pre, capacity=24)
+        assert np.isfinite(np.asarray(logits)).all(), f"{name}: prefill NaN"
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        for _ in range(3):
+            logits, cache = MD.decode_step(params, cfg, tok, cache)
+            assert np.isfinite(np.asarray(logits)).all(), f"{name}: decode NaN"
+            tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        print(f"OK   {name:20s} loss={float(loss):.3f} params={n_params}")
+    except Exception as e:  # noqa: BLE001
+        print(f"FAIL {name:20s} {type(e).__name__}: {e}")
+        import traceback; traceback.print_exc()

@@ -1,0 +1,1 @@
+from repro.configs.base import ArchConfig, ShapeSpec, SHAPES, smoke_config  # noqa: F401

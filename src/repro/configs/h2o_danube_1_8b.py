@@ -1,0 +1,21 @@
+"""H2O-Danube-1.8B — llama/mistral mix with sliding-window attention.
+
+[arXiv:2401.16818; hf]. 24L d_model=2560 32H (GQA kv=8) d_ff=6912
+vocab=32000, SWA window 4096 -> runs long_500k with a bounded KV cache.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="h2o-danube-1.8b",
+    family="dense",
+    n_layers=24,
+    d_model=2560,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=6912,
+    vocab_size=32000,
+    activation="swiglu",
+    sliding_window=4096,
+    microbatch=2,
+    source="arXiv:2401.16818",
+)

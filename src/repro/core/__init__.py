@@ -1,0 +1,16 @@
+"""The paper's primary contribution: the PIM-AI architecture model and
+the analytical LLM-inference hardware simulator.
+
+- profiles:   Table-1 hardware profiles + PIM chip/DIMM/server composition
+- trace:      jaxpr op-stream tracer (the PyTorch-interception analogue)
+- simulator:  per-op time/energy roofline model, encode/decode phases
+- metrics:    TTFT / tokens-s / energy / QPS / EPQ / 3-yr TCO
+- scenarios:  the paper's cloud + mobile evaluation setups
+"""
+from repro.core.profiles import (  # noqa: F401
+    HardwareProfile, TABLE1, PIM_AI_CHIP, PIM_AI_SERVER, A17_PRO,
+    SNAPDRAGON_8_GEN3, DIMENSITY_9300, DGX_H100, pim_dimm, pim_engine,
+    pim_server)
+from repro.core.simulator import LLMSimulator, SimConfig  # noqa: F401
+from repro.core.metrics import QueryMetrics, tco_3yr  # noqa: F401
+from repro.core.scenarios import run_cloud, run_mobile  # noqa: F401

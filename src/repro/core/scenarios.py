@@ -1,0 +1,126 @@
+"""Target deployment scenarios (paper §3.3–3.4, §4).
+
+Cloud: Llama2-70B / Mixtral-8x22B in bf16 on (a) one DGX-H100 (8 GPUs,
+TP=8) and (b) four PIM-AI 2U servers = 96 PIM DIMMs = 12 independent
+8-DIMM inference engines, each running one model copy. Batch sizes per
+the paper's §4.1. Both GQA=8 and MHA variants.
+
+Mobile: Llama2-7B / Mistral-7B, W4A16 (4-bit weights, 16-bit KV +
+activations), batch 1, on the PIM-AI chip vs A17 Pro / Snapdragon 8
+Gen 3 / Dimensity 9300. Host orchestration "tens of milliseconds"
+(§3.3) — the calibrated free parameter documented in DESIGN.md §6.
+
+The standard experimental setup is 1000 input tokens, 100 output tokens
+(§3.4); §5.1 additionally evaluates 1000/1000.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.configs import registry
+from repro.configs.paper_models import mha_variant
+from repro.core import profiles as HW
+from repro.core.metrics import QueryMetrics, tco_3yr
+from repro.core.simulator import LLMSimulator, SimConfig
+
+# paper §4.1 batch sizes: (DGX-H100, PIM-AI per engine)
+CLOUD_BATCH = {
+    ("llama2-70b", "gqa"): (200, 80),
+    ("llama2-70b", "mha"): (46, 10),
+    ("mixtral-8x22b", "gqa"): (200, 80),
+    ("mixtral-8x22b", "mha"): (88, 20),
+}
+
+CLOUD_ORCHESTRATION_S = 0.5e-3   # "sub-millisecond" host
+MOBILE_ORCHESTRATION_S = 90e-3   # "tens of milliseconds" host service
+                                 # period (calibrated once, DESIGN.md §6)
+
+N_IN_DEFAULT, N_OUT_DEFAULT = 1000, 100
+
+
+def _metrics(result: dict) -> QueryMetrics:
+    return QueryMetrics(
+        ttft_s=result["ttft_s"],
+        tokens_per_s=result["tokens_per_s"],
+        energy_per_token_j=result["energy_per_token_j"],
+        qps=result["qps"],
+        energy_per_query_j=result["energy_per_query_j"],
+    )
+
+
+def run_cloud(model: str = "llama2-70b", attn: str = "gqa",
+              n_in: int = N_IN_DEFAULT, n_out: int = N_OUT_DEFAULT) -> dict:
+    """One DGX-H100 vs four PIM-AI servers (12 engines). Returns per-system
+    QueryMetrics + raw phase results."""
+    cfg = registry.get_config(model)
+    if attn == "mha":
+        cfg = mha_variant(cfg)
+    b_h100, b_pim = CLOUD_BATCH[(model, attn)]
+
+    h100 = LLMSimulator(
+        cfg, HW.DGX_H100,
+        SimConfig(orchestration_s=CLOUD_ORCHESTRATION_S, tp_degree=8))
+    r_h100 = h100.generate(b_h100, n_in, n_out)
+
+    engine = LLMSimulator(
+        cfg, HW.pim_engine(),
+        SimConfig(orchestration_s=CLOUD_ORCHESTRATION_S,
+                  tp_degree=HW.DIMMS_PER_ENGINE * HW.CHIPS_PER_DIMM))
+    r_eng = engine.generate(b_pim, n_in, n_out)
+    n_eng = HW.ENGINES_PER_8U  # 12 engines in 4 servers
+
+    m_h100 = _metrics(r_h100)
+    m_pim = _metrics(r_eng)
+    # engines are independent: throughput scales, latency doesn't
+    m_pim.tokens_per_s *= n_eng
+    m_pim.qps *= n_eng
+
+    tco_h100 = tco_3yr(HW.DGX_H100.cost_usd, m_h100.qps,
+                       m_h100.energy_per_query_j)
+    tco_pim = tco_3yr(HW.PIM_AI_SERVER.cost_usd * HW.SERVERS_PER_8U,
+                      m_pim.qps, m_pim.energy_per_query_j)
+    return {
+        "model": model, "attn": attn, "n_in": n_in, "n_out": n_out,
+        "batch": {"dgx-h100": b_h100, "pim-ai": b_pim},
+        "dgx-h100": m_h100, "pim-ai-4srv": m_pim,
+        "tco": {"dgx-h100": tco_h100, "pim-ai-4srv": tco_pim},
+        "ratios": {
+            "ttft": m_pim.ttft_s / m_h100.ttft_s,
+            "tokens_per_s": m_pim.tokens_per_s / m_h100.tokens_per_s,
+            "energy_per_token": (m_h100.energy_per_token_j
+                                 / m_pim.energy_per_token_j),
+            "qps": m_pim.qps / m_h100.qps,
+            "energy_per_query": (m_h100.energy_per_query_j
+                                 / m_pim.energy_per_query_j),
+            "tco_per_qps": (tco_h100["tco_per_qps"]
+                            / tco_pim["tco_per_qps"]),
+        },
+    }
+
+
+MOBILE_PROFILES = (HW.PIM_AI_MOBILE, HW.A17_PRO, HW.SNAPDRAGON_8_GEN3,
+                   HW.DIMENSITY_9300)
+
+
+def run_mobile(model: str = "llama2-7b", n_in: int = N_IN_DEFAULT,
+               n_out: int = N_OUT_DEFAULT) -> dict:
+    """Batch-1 W4A16 single-user inference across mobile profiles."""
+    cfg = registry.get_config(model)
+    out = {"model": model, "n_in": n_in, "n_out": n_out, "profiles": {}}
+    for hw in MOBILE_PROFILES:
+        sim = LLMSimulator(
+            cfg, hw, SimConfig(weight_bits=4, act_bits=16,
+                               orchestration_s=MOBILE_ORCHESTRATION_S))
+        out["profiles"][hw.name] = _metrics(sim.generate(1, n_in, n_out))
+    pim = out["profiles"][MOBILE_PROFILES[0].name]
+    out["ratios"] = {}
+    for hw in MOBILE_PROFILES[1:]:
+        m = out["profiles"][hw.name]
+        out["ratios"][hw.name] = {
+            "tokens_per_s": pim.tokens_per_s / m.tokens_per_s,
+            "energy_per_token": m.energy_per_token_j / pim.energy_per_token_j,
+            "qps": pim.qps / m.qps,
+            "energy_per_query": (m.energy_per_query_j
+                                 / pim.energy_per_query_j),
+        }
+    return out

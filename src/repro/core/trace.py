@@ -1,0 +1,290 @@
+"""Jaxpr op-stream tracer — the JAX-native analogue of the paper's
+PyTorch layer interception.
+
+The paper's simulator overrides PyTorch layers/functions and classifies
+each call (GEMM / GEMV / activation / normalization), charging time and
+energy against a hardware profile. Here we walk the **jaxpr** of the
+real JAX model instead: every ``dot_general`` becomes a GEMM/GEMV
+record, elementwise/reduction primitives become vector-ops records, and
+gather/scatter/dynamic-slice become data-movement records. Control flow
+(``scan`` / ``while`` / ``pjit`` / ``remat``) is recursed into with trip
+counts multiplied through — which also makes this tracer the source of
+truth for roofline FLOPs/bytes (XLA's ``cost_analysis`` counts loop
+bodies exactly once).
+
+``trace_linear`` traces a token-position-parameterized function at two
+cache lengths and fits per-op linear models ``cost(L) = a + b*L`` — the
+paper's "KV reads grow with every decode iteration" rule, recovered
+from real traced graphs instead of hand math.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from functools import partial
+
+import jax
+import numpy as np
+
+# primitive classification ---------------------------------------------------
+
+MATMUL_PRIMS = {"dot_general"}
+CONV_PRIMS = {"conv_general_dilated"}
+# elementwise / transcendental — one op per output element
+ELEMENTWISE_PRIMS = {
+    "add", "sub", "mul", "div", "max", "min", "pow", "exp", "log", "tanh",
+    "logistic", "rsqrt", "sqrt", "erf", "abs", "neg", "sign", "floor",
+    "ceil", "round", "cos", "sin", "integer_pow", "select_n", "clamp",
+    "and", "or", "not", "xor", "rem", "nextafter", "cbrt", "expm1",
+    "log1p", "square", "atan2", "exp2",
+}
+# comparison / bookkeeping — negligible compute, no memory charge
+CHEAP_PRIMS = {
+    "eq", "ne", "lt", "le", "gt", "ge", "convert_element_type",
+    "broadcast_in_dim", "reshape", "transpose", "rev", "iota", "squeeze",
+    "expand_dims", "bitcast_convert_type", "is_finite", "stop_gradient",
+    "copy", "shift_left", "shift_right_logical", "shift_right_arithmetic",
+    "reduce_precision", "real", "imag",
+}
+REDUCE_PRIMS = {"reduce_sum", "reduce_max", "reduce_min", "reduce_prod",
+                "reduce_and", "reduce_or", "argmax", "argmin",
+                "reduce_window_sum", "reduce_window_max", "cumsum",
+                "cummax", "cumlogsumexp", "cumprod"}
+DATA_PRIMS = {"gather", "scatter", "scatter-add", "scatter_add",
+              "dynamic_slice", "dynamic_update_slice", "concatenate",
+              "pad", "slice", "sort", "top_k", "take", "rng_bit_generator",
+              "select_and_scatter_add"}
+CALL_PRIMS = {"pjit", "closed_call", "custom_jvp_call", "custom_vjp_call",
+              "custom_vjp_call_jaxpr", "core_call", "remat_call", "remat",
+              "checkpoint", "named_call", "custom_transpose_call",
+              "shard_map"}
+
+
+@dataclass
+class OpRecord:
+    """One traced operation (already multiplied by loop trip counts)."""
+    kind: str          # gemm|gemv|conv|elementwise|reduce|data|other
+    prim: str
+    flops: float = 0.0       # multiply-accumulate*2 for matmuls
+    in_bytes: float = 0.0    # operand bytes
+    out_bytes: float = 0.0
+    weight_bytes: float = 0.0  # bytes of the rank-2 (weight) operand
+    rows: int = 0            # GEMM row count (tokens) — GEMV when <= 1
+    count: float = 1.0       # trip-count multiplier applied
+    batch_dims: int = 0      # dot_general batch-dim count (attention
+                             # scores GEMMs have >= 2: B and H)
+
+    def scaled(self, m: float) -> "OpRecord":
+        return replace(self, flops=self.flops * m,
+                       in_bytes=self.in_bytes * m,
+                       out_bytes=self.out_bytes * m,
+                       weight_bytes=self.weight_bytes * m,
+                       count=self.count * m)
+
+
+def _aval_bytes(aval) -> float:
+    try:
+        return float(np.prod(aval.shape, dtype=np.float64)
+                     * np.dtype(aval.dtype).itemsize)
+    except Exception:  # noqa: BLE001 — abstract tokens etc.
+        return 0.0
+
+
+def _dot_record(eqn) -> OpRecord:
+    lhs, rhs = eqn.invars[0].aval, eqn.invars[1].aval
+    dims = eqn.params["dimension_numbers"]
+    (lc, rc), (lb, rb) = dims
+    batch = int(np.prod([lhs.shape[i] for i in lb], dtype=np.int64)) or 1
+    contract = int(np.prod([lhs.shape[i] for i in lc], dtype=np.int64)) or 1
+    m = int(np.prod([lhs.shape[i] for i in range(len(lhs.shape))
+                     if i not in lc and i not in lb], dtype=np.int64)) or 1
+    n = int(np.prod([rhs.shape[i] for i in range(len(rhs.shape))
+                     if i not in rc and i not in rb], dtype=np.int64)) or 1
+    flops = 2.0 * batch * m * n * contract
+    in_b = _aval_bytes(lhs) + _aval_bytes(rhs)
+    out_b = sum(_aval_bytes(v.aval) for v in eqn.outvars)
+    # the rank-2 operand with no batch dims is (heuristically) the weight
+    weight_b = 0.0
+    for a, bdims in ((lhs, lb), (rhs, rb)):
+        if len(a.shape) == 2 and not bdims:
+            weight_b = max(weight_b, _aval_bytes(a))
+    # stacked weights (MoE experts (E,d,f), sLSTM recurrent (H,p,q)):
+    # rank-3 RHS under a single batch dim — einsum convention puts the
+    # parameter second throughout the model zoo.
+    if weight_b == 0.0 and len(lb) == 1 and len(rhs.shape) == 3:
+        weight_b = _aval_bytes(rhs)
+    rows = m if len(lhs.shape) - len(lb) - len(lc) > 0 else 1
+    kind = "gemv" if m * batch <= max(batch, 1) or m == 1 else "gemm"
+    # batched GEMV (decode): m==1 per batch element
+    if m == 1:
+        kind = "gemv"
+    return OpRecord(kind, "dot_general", flops, in_b, out_b, weight_b,
+                    rows=m * batch, batch_dims=len(lb))
+
+
+def _conv_record(eqn) -> OpRecord:
+    lhs, rhs = eqn.invars[0].aval, eqn.invars[1].aval
+    out = eqn.outvars[0].aval
+    k_elems = int(np.prod(rhs.shape, dtype=np.int64))
+    out_elems = int(np.prod(out.shape, dtype=np.int64))
+    # flops = 2 * out_spatial*batch * (k elements per output channel)
+    cout = rhs.shape[eqn.params["dimension_numbers"].rhs_spec[0]] \
+        if hasattr(eqn.params.get("dimension_numbers"), "rhs_spec") \
+        else rhs.shape[-1]
+    flops = 2.0 * out_elems * max(1, k_elems // max(1, cout))
+    return OpRecord("conv", "conv", flops,
+                    _aval_bytes(lhs) + _aval_bytes(rhs),
+                    _aval_bytes(out), _aval_bytes(rhs))
+
+
+def _walk(jaxpr, mult: float, out: list):
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if name in MATMUL_PRIMS:
+            out.append(_dot_record(eqn).scaled(mult))
+        elif name in CONV_PRIMS:
+            out.append(_conv_record(eqn).scaled(mult))
+        elif name == "scan":
+            length = eqn.params["length"]
+            n_unroll = max(1, eqn.params.get("unroll", 1))
+            inner = eqn.params["jaxpr"]
+            _walk(inner.jaxpr, mult * length / 1, out)
+        elif name == "while":
+            # trip count unknown statically; charge one iteration
+            _walk(eqn.params["body_jaxpr"].jaxpr, mult, out)
+        elif name == "cond":
+            branches = eqn.params["branches"]
+            if branches:
+                _walk(branches[-1].jaxpr, mult, out)  # worst-case branch
+        elif name in CALL_PRIMS or "jaxpr" in eqn.params or \
+                "call_jaxpr" in eqn.params:
+            sub = eqn.params.get("jaxpr", eqn.params.get("call_jaxpr"))
+            if sub is None:
+                continue
+            sub = sub.jaxpr if hasattr(sub, "jaxpr") else sub
+            _walk(sub, mult, out)
+        elif name in ELEMENTWISE_PRIMS:
+            elems = sum(int(np.prod(v.aval.shape, dtype=np.int64))
+                        for v in eqn.outvars)
+            out.append(OpRecord(
+                "elementwise", name, float(elems),
+                sum(_aval_bytes(v.aval) for v in eqn.invars),
+                sum(_aval_bytes(v.aval) for v in eqn.outvars)).scaled(mult))
+        elif name in REDUCE_PRIMS or name.startswith("reduce"):
+            elems = sum(int(np.prod(v.aval.shape, dtype=np.int64))
+                        for v in eqn.invars)
+            out.append(OpRecord(
+                "reduce", name, float(elems),
+                sum(_aval_bytes(v.aval) for v in eqn.invars),
+                sum(_aval_bytes(v.aval) for v in eqn.outvars)).scaled(mult))
+        elif name in DATA_PRIMS:
+            in_sizes = [_aval_bytes(v.aval) for v in eqn.invars]
+            out_b = sum(_aval_bytes(v.aval) for v in eqn.outvars)
+            if name in ("gather", "take", "dynamic_slice", "top_k", "sort"):
+                # reads only the gathered rows, not the whole table
+                in_b = sum(in_sizes) - (max(in_sizes) if in_sizes else 0)
+                out_b = out_b
+            elif name in ("dynamic_update_slice", "scatter", "scatter_add",
+                          "scatter-add", "select_and_scatter_add"):
+                # writes only the update slice, not the whole base buffer
+                in_b = sum(in_sizes) - (max(in_sizes) if in_sizes else 0)
+                out_b = in_b
+            else:
+                in_b = sum(in_sizes)
+            out.append(OpRecord(
+                "data", name, 0.0, in_b, out_b).scaled(mult))
+        elif name in CHEAP_PRIMS:
+            continue
+        else:
+            # unknown primitive: record bytes, no flops
+            out.append(OpRecord(
+                "other", name, 0.0,
+                sum(_aval_bytes(v.aval) for v in eqn.invars),
+                sum(_aval_bytes(v.aval) for v in eqn.outvars)).scaled(mult))
+
+
+def trace_ops(fn, *specs, **kw) -> list:
+    """Trace ``fn(*specs)`` (ShapeDtypeStructs ok) into OpRecords."""
+    jaxpr = jax.make_jaxpr(fn)(*specs, **kw)
+    out: list = []
+    _walk(jaxpr.jaxpr, 1.0, out)
+    return out
+
+
+@dataclass
+class Totals:
+    flops: float = 0.0
+    matmul_flops: float = 0.0
+    vector_ops: float = 0.0
+    bytes: float = 0.0
+    weight_bytes: float = 0.0
+    gemm_flops: float = 0.0
+    gemv_flops: float = 0.0
+
+
+def totals(ops) -> Totals:
+    t = Totals()
+    for o in ops:
+        t.flops += o.flops
+        t.bytes += o.in_bytes + o.out_bytes
+        t.weight_bytes += o.weight_bytes
+        if o.kind in ("gemm", "gemv", "conv"):
+            t.matmul_flops += o.flops
+            if o.kind == "gemv":
+                t.gemv_flops += o.flops
+            else:
+                t.gemm_flops += o.flops
+        else:
+            t.vector_ops += o.flops
+    return t
+
+
+# ---------------------------------------------------------------------------
+# two-point linear tracing (KV growth)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class LinearOp:
+    """cost(L) = const + slope * L, per field."""
+    kind: str
+    prim: str
+    flops: tuple = (0.0, 0.0)
+    in_bytes: tuple = (0.0, 0.0)
+    out_bytes: tuple = (0.0, 0.0)
+    weight_bytes: tuple = (0.0, 0.0)
+    batch_dims: int = 0
+
+    def at(self, L: float) -> OpRecord:
+        ev = lambda c: c[0] + c[1] * L  # noqa: E731
+        return OpRecord(self.kind, self.prim, ev(self.flops),
+                        ev(self.in_bytes), ev(self.out_bytes),
+                        ev(self.weight_bytes), batch_dims=self.batch_dims)
+
+
+def trace_linear(fn_of_len, L1: int, L2: int) -> list:
+    """``fn_of_len(L)`` must return (fn, specs) for cache length L with an
+    identical code path; ops are matched positionally and fit linearly."""
+    f1, s1 = fn_of_len(L1)
+    f2, s2 = fn_of_len(L2)
+    ops1 = trace_ops(f1, *s1)
+    ops2 = trace_ops(f2, *s2)
+    if len(ops1) != len(ops2):
+        raise ValueError(
+            f"op streams differ ({len(ops1)} vs {len(ops2)}); cache length "
+            "must not change the traced code path")
+    out = []
+    dL = float(L2 - L1)
+    for a, b in zip(ops1, ops2):
+        if a.prim != b.prim:
+            raise ValueError(f"op mismatch: {a.prim} vs {b.prim}")
+
+        def fit(x, y):
+            slope = (y - x) / dL
+            return (x - slope * L1, slope)
+
+        out.append(LinearOp(a.kind, a.prim,
+                            fit(a.flops, b.flops),
+                            fit(a.in_bytes, b.in_bytes),
+                            fit(a.out_bytes, b.out_bytes),
+                            fit(a.weight_bytes, b.weight_bytes),
+                            batch_dims=a.batch_dims))
+    return out

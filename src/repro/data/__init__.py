@@ -1,0 +1,6 @@
+from repro.data.pipeline import (  # noqa: F401
+    DataConfig,
+    SyntheticLMStream,
+    host_shard_slice,
+    make_train_stream,
+)

@@ -1,0 +1,117 @@
+"""Fault tolerance: restart policy, straggler mitigation, elastic
+re-meshing.
+
+The posture for thousands of nodes is fail-stop + checkpoint/restart
+(the scheme every TPU-scale framework uses — JAX's SPMD model has no
+per-step participant set, so a lost host means restart from the last
+checkpoint, possibly on a different device count):
+
+- :class:`RestartPolicy` — supervises a step function; on failure it
+  restores the latest valid checkpoint (``CheckpointManager`` skips
+  corrupt files), optionally on a *new* mesh (elastic), and replays.
+  Bounded retries; deterministic data (``data/pipeline.py``) makes the
+  replayed steps bit-identical on the same mesh.
+- :class:`StragglerMonitor` — per-step deadline from a running
+  latency EMA; steps exceeding ``k * ema`` are recorded (the host-level
+  mitigation at scale is preempt-and-reschedule; inside one jitted SPMD
+  step there is no per-device abort, so detection + re-scheduling is
+  the correct layer).
+- :func:`remesh` — rebuild shardings for a new device count and
+  re-place a host state tree: the elastic-scaling primitive. Divisible
+  dims re-shard; the sharding rules' divisibility fallbacks make any
+  power-of-two device count work for every assigned arch.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.distributed import sharding as SH
+
+
+@dataclass
+class StragglerMonitor:
+    """EMA-deadline straggler detector (host level)."""
+    factor: float = 3.0
+    alpha: float = 0.2
+    min_samples: int = 3
+    ema_s: float = 0.0
+    n: int = 0
+    events: list = field(default_factory=list)
+
+    def observe(self, step: int, seconds: float) -> bool:
+        """Record one step latency; True if it breached the deadline."""
+        straggler = (self.n >= self.min_samples
+                     and seconds > self.factor * self.ema_s)
+        if straggler:
+            self.events.append({"step": step, "seconds": seconds,
+                                "deadline": self.factor * self.ema_s})
+        else:  # stragglers don't poison the EMA
+            self.ema_s = (seconds if self.n == 0
+                          else (1 - self.alpha) * self.ema_s
+                          + self.alpha * seconds)
+            self.n += 1
+        return straggler
+
+    @property
+    def deadline_s(self) -> float:
+        return self.factor * self.ema_s if self.n >= self.min_samples \
+            else float("inf")
+
+
+def remesh(state, new_mesh, shardings_fn=SH.param_shardings):
+    """Re-place ``state`` for a new mesh (elastic up/down-scaling)."""
+    host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state)
+    sh = shardings_fn(new_mesh, jax.eval_shape(lambda: host))
+    return jax.tree.map(lambda x, s: jax.device_put(x, s), host, sh)
+
+
+@dataclass
+class RestartPolicy:
+    """Supervised training loop: checkpoint every k steps, restore +
+    replay on failure, optionally on a new device count."""
+    manager: CheckpointManager
+    checkpoint_every: int = 50
+    max_restarts: int = 3
+    restarts: int = 0
+    log: list = field(default_factory=list)
+
+    def run(self, *, state, step_fn, data_at, n_steps: int,
+            start_step: int = 0, inject_failure=None):
+        """Drive ``state = step_fn(state, batch)`` for ``n_steps``.
+
+        ``data_at(step)`` must be deterministic (seekable stream).
+        ``inject_failure(step)`` raising is the test hook for node loss.
+        Returns (final_state, completed_step).
+        """
+        step = start_step
+        monitor = StragglerMonitor()
+        while step < n_steps:
+            try:
+                if inject_failure is not None:
+                    inject_failure(step)
+                t0 = time.time()
+                state = step_fn(state, data_at(step))
+                monitor.observe(step, time.time() - t0)
+                step += 1
+                if step % self.checkpoint_every == 0 or step == n_steps:
+                    self.manager.save(step, state, blocking=True,
+                                      extra={"step": step})
+            except Exception as e:  # noqa: BLE001 — fail-stop restart
+                self.restarts += 1
+                self.log.append({"step": step, "error": repr(e),
+                                 "restart": self.restarts})
+                if self.restarts > self.max_restarts:
+                    raise RuntimeError(
+                        f"exceeded {self.max_restarts} restarts") from e
+                got_step, got = self.manager.restore_latest(state)
+                if got is not None:
+                    state, step = got, got_step
+                else:  # no checkpoint yet: restart from scratch
+                    step = start_step
+        self.straggler_events = monitor.events
+        return state, step

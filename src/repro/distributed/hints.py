@@ -1,0 +1,123 @@
+"""Activation-sharding hints.
+
+GSPMD propagates shardings from weights as happily as from inputs; with
+FSDP-sharded weight matrices (d_model over the data axis) it can decide
+to keep the *contraction* dim sharded and all-gather the batch instead —
+replicating multi-GB logits/activation buffers per device. These hints
+pin the canonical data-parallel layout at the few places that anchor
+propagation (embedding output, per-layer hidden state, logits), which
+forces the FSDP all-gather onto the *weights* where it belongs.
+
+The mesh is supplied via :func:`use_mesh` (a context manager the
+launcher/dry-run wraps around ``jit(...).lower(...)``); without it every
+hint is a no-op, so model code stays mesh-agnostic and plain CPU
+tests/examples are untouched.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_MESH = contextvars.ContextVar("repro_hint_mesh", default=None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    tok = _MESH.set(mesh)
+    try:
+        yield mesh
+    finally:
+        _MESH.reset(tok)
+
+
+def current_mesh():
+    return _MESH.get()
+
+
+def _fsdp(mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names) or None
+
+
+def _div(n, mesh, axes):
+    if axes is None:
+        return False
+    if isinstance(axes, str):
+        axes = (axes,)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return n % size == 0
+
+
+def _batch_axes(mesh, b):
+    fsdp = _fsdp(mesh)
+    if _div(b, mesh, fsdp):
+        return fsdp
+    if _div(b, mesh, "data"):
+        return "data"
+    return None
+
+
+def hidden(x, mode: str = "none"):
+    """(B, S, d) hidden state: batch over the FSDP axes.
+
+    ``mode`` adds a second sharded dim for the largest models, bounding
+    the remat/scan-saved residuals:
+    - ``dmodel``: d_model over the ``model`` axis (Megatron-SP style —
+      XLA inserts all-gather before each layer's first matmul and
+      reduce-scatter after the last).
+    - ``seq``: sequence over the ``model`` axis (attention all-gathers).
+    """
+    mesh = _MESH.get()
+    if mesh is None:
+        return x
+    b_ax = _batch_axes(mesh, x.shape[0])
+    model = "model" if "model" in mesh.axis_names else None
+    s_ax = d_ax = None
+    if x.ndim >= 3 and model:
+        if mode == "dmodel" and _div(x.shape[-1], mesh, model):
+            d_ax = model
+        elif mode == "seq" and _div(x.shape[1], mesh, model):
+            s_ax = model
+    if x.ndim >= 3:
+        spec = P(b_ax, s_ax, *(None,) * (x.ndim - 3), d_ax)
+    else:
+        spec = P(b_ax, *(None,) * (x.ndim - 1))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def logits(x):
+    """(..., V) logits: batch over FSDP, vocab over model."""
+    mesh = _MESH.get()
+    if mesh is None:
+        return x
+    model = "model" if "model" in mesh.axis_names else None
+    if model and not _div(x.shape[-1], mesh, model):
+        model = None
+    spec = P(_batch_axes(mesh, x.shape[0]), *(None,) * (x.ndim - 2), model)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def moe_buf(x, enable: bool = True):
+    """(E, cap, d|f) expert dispatch/combine buffer: E over ``model``
+    (expert parallelism), capacity over the FSDP axes — keeps expert
+    einsums shard-local so the combine lowers to a reshard (a2a /
+    permute) instead of an all-reduce-replicate of the whole buffer
+    (§Perf iteration A3)."""
+    mesh = _MESH.get()
+    if mesh is None or not enable or x.ndim < 3:
+        return x
+    model = "model" if "model" in mesh.axis_names else None
+    e_ax = model if model and _div(x.shape[0], mesh, model) else None
+    fsdp = _fsdp(mesh)
+    if _div(x.shape[1], mesh, fsdp):
+        c_ax = fsdp
+    elif _div(x.shape[1], mesh, "data"):
+        c_ax = "data"
+    else:
+        c_ax = None
+    spec = P(e_ax, c_ax, *(None,) * (x.ndim - 2))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,267 @@
+"""Sharding rules: FSDP x TP/EP over the ``(pod, data, model)`` mesh.
+
+The rules operate on the *trailing* dims of each leaf — leading stack
+dims (layer scan dims, expert-group dims from the xlstm/zamba nesting)
+are replicated. Every rule is divisibility-aware: a dim is sharded over
+an axis only when evenly divisible, otherwise the rule falls back
+(secondary dim, then replicate). This is what makes every
+(arch x shape x mesh) cell compile without bespoke per-arch tables.
+
+Conventions (training, weight leaves):
+- column-parallel (in -> out): shard OUT over ``model``, IN over the
+  FSDP axes (``pod``+``data``) — wq/wk/wv/w_up/w_gate/in_proj/...
+- row-parallel (in -> out): shard IN over ``model``, OUT over FSDP —
+  wo/w_down/out_proj/...
+- experts (E, d, f): E over ``model`` (expert parallelism), d over FSDP.
+- embed/head (V, d): V over ``model`` (vocab-parallel logits), d over
+  FSDP.
+- everything 1-D / tiny: replicated.
+
+Inference (serve) uses the same weight rules; KV caches shard batch over
+the FSDP axes and heads over ``model``, falling back to
+sequence-sharding (the distributed online-softmax path) when batch or
+heads don't divide — that fallback is what makes ``long_500k`` (B=1)
+lower cleanly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# mesh axis names
+POD, DATA, MODEL = "pod", "data", "model"
+
+# --- §Perf variant flags (hillclimb; see EXPERIMENTS.md §Perf) -------------
+# MOE_EXPERT_SHARD:
+#   "din": baseline — expert (E, d, f) shards d_model over FSDP. The
+#          contraction dim is sharded, so every expert einsum either
+#          all-gathers the expert stack over `data` or all-reduces
+#          partial activations — measured collective-dominant on dbrx.
+#   "dff": shard the FFN dim over FSDP instead (Megatron pattern per
+#          expert): contraction dims whole; only w_down contributes one
+#          activation reduce per layer. Same per-device weight memory.
+#          Default after §Perf A1: 2.5x lower collective volume and
+#          2.6x lower activation memory on dbrx-132b train_4k.
+MOE_EXPERT_SHARD = "dff"
+
+
+def fsdp_axes(mesh: Mesh):
+    """Axes used for batch/FSDP sharding: ('pod','data') when multi-pod."""
+    return tuple(a for a in (POD, DATA) if a in mesh.axis_names)
+
+
+def axis_size(mesh: Mesh, axes) -> int:
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _div(dim: int, mesh: Mesh, axes) -> bool:
+    if not axes:  # serve-mode: no FSDP axes -> never shard on them
+        return False
+    return dim % axis_size(mesh, axes) == 0
+
+
+# ---------------------------------------------------------------------------
+# parameter rules
+# ---------------------------------------------------------------------------
+
+# trailing-dims patterns by leaf name: "col" (in,out), "row" (in,out
+# reversed roles), "embed" (V,d), "vec" 1-D
+_COL = {"wq", "wk", "wv", "w_gate", "w_up", "w_in", "w_ff_up", "in_proj",
+        "w_i", "w_f"}
+_ROW = {"wo", "w_down", "w_ff_down", "out_proj"}
+_EMBED = {"table", "head"}
+
+
+def _param_spec(path_names, leaf, mesh, fsdp) -> P:
+    shape = leaf.shape
+    name = path_names[-1] if path_names else ""
+    in_moe = "moe" in path_names
+    nd = len(shape)
+
+    def lead(n_trailing):
+        return (None,) * (nd - n_trailing)
+
+    if nd <= 1:
+        return P()
+
+    if in_moe and name in ("w_gate", "w_up", "w_down") and nd >= 3:
+        e, a, b = shape[-3], shape[-2], shape[-1]
+        e_ax = MODEL if _div(e, mesh, MODEL) else None
+        if MOE_EXPERT_SHARD == "dff":
+            # FFN dim over FSDP (contraction dims whole): w_gate/w_up
+            # (E, d, f@fsdp); w_down (E, f@fsdp, d).
+            if name == "w_down":
+                f_ax = fsdp if _div(a, mesh, fsdp) else None
+                return P(*lead(3), e_ax, f_ax, None)
+            f_ax = fsdp if _div(b, mesh, fsdp) else None
+            return P(*lead(3), e_ax, None, f_ax)
+        # baseline: shard the expert weight matrices' d_model dim over FSDP
+        d_ax = fsdp if _div((a if name != "w_down" else b), mesh, fsdp) else None
+        if name == "w_down":
+            return P(*lead(3), e_ax, None, d_ax)
+        return P(*lead(3), e_ax, d_ax, None)
+
+    if name in _EMBED or (name == "table" or path_names[-2:] == ["embed", "table"]):
+        v, d = shape[-2], shape[-1]
+        v_ax = MODEL if _div(v, mesh, MODEL) else None
+        d_ax = fsdp if _div(d, mesh, fsdp) else None
+        return P(*lead(2), v_ax, d_ax)
+
+    if name in _COL:
+        i, o = shape[-2], shape[-1]
+        o_ax = MODEL if _div(o, mesh, MODEL) else None
+        i_ax = fsdp if _div(i, mesh, fsdp) else None
+        return P(*lead(2), i_ax, o_ax)
+
+    if name in _ROW:
+        i, o = shape[-2], shape[-1]
+        i_ax = MODEL if _div(i, mesh, MODEL) else None
+        o_ax = fsdp if _div(o, mesh, fsdp) else None
+        return P(*lead(2), i_ax, o_ax)
+
+    if name == "router":
+        d, e = shape[-2], shape[-1]
+        return P(*lead(2), fsdp if _div(d, mesh, fsdp) else None, None)
+
+    if name == "conv_w":
+        k, c = shape[-2], shape[-1]
+        return P(*lead(2), None, MODEL if _div(c, mesh, MODEL) else None)
+
+    if name == "w_rec":  # (H, ph, 4ph)
+        return P(*lead(3), None, None, None)
+
+    # generic 2D fallback: FSDP on the first trailing dim if divisible
+    d0 = shape[-2]
+    return P(*lead(2), fsdp if _div(d0, mesh, fsdp) else None, None)
+
+
+def param_shardings(mesh: Mesh, params_shape, *, serve: bool = False,
+                    serve_budget_bytes: float = 8e9):
+    """NamedSharding tree for a params (or ShapeDtypeStruct) tree.
+
+    ``serve=True`` (§Perf D2): inference holds no optimizer state, so
+    when the model fits ``serve_budget_bytes`` per device sharded over
+    the ``model`` axis alone, weights are replicated across the FSDP
+    axes — every decode step then reads weights from local HBM with
+    **zero** per-step weight gathers, and each ``data`` replica is an
+    independent serving engine (the paper's 12-engine layout). Models
+    over budget (nemotron-340b) keep the training FSDP rules.
+    """
+    fsdp = fsdp_axes(mesh)
+    if serve:
+        total = sum(
+            float(np.prod(l.shape)) * jnp.dtype(l.dtype).itemsize
+            for l in jax.tree.leaves(params_shape))
+        if total / axis_size(mesh, MODEL) <= serve_budget_bytes:
+            fsdp = ()  # model-axis sharding only; replicate over data
+
+    def one(path, leaf):
+        names = [getattr(k, "key", getattr(k, "idx", None)) for k in path]
+        names = [str(n) for n in names if n is not None]
+        return NamedSharding(mesh, _param_spec(names, leaf, mesh, fsdp))
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def opt_state_shardings(mesh: Mesh, opt_state_shape, params_shape=None):
+    """Optimizer moments follow the param rules; scalars replicate."""
+    fsdp = fsdp_axes(mesh)
+
+    def one(path, leaf):
+        names = [str(getattr(k, "key", "")) for k in path]
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        # strip the leading "mu"/"nu" so rules see the param path
+        return NamedSharding(mesh, _param_spec(names, leaf, mesh, fsdp))
+
+    return jax.tree_util.tree_map_with_path(one, opt_state_shape)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache rules
+# ---------------------------------------------------------------------------
+
+def batch_shardings(mesh: Mesh, batch_shape):
+    """Token/label/frame leaves: shard batch dim over FSDP axes."""
+    fsdp = fsdp_axes(mesh)
+
+    def one(leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        b = leaf.shape[0]
+        b_ax = fsdp if _div(b, mesh, fsdp) else (
+            DATA if _div(b, mesh, DATA) else None)
+        return NamedSharding(mesh, P(b_ax, *(None,) * (leaf.ndim - 1)))
+
+    return jax.tree.map(one, batch_shape)
+
+
+def cache_shardings(mesh: Mesh, cache_shape, cfg):
+    """KV caches: (.., B, C, H, Dh) — batch over FSDP, heads over model;
+    sequence-sharded fallback when batch doesn't divide (long-context
+    decode). States: batch over FSDP when divisible."""
+    fsdp = fsdp_axes(mesh)
+
+    def kv_spec(shape):
+        nd = len(shape)
+        b, c, h = shape[-4], shape[-3], shape[-2]
+        lead = (None,) * (nd - 4)
+        # heads over model when divisible; else sequence-shard the cache
+        # over model (distributed online-softmax decode) so the KV never
+        # replicates across the model axis.
+        if _div(h, mesh, MODEL):
+            h_ax, c_model = MODEL, None
+        else:
+            h_ax, c_model = None, MODEL if _div(c, mesh, MODEL) else None
+        if _div(b, mesh, fsdp):
+            return P(*lead, fsdp, c_model, h_ax, None)
+        if _div(b, mesh, DATA):
+            return P(*lead, DATA, c_model, h_ax, None)
+        # B=1 long-context decode: spread the sequence over every axis
+        all_axes = tuple(mesh.axis_names)
+        if _div(c, mesh, all_axes):
+            return P(*lead, None, all_axes, None, None)
+        c_ax = c_model if c_model else (fsdp if _div(c, mesh, fsdp) else None)
+        return P(*lead, None, c_ax, h_ax, None)
+
+    def one(path, leaf):
+        name = str(getattr(path[-1], "key", ""))
+        shape = leaf.shape
+        if name == "len" or leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        if name in ("k", "v", "cross_k", "cross_v"):
+            return NamedSharding(mesh, kv_spec(shape))
+        if name in ("ssm", "mlstm"):  # (..., B, H, P, N)
+            nd = len(shape)
+            b, h = shape[-4], shape[-3]
+            lead = (None,) * (nd - 4)
+            b_ax = fsdp if _div(b, mesh, fsdp) else None
+            h_ax = MODEL if _div(h, mesh, MODEL) else None
+            return NamedSharding(mesh, P(*lead, b_ax, h_ax, None, None))
+        if name in ("conv",):  # (..., B, k-1, C)
+            nd = len(shape)
+            b, c = shape[-3], shape[-1]
+            lead = (None,) * (nd - 3)
+            b_ax = fsdp if _div(b, mesh, fsdp) else None
+            c_ax = MODEL if _div(c, mesh, MODEL) else None
+            return NamedSharding(mesh, P(*lead, b_ax, None, c_ax))
+        if name.startswith("slstm"):  # (..., B, H, ph)
+            nd = len(shape)
+            b = shape[-3]
+            lead = (None,) * (nd - 3)
+            b_ax = fsdp if _div(b, mesh, fsdp) else None
+            return NamedSharding(mesh, P(*lead, b_ax, None, None))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+def replicated(mesh: Mesh, tree):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)

@@ -1,0 +1,108 @@
+"""Pallas TPU split-KV flash decode — the paper's memory-bound GEMV
+hot-spot, adapted to the TPU memory hierarchy.
+
+Decode attention reads the whole KV cache once per generated token; on
+PIM hardware that read happens next to the DRAM banks, on TPU the best
+we can do is stream each KV tile HBM->VMEM exactly once and never spill
+intermediates. The sequence axis is split across the innermost
+(sequential) grid dimension with online-softmax state in VMEM scratch —
+the TPU analogue of the paper's bank-parallel split — and all G query
+heads of one KV head share each streamed tile (the GQA amplification
+that PIM-AI's capacity argument is about).
+
+Grid: (B, Hkv, num_s_blocks); the cache length arrives as a scalar-
+prefetch argument so the kernel masks invalid slots without the host
+slicing the cache.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale, block_s):
+    sb = pl.program_id(2)
+    ns = pl.num_programs(2)
+    cache_len = len_ref[0]
+
+    @pl.when(sb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    s_pos = sb * block_s + jax.lax.iota(jnp.int32, block_s)
+    any_valid = sb * block_s < cache_len
+
+    @pl.when(any_valid)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale       # (G, dh)
+        k = k_ref[0, :, 0]                                # (bs, dh)
+        s = jax.lax.dot_general(
+            q, k.astype(jnp.float32), (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)           # (G, bs)
+        s = jnp.where((s_pos < cache_len)[None, :], s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev[:, 0], jnp.max(s, axis=-1))[:, None]
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, -1, keepdims=True)
+        pv = jax.lax.dot_general(
+            p, v_ref[0, :, 0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)           # (G, dh)
+        acc_ref[...] = acc_ref[...] * alpha + pv
+        m_ref[...] = m_new
+
+    @pl.when(sb == ns - 1)
+    def _emit():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def decode_attention_bhgd(q, k_cache, v_cache, cache_len, *, block_s=512,
+                          interpret=True):
+    """q (B, Hkv, G, Dh); caches (B, S, Hkv, Dh); cache_len scalar int32.
+    Returns (B, Hkv, G, Dh)."""
+    b, hkv, g, dh = q.shape
+    s = k_cache.shape[1]
+    block_s = min(block_s, max(8, s))
+    ns = math.ceil(s / block_s)
+    s_p = ns * block_s
+    if s_p != s:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, s_p - s), (0, 0), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, s_p - s), (0, 0), (0, 0)))
+
+    kernel = functools.partial(_kernel, scale=1.0 / math.sqrt(dh),
+                               block_s=block_s)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, hkv, ns),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, dh), lambda bi, h, si, *_: (bi, h, 0, 0)),
+            pl.BlockSpec((1, block_s, 1, dh),
+                         lambda bi, h, si, *_: (bi, si, h, 0)),
+            pl.BlockSpec((1, block_s, 1, dh),
+                         lambda bi, h, si, *_: (bi, si, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, dh),
+                               lambda bi, h, si, *_: (bi, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, dh), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, dh), q.dtype),
+        interpret=interpret,
+    )(jnp.asarray(cache_len, jnp.int32).reshape(1), q, k_cache, v_cache)
+    return out

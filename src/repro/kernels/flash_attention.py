@@ -1,0 +1,124 @@
+"""Pallas TPU flash attention (prefill/training path).
+
+TPU adaptation of the paper's "process where the data lives" insight:
+each K/V tile is streamed HBM->VMEM exactly once per query block, the
+S x S score matrix never exists in HBM, and the online-softmax state
+(m, l, acc) lives in VMEM scratch across the sequential innermost grid
+dimension (TPU grids iterate the last axis fastest on-core).
+
+Grid: (B*H, num_q_blocks, num_kv_blocks); BlockSpecs tile q/k/v/o to
+(block_q|block_k, d_head) VMEM tiles. Causal/window masking uses
+absolute positions (``q_offset`` supports continuation prefill), and
+out-of-range KV blocks are skipped entirely with ``pl.when`` — the
+block-sparsity that keeps SWA prefill linear.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale, block_q, block_k, seq_q, seq_k, causal, window,
+            q_offset):
+    qb = pl.program_id(1)
+    kb = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # absolute positions of this tile
+    q_pos = q_offset + qb * block_q + jax.lax.iota(jnp.int32, block_q)
+    k_pos = kb * block_k + jax.lax.iota(jnp.int32, block_k)
+
+    # static-shape dynamic visibility: skip fully-masked KV blocks
+    q_lo = q_offset + qb * block_q
+    q_hi = q_lo + block_q - 1
+    k_lo = kb * block_k
+    k_hi = k_lo + block_k - 1
+    visible = jnp.asarray(True)
+    if causal:
+        visible = jnp.logical_and(visible, k_lo <= q_hi)
+    if window is not None:
+        visible = jnp.logical_and(visible, k_hi > q_lo - window)
+
+    @pl.when(visible)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale          # (bq, dh)
+        k = k_ref[0]                                       # (bk, dh)
+        s = jax.lax.dot_general(
+            q, k.astype(jnp.float32), (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)            # (bq, bk)
+        ok = k_pos[None, :] < seq_k                        # pad mask
+        if causal:
+            ok = jnp.logical_and(ok, k_pos[None, :] <= q_pos[:, None])
+        if window is not None:
+            ok = jnp.logical_and(ok, k_pos[None, :] > q_pos[:, None] - window)
+        s = jnp.where(ok, s, NEG_INF)
+
+        m_prev = m_ref[...]                                # (bq, 1)
+        m_new = jnp.maximum(m_prev[:, 0], jnp.max(s, axis=-1))[:, None]
+        alpha = jnp.exp(m_prev - m_new)                    # (bq, 1)
+        p = jnp.exp(s - m_new)                             # (bq, bk)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, -1, keepdims=True)
+        pv = jax.lax.dot_general(
+            p, v_ref[0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)            # (bq, dh)
+        acc_ref[...] = acc_ref[...] * alpha + pv
+        m_ref[...] = m_new
+
+    @pl.when(kb == nk - 1)
+    def _emit():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q, k, v, *, causal=True, window=None, q_offset=0,
+                         block_q=128, block_k=128, interpret=True):
+    """q (BH, Sq, Dh); k, v (BH, Skv, Dh) — heads pre-expanded/merged."""
+    bh, sq, dh = q.shape
+    sk = k.shape[1]
+    block_q = min(block_q, max(8, sq))
+    block_k = min(block_k, max(8, sk))
+    nq = math.ceil(sq / block_q)
+    nk = math.ceil(sk / block_k)
+    sq_p, sk_p = nq * block_q, nk * block_k
+    if sq_p != sq:
+        q = jnp.pad(q, ((0, 0), (0, sq_p - sq), (0, 0)))
+    if sk_p != sk:
+        k = jnp.pad(k, ((0, 0), (0, sk_p - sk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, sk_p - sk), (0, 0)))
+
+    kernel = functools.partial(
+        _kernel, scale=1.0 / math.sqrt(dh), block_q=block_q,
+        block_k=block_k, seq_q=sq, seq_k=sk, causal=causal, window=window,
+        q_offset=q_offset)
+    out = pl.pallas_call(
+        kernel,
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, dh), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, dh), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, dh), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, dh), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq_p, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :sq]

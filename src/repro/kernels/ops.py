@@ -1,0 +1,72 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (the kernel body runs in Python
+via the Pallas interpreter — bit-accurate against the BlockSpec tiling)
+and False on real TPU backends.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import decode_attention as _dec
+from repro.kernels import flash_attention as _fa
+from repro.kernels import quant_gemv as _qg
+from repro.kernels import rmsnorm as _rn
+from repro.kernels.ref import quantize_int4, pack_int4  # noqa: F401
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except Exception:  # noqa: BLE001
+        return False
+
+
+def _interpret() -> bool:
+    return not _on_tpu()
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "q_offset",
+                                   "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal=True, window=None, q_offset=0,
+                    block_q=128, block_k=128):
+    """q (B,Sq,Hq,Dh); k,v (B,Skv,Hkv,Dh). GQA is expanded to Hq."""
+    b, sq, hq, dh = q.shape
+    hkv = k.shape[2]
+    if hkv != hq:
+        k = jnp.repeat(k, hq // hkv, axis=2)
+        v = jnp.repeat(v, hq // hkv, axis=2)
+    qm = jnp.moveaxis(q, 2, 1).reshape(b * hq, sq, dh)
+    km = jnp.moveaxis(k, 2, 1).reshape(b * hq, -1, dh)
+    vm = jnp.moveaxis(v, 2, 1).reshape(b * hq, -1, dh)
+    o = _fa.flash_attention_bhsd(qm, km, vm, causal=causal, window=window,
+                                 q_offset=q_offset, block_q=block_q,
+                                 block_k=block_k, interpret=_interpret())
+    return jnp.moveaxis(o.reshape(b, hq, sq, dh), 1, 2)
+
+
+@partial(jax.jit, static_argnames=("block_s",))
+def decode_attention(q, k_cache, v_cache, cache_len, *, block_s=512):
+    """q (B,1,Hq,Dh); caches (B,S,Hkv,Dh). Split-KV GQA flash decode."""
+    b, _, hq, dh = q.shape
+    hkv = k_cache.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, dh)
+    o = _dec.decode_attention_bhgd(qg, k_cache, v_cache, cache_len,
+                                   block_s=block_s, interpret=_interpret())
+    return o.reshape(b, 1, hq, dh)
+
+
+@partial(jax.jit, static_argnames=("group", "block_n"))
+def quant_gemv(x, w_packed, scales, *, group=128, block_n=256):
+    return _qg.quant_gemv(x, w_packed, scales, group=group,
+                          block_n=block_n, interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("eps", "block_m"))
+def rmsnorm(x, w, *, eps=1e-6, block_m=8):
+    return _rn.rmsnorm(x, w, eps=eps, block_m=block_m,
+                       interpret=_interpret())

@@ -1,0 +1,85 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None):
+    """q (B,Sq,H,Dh); k,v (B,Skv,H,Dh) — heads already expanded."""
+    b, sq, h, dh = q.shape
+    sk = k.shape[1]
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) / math.sqrt(dh)
+    q_pos = jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(sk)[None, :]
+    ok = jnp.ones((sq, sk), bool)
+    if causal:
+        ok &= k_pos <= q_pos
+    if window is not None:
+        ok &= k_pos > q_pos - window
+    scores = jnp.where(ok, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, cache_len):
+    """q (B,1,Hq,Dh); caches (B,S,Hkv,Dh); GQA grouped. fp32 out."""
+    b, _, hq, dh = q.shape
+    _, s, hkv, _ = k_cache.shape
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, dh)
+    scores = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache,
+                        preferred_element_type=jnp.float32) / math.sqrt(dh)
+    valid = jnp.arange(s)[None, None, None, :] < cache_len
+    scores = jnp.where(valid, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, hq, dh).astype(q.dtype)
+
+
+def quant_gemv_ref(x, w_packed, scales, *, group: int = 128):
+    """W4A16 GEMV. x (B,K) bf16; w_packed (K//2, N) uint8 (two 4-bit
+    rows per byte: row 2k in low nibble, row 2k+1 in high); scales
+    (K//group, N) — symmetric per-group quantization, int4 in [-8, 7].
+    """
+    kp, n = w_packed.shape
+    k = kp * 2
+    lo = (w_packed & 0xF).astype(jnp.int8)
+    hi = (w_packed >> 4).astype(jnp.int8)
+    lo = jnp.where(lo >= 8, lo - 16, lo)
+    hi = jnp.where(hi >= 8, hi - 16, hi)
+    w = jnp.zeros((k, n), jnp.int8).at[0::2].set(lo).at[1::2].set(hi)
+    s_full = jnp.repeat(scales, group, axis=0)  # (K, N)
+    w_deq = w.astype(jnp.float32) * s_full.astype(jnp.float32)
+    return jnp.einsum("bk,kn->bn", x.astype(jnp.float32), w_deq
+                      ).astype(x.dtype)
+
+
+def rmsnorm_ref(x, w, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+def pack_int4(w_int: jnp.ndarray) -> jnp.ndarray:
+    """(K, N) int8 in [-8,7] -> (K//2, N) uint8 nibble-packed."""
+    w = jnp.where(w_int < 0, w_int + 16, w_int).astype(jnp.uint8)
+    return (w[0::2] | (w[1::2] << 4)).astype(jnp.uint8)
+
+
+def quantize_int4(w: jnp.ndarray, group: int = 128):
+    """(K, N) float -> (packed (K//2,N) uint8, scales (K//group,N) f32)."""
+    k, n = w.shape
+    wg = w.astype(jnp.float32).reshape(k // group, group, n)
+    amax = jnp.max(jnp.abs(wg), axis=1)  # (K/group, N)
+    scales = jnp.maximum(amax / 7.0, 1e-8)
+    q = jnp.clip(jnp.round(wg / scales[:, None, :]), -8, 7)
+    q = q.reshape(k, n).astype(jnp.int8)
+    return pack_int4(q), scales

@@ -1,0 +1,96 @@
+"""Step builders: the jitted units the launcher/dry-run lower.
+
+- ``build_train_step``: loss + grad (with microbatch gradient
+  accumulation via ``lax.scan``) + AdamW update. Gradients accumulate in
+  fp32 and are communicated ONCE per global step (accumulation-local
+  psum deferral falls out of scan + FSDP sharding: XLA reduce-scatters
+  the final accumulated gradient, not each microbatch's).
+- ``build_prefill_step``: encode the prompt, return last-token logits +
+  a filled KV/state cache (the inference-prefill cell).
+- ``build_serve_step``: one decode token against a cache (the
+  decode/long-context cells) + greedy sampling.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import hints
+from repro.models import model as MD
+from repro.optim import AdamW
+
+
+def build_train_step(cfg, opt: AdamW, *, attn_impl="chunked",
+                     grad_compression=None):
+    def loss_of(params, batch):
+        loss, aux = MD.loss_fn(params, cfg, batch, attn_impl=attn_impl)
+        return loss, aux
+
+    def _clamp_mb(batch_size: int) -> int:
+        """Largest mb <= cfg.microbatch keeping the per-microbatch batch
+        divisible by the FSDP extent of the ambient mesh."""
+        mesh = hints.current_mesh()
+        fs = 1
+        if mesh is not None:
+            for a in ("pod", "data"):
+                if a in mesh.axis_names:
+                    fs *= mesh.shape[a]
+        mb = max(1, min(cfg.microbatch, batch_size))
+        while mb > 1 and (batch_size % mb or (batch_size // mb) % fs):
+            mb -= 1
+        return mb
+
+    def train_step(params, opt_state, batch):
+        mb = _clamp_mb(batch["tokens"].shape[0])
+        if mb == 1:
+            (loss, _), grads = jax.value_and_grad(
+                loss_of, has_aux=True)(params, batch)
+        else:
+            def split(x):
+                return x.reshape((mb, x.shape[0] // mb) + x.shape[1:])
+
+            mbatch = jax.tree.map(split, batch)
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def body(carry, mbi):
+                acc, loss_acc = carry
+                (l, _), g = jax.value_and_grad(
+                    loss_of, has_aux=True)(params, mbi)
+                acc = jax.tree.map(
+                    lambda a, gi: a + gi.astype(jnp.float32), acc, g)
+                return (acc, loss_acc + l), None
+
+            (gsum, lsum), _ = jax.lax.scan(body, (g0, 0.0), mbatch)
+            grads = jax.tree.map(lambda g: g / mb, gsum)
+            loss = lsum / mb
+
+        if grad_compression is not None:
+            grads, opt_state = grad_compression(grads, opt_state)
+
+        params, opt_state, stats = opt.apply(grads, opt_state, params)
+        metrics = {"loss": loss, **stats}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def build_prefill_step(cfg, *, attn_impl="chunked", capacity=None):
+    def prefill_step(params, batch):
+        cap = capacity or batch["tokens"].shape[1]
+        logits, cache = MD.prefill(params, cfg, batch, cap,
+                                   attn_impl=attn_impl)
+        return logits, cache
+
+    return prefill_step
+
+
+def build_serve_step(cfg, *, sample="greedy"):
+    def serve_step(params, tokens, cache):
+        logits, cache = MD.decode_step(params, cfg, tokens, cache)
+        next_tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        return next_tok, logits, cache
+
+    return serve_step

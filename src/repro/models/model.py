@@ -1,0 +1,711 @@
+"""Model assembly for every assigned architecture family.
+
+One functional API over all ten architectures (plus the paper's own
+models):
+
+- ``init_params(key, cfg)``      -> params pytree (layer-stacked leaves)
+- ``forward(params, cfg, batch)``-> full-sequence logits (train path)
+- ``loss_fn(params, cfg, batch)``-> (scalar loss, metrics)
+- ``init_cache(cfg, B, capacity)``-> decode cache pytree (zeros)
+- ``prefill(params, cfg, batch, capacity)`` -> (last-token logits, cache)
+- ``decode_step(params, cfg, tokens, cache)`` -> (logits, cache)
+
+Families:
+- dense / moe / vlm: decoder-only transformer (GQA/MHA/SWA + RoPE), MoE
+  FFN where configured, stub patch-embedding prefix for vlm.
+- audio: encoder-decoder (Whisper backbone) with a stub frame-embedding
+  frontend; decoder carries self-attn KV + fixed cross-attn KV.
+- ssm: xLSTM (mLSTM chunkwise + sLSTM sequential), O(1)/token decode.
+- hybrid: Mamba2 backbone + one *shared* attention+MLP block applied
+  every ``attn_every`` layers (Zamba2), linear-KV + O(1)-state decode.
+
+All layer stacks carry a leading L dim and run under ``lax.scan``; the
+block body is wrapped in ``jax.checkpoint`` when ``cfg.remat != 'none'``
+(policy ``'dots'`` keeps dot outputs, ``'full'`` recomputes everything).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.models import xlstm as X
+from repro.models.attention import attention, decode_attention
+from repro.distributed import hints
+
+TRANSFORMER_FAMILIES = ("dense", "moe", "vlm")
+
+
+def _remat(cfg, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+def _stack_init(init_fn, key, n):
+    """vmap an init over n split keys -> leading-L stacked params."""
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+# ---------------------------------------------------------------------------
+# attention block (projections live here; math lives in attention.py)
+# ---------------------------------------------------------------------------
+
+def init_attn(key, cfg):
+    d, dt = cfg.d_model, L.dtype_of(cfg)
+    hq, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": L.dense_init(ks[0], (d, hq * dh), dt),
+        "wk": L.dense_init(ks[1], (d, kv * dh), dt),
+        "wv": L.dense_init(ks[2], (d, kv * dh), dt),
+        "wo": L.dense_init(ks[3], (hq * dh, d), dt, fan_in=hq * dh),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * dh,), dt)
+        p["bk"] = jnp.zeros((kv * dh,), dt)
+        p["bv"] = jnp.zeros((kv * dh,), dt)
+    return p
+
+
+def _proj_qkv(p, cfg, x, kv_x=None):
+    """x: (B,S,d). Returns q (B,S,Hq,Dh), k/v (B,Skv,Hkv,Dh)."""
+    b, s, _ = x.shape
+    kv_x = x if kv_x is None else kv_x
+    skv = kv_x.shape[1]
+    q = jnp.einsum("bsd,de->bse", x, p["wq"])
+    k = jnp.einsum("bsd,de->bse", kv_x, p["wk"])
+    v = jnp.einsum("bsd,de->bse", kv_x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, cfg.n_heads, cfg.d_head)
+    k = k.reshape(b, skv, cfg.n_kv_heads, cfg.d_head)
+    v = v.reshape(b, skv, cfg.n_kv_heads, cfg.d_head)
+    return q, k, v
+
+
+def _use_rope(cfg):
+    return cfg.family in ("dense", "moe", "vlm", "hybrid")
+
+
+def attn_full(p, cfg, x, *, positions, causal=True, window=None,
+              attn_impl="chunked", kv_x=None, kv_positions=None):
+    """Full-sequence attention. Returns (out (B,S,d), (k, v))."""
+    q, k, v = _proj_qkv(p, cfg, x, kv_x)
+    if cfg.bf16_grads and x.dtype == jnp.bfloat16:
+        from repro.models.attention import bf16_grad
+        q, k, v = bf16_grad(q), bf16_grad(k), bf16_grad(v)
+    if _use_rope(cfg):
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        kp = positions if kv_positions is None else kv_positions
+        k = L.apply_rope(k, kp, cfg.rope_theta)
+    o = attention(q, k, v, causal=causal, window=window,
+                  q_offset=0, kv_offset=0, impl=attn_impl,
+                  q_chunk=cfg.attn_chunk, kv_chunk=cfg.attn_chunk)
+    o = o.reshape(x.shape[0], x.shape[1], -1)
+    return jnp.einsum("bse,ed->bsd", o, p["wo"]), (k, v)
+
+
+def attn_decode(p, cfg, x, k_cache, v_cache, cache_len, *, window=None):
+    """Single-token attention. x: (B,1,d). Returns (out, k1, v1)."""
+    q, k1, v1 = _proj_qkv(p, cfg, x)
+    if _use_rope(cfg):
+        pos = jnp.full((1,), cache_len, jnp.int32)
+        q = L.apply_rope(q, pos, cfg.rope_theta)
+        k1 = L.apply_rope(k1, pos, cfg.rope_theta)
+    o = decode_attention(q, k_cache, v_cache, cache_len, window=window,
+                         extra_k=k1, extra_v=v1)
+    o = o.reshape(x.shape[0], 1, -1)
+    return jnp.einsum("bse,ed->bsd", o, p["wo"]), k1, v1
+
+
+# ---------------------------------------------------------------------------
+# transformer decoder layers (dense / moe / vlm + whisper enc/dec)
+# ---------------------------------------------------------------------------
+
+def init_decoder_layer(key, cfg, ffn_kind="dense", d_ff=None, cross=False):
+    ks = jax.random.split(key, 5)
+    p = {
+        "ln1": L.init_norm(ks[0], cfg),
+        "attn": init_attn(ks[1], cfg),
+        "ln2": L.init_norm(ks[2], cfg),
+    }
+    if ffn_kind == "moe":
+        p["moe"] = M.init_moe(ks[3], cfg)
+    else:
+        p["mlp"] = L.init_mlp(ks[3], cfg, d_ff=d_ff)
+    if cross:
+        p["ln_x"] = L.init_norm(ks[4], cfg)
+        p["xattn"] = init_attn(ks[4], cfg)
+    return p
+
+
+def _apply_ffn(p, cfg, x):
+    if "moe" in p:
+        return M.apply_moe(p["moe"], cfg, x)
+    return L.apply_mlp(p["mlp"], cfg, x)
+
+
+def decoder_block(p, cfg, x, *, positions, attn_impl, causal=True,
+                  window=None, enc_out=None):
+    h = L.apply_norm(p["ln1"], cfg, x)
+    a, (k, v) = attn_full(p["attn"], cfg, h, positions=positions,
+                          causal=causal, window=window, attn_impl=attn_impl)
+    # §Perf C6: pin the residual stream at every add, not just the block
+    # boundary, so sequence-parallel layouts survive through the block.
+    x = hints.hidden(x + a, cfg.act_shard)
+    if enc_out is not None:  # cross-attention (whisper decoder)
+        h = L.apply_norm(p["ln_x"], cfg, x)
+        a, (xk, xv) = attn_full(
+            p["xattn"], cfg, h, positions=positions, causal=False,
+            attn_impl=attn_impl, kv_x=enc_out,
+            kv_positions=jnp.arange(enc_out.shape[1]))
+        x = x + a
+    else:
+        xk = xv = None
+    h = L.apply_norm(p["ln2"], cfg, x)
+    x = x + _apply_ffn(p, cfg, h)
+    return hints.hidden(x, cfg.act_shard), (k, v, xk, xv)
+
+
+def decoder_block_decode(p, cfg, x, k_cache, v_cache, cache_len, *,
+                         window=None, cross_k=None, cross_v=None):
+    h = L.apply_norm(p["ln1"], cfg, x)
+    a, k1, v1 = attn_decode(p["attn"], cfg, h, k_cache, v_cache,
+                            cache_len, window=window)
+    x = x + a
+    if cross_k is not None:
+        h = L.apply_norm(p["ln_x"], cfg, x)
+        q, _, _ = _proj_qkv(p["xattn"], cfg, h)
+        o = decode_attention(q, cross_k, cross_v,
+                             cross_k.shape[1])  # all slots valid
+        o = o.reshape(x.shape[0], 1, -1)
+        x = x + jnp.einsum("bse,ed->bsd", o, p["xattn"]["wo"])
+    h = L.apply_norm(p["ln2"], cfg, x)
+    x = x + _apply_ffn(p, cfg, h)
+    return x, k1, v1
+
+
+# ---------------------------------------------------------------------------
+# init_params — family dispatch
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg):
+    ks = jax.random.split(key, 8)
+    p = {"embed": L.init_embedding(ks[0], cfg),
+         "final_norm": L.init_norm(ks[1], cfg)}
+    if not cfg.tie_embeddings:
+        p["head"] = L.embed_init(ks[2], (cfg.vocab_size, cfg.d_model),
+                                 L.dtype_of(cfg))
+
+    fam = cfg.family
+    if fam in TRANSFORMER_FAMILIES:
+        n_first = cfg.first_dense_layers if cfg.is_moe else 0
+        kind = "moe" if cfg.is_moe else "dense"
+        if n_first:
+            p["first_layers"] = [
+                init_decoder_layer(k, cfg, "dense",
+                                   d_ff=cfg.d_ff_first_dense or cfg.d_ff)
+                for k in jax.random.split(ks[3], n_first)
+            ]
+        p["layers"] = _stack_init(
+            lambda k: init_decoder_layer(k, cfg, kind),
+            ks[4], cfg.n_layers - n_first)
+    elif fam == "audio":
+        p["enc_layers"] = _stack_init(
+            lambda k: init_decoder_layer(k, cfg, "dense"),
+            ks[3], cfg.n_encoder_layers)
+        p["enc_norm"] = L.init_norm(ks[5], cfg)
+        p["layers"] = _stack_init(
+            lambda k: init_decoder_layer(k, cfg, "dense", cross=True),
+            ks[4], cfg.n_layers)
+    elif fam == "ssm":  # xLSTM
+        every = cfg.slstm_every or (cfg.n_layers + 1)
+        n_super = max(1, cfg.n_layers // every)
+        n_m_inner = every - 1 if cfg.slstm_every else cfg.n_layers
+        p["mlstm"] = _stack_init(
+            lambda k: _stack_init(lambda k2: X.init_mlstm(k2, cfg), k,
+                                  n_m_inner),
+            ks[3], n_super)
+        if cfg.slstm_every:
+            p["slstm"] = _stack_init(lambda k: X.init_slstm(k, cfg),
+                                     ks[4], n_super)
+    elif fam == "hybrid":  # Zamba2
+        every = cfg.attn_every
+        n_groups = cfg.n_layers // every
+        def init_mamba_layer(k):
+            k1, k2 = jax.random.split(k)
+            return {"ln": L.init_norm(k1, cfg),
+                    "mamba": S.init_mamba2(k2, cfg)}
+        p["mamba"] = _stack_init(
+            lambda k: _stack_init(init_mamba_layer, k, every),
+            ks[3], n_groups)
+        p["shared"] = init_decoder_layer(ks[4], cfg, "dense")
+    else:
+        raise ValueError(f"unknown family {fam}")
+    return p
+
+
+# ---------------------------------------------------------------------------
+# input embedding per family
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(params, cfg, batch):
+    """Returns (x (B,S,d), positions (S,), n_prefix) for the decoder."""
+    x = L.embed_tokens(params["embed"], batch["tokens"])
+    n_prefix = 0
+    if cfg.family == "vlm" and "images" in batch:
+        img = batch["images"].astype(x.dtype)  # (B, n_img, d) stub frontend
+        x = jnp.concatenate([img, x], axis=1)
+        n_prefix = img.shape[1]
+    s = x.shape[1]
+    positions = jnp.arange(s)
+    if cfg.family == "audio":
+        x = x + L.sinusoidal_positions(positions, cfg.d_model)[None].astype(x.dtype)
+    return hints.hidden(x, cfg.act_shard), positions, n_prefix
+
+
+def _encode_audio(params, cfg, frames, attn_impl):
+    """Whisper encoder over precomputed frame embeddings (B, T, d)."""
+    pos = jnp.arange(frames.shape[1])
+    x = frames + L.sinusoidal_positions(pos, cfg.d_model)[None].astype(frames.dtype)
+
+    def body(h, lp):
+        h, _ = decoder_block(lp, cfg, h, positions=pos, causal=False,
+                             attn_impl=attn_impl)
+        return h, None
+
+    x, _ = jax.lax.scan(_remat(cfg, body), x, params["enc_layers"])
+    return L.apply_norm(params["enc_norm"], cfg, x)
+
+
+# ---------------------------------------------------------------------------
+# forward (train / full-sequence path)
+# ---------------------------------------------------------------------------
+
+def forward(params, cfg, batch, *, attn_impl="chunked"):
+    """Full-sequence logits (B, S, V) fp32 — the train/prefill path."""
+    x, positions, _ = _embed_inputs(params, cfg, batch)
+    fam = cfg.family
+
+    if fam in TRANSFORMER_FAMILIES:
+        for lp in params.get("first_layers", []):
+            x, _ = decoder_block(lp, cfg, x, positions=positions,
+                                 attn_impl=attn_impl,
+                                 window=cfg.sliding_window)
+
+        def body(h, lp):
+            h, _ = decoder_block(lp, cfg, h, positions=positions,
+                                 attn_impl=attn_impl,
+                                 window=cfg.sliding_window)
+            return h, None
+
+        x, _ = jax.lax.scan(_remat(cfg, body), x, params["layers"])
+
+    elif fam == "audio":
+        enc = _encode_audio(params, cfg, batch["frames"], attn_impl)
+
+        def body(h, lp):
+            h, _ = decoder_block(lp, cfg, h, positions=positions,
+                                 attn_impl=attn_impl, enc_out=enc)
+            return h, None
+
+        x, _ = jax.lax.scan(_remat(cfg, body), x, params["layers"])
+
+    elif fam == "ssm":
+        def super_body(h, lps):
+            def m_body(hh, lp):
+                hh, _ = X.apply_mlstm(lp, cfg, hh)
+                return hh, None
+            h, _ = jax.lax.scan(_remat(cfg, m_body), h, lps["m"])
+            if "s" in lps:
+                h, _ = X.apply_slstm(lps["s"], cfg, h)
+            return h, None
+
+        xs = {"m": params["mlstm"]}
+        if "slstm" in params:
+            xs["s"] = params["slstm"]
+        x, _ = jax.lax.scan(super_body, x, xs)
+
+    elif fam == "hybrid":
+        shared = params["shared"]
+
+        def group_body(h, lps):
+            def m_body(hh, lp):
+                y, _ = S.apply_mamba2(
+                    lp["mamba"], cfg, L.apply_norm(lp["ln"], cfg, hh))
+                return hh + y, None
+            h, _ = jax.lax.scan(_remat(cfg, m_body), h, lps)
+            h, _ = decoder_block(shared, cfg, h, positions=positions,
+                                 attn_impl=attn_impl)
+            return h, None
+
+        x, _ = jax.lax.scan(group_body, x, params["mamba"])
+    else:
+        raise ValueError(fam)
+
+    x = L.apply_norm(params["final_norm"], cfg, x)
+    head = params["embed"]["table"] if cfg.tie_embeddings else params["head"]
+    return hints.logits(L.logits_from_hidden(head, x))
+
+
+def loss_fn(params, cfg, batch, *, attn_impl="chunked"):
+    """Next-token cross-entropy. Labels (B, S_tokens) aligned to tokens;
+    vlm image-prefix positions carry no loss."""
+    logits = forward(params, cfg, batch, attn_impl=attn_impl)
+    labels = batch["labels"]
+    if logits.shape[1] != labels.shape[1]:  # vlm prefix
+        logits = logits[:, logits.shape[1] - labels.shape[1]:]
+    mask = batch.get("loss_mask")
+    loss = L.softmax_cross_entropy(logits, labels, mask)
+    return loss, {"loss": loss}
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def _kv_capacity(cfg, capacity):
+    if cfg.sliding_window is not None:
+        return min(capacity, cfg.sliding_window)
+    return capacity
+
+
+def cache_struct(cfg, batch_size, capacity, dtype=None):
+    """Shape/dtype tree of the decode cache (used for zeros + specs)."""
+    dt = dtype or L.dtype_of(cfg)
+    fam = cfg.family
+    kvd = cfg.n_kv_heads * 0 + cfg.d_head  # readability
+    out = {"len": ((), jnp.int32)}
+    if fam in TRANSFORMER_FAMILIES:
+        c = _kv_capacity(cfg, capacity)
+        kshape = (cfg.n_layers, batch_size, c, cfg.n_kv_heads, cfg.d_head)
+        out["k"] = (kshape, dt)
+        out["v"] = (kshape, dt)
+    elif fam == "audio":
+        kshape = (cfg.n_layers, batch_size, capacity, cfg.n_kv_heads,
+                  cfg.d_head)
+        xshape = (cfg.n_layers, batch_size, cfg.encoder_len,
+                  cfg.n_kv_heads, cfg.d_head)
+        out["k"] = (kshape, dt)
+        out["v"] = (kshape, dt)
+        out["cross_k"] = (xshape, dt)
+        out["cross_v"] = (xshape, dt)
+    elif fam == "ssm":
+        every = cfg.slstm_every or (cfg.n_layers + 1)
+        n_super = max(1, cfg.n_layers // every)
+        n_m_inner = every - 1 if cfg.slstm_every else cfg.n_layers
+        ms = X.mlstm_state_shape(cfg, batch_size)
+        out["mlstm"] = ((n_super, n_m_inner) + ms, jnp.float32)
+        if cfg.slstm_every:
+            ss = X.slstm_state_shape(cfg, batch_size)
+            for nm in ("slstm_c", "slstm_n", "slstm_h"):
+                out[nm] = ((n_super,) + ss, jnp.float32)
+    elif fam == "hybrid":
+        every = cfg.attn_every
+        n_groups = cfg.n_layers // every
+        d_in = cfg.ssm_expand * cfg.d_model
+        h = d_in // cfg.ssm_head_dim
+        conv_c = d_in + 2 * cfg.ssm_state
+        out["ssm"] = ((n_groups, every, batch_size, h, cfg.ssm_head_dim,
+                       cfg.ssm_state), jnp.float32)
+        out["conv"] = ((n_groups, every, batch_size, cfg.ssm_conv - 1,
+                        conv_c), dt)
+        kshape = (n_groups, batch_size, capacity, cfg.n_kv_heads, cfg.d_head)
+        out["k"] = (kshape, dt)
+        out["v"] = (kshape, dt)
+    return out
+
+
+def init_cache(cfg, batch_size, capacity):
+    return {k: jnp.zeros(sh, dt)
+            for k, (sh, dt) in cache_struct(cfg, batch_size, capacity).items()}
+
+
+def cache_spec(cfg, batch_size, capacity):
+    return {k: jax.ShapeDtypeStruct(sh, dt)
+            for k, (sh, dt) in cache_struct(cfg, batch_size, capacity).items()}
+
+
+# ---------------------------------------------------------------------------
+# prefill
+# ---------------------------------------------------------------------------
+
+def _write_kv(cache_arr, kv, start):
+    """cache_arr (L,B,C,H,Dh) <- kv (L,B,S,H,Dh) at slot ``start``."""
+    return jax.lax.dynamic_update_slice(
+        cache_arr, kv.astype(cache_arr.dtype), (0, 0, start, 0, 0))
+
+
+def prefill(params, cfg, batch, capacity, *, attn_impl="chunked"):
+    """Process the prompt, fill the cache. Returns (last logits (B,V),
+    cache)."""
+    x, positions, _ = _embed_inputs(params, cfg, batch)
+    s = x.shape[1]
+    b = x.shape[0]
+    cache = init_cache(cfg, b, capacity)
+    fam = cfg.family
+
+    if fam in TRANSFORMER_FAMILIES:
+        kvs = []
+        for lp in params.get("first_layers", []):
+            x, (k, v, _, _) = decoder_block(
+                lp, cfg, x, positions=positions, attn_impl=attn_impl,
+                window=cfg.sliding_window)
+            kvs.append((k, v))
+
+        def body(h, lp):
+            h, (k, v, _, _) = decoder_block(
+                lp, cfg, h, positions=positions, attn_impl=attn_impl,
+                window=cfg.sliding_window)
+            return h, (k, v)
+
+        x, (ks, vs) = jax.lax.scan(_remat(cfg, body), x, params["layers"])
+        if kvs:
+            k0 = jnp.stack([k for k, _ in kvs])
+            v0 = jnp.stack([v for _, v in kvs])
+            ks = jnp.concatenate([k0, ks], axis=0)
+            vs = jnp.concatenate([v0, vs], axis=0)
+        c = cache["k"].shape[2]
+        if s >= c:
+            # Rolling (SWA) cache: slot invariant is pos % c, so place the
+            # window tail (tokens s-c .. s-1) rotated by s % c.
+            ks, vs = ks[:, :, s - c:], vs[:, :, s - c:]
+            shift = s % c
+            if shift:
+                ks = jnp.roll(ks, shift, axis=2)
+                vs = jnp.roll(vs, shift, axis=2)
+            cache["k"], cache["v"] = (ks.astype(cache["k"].dtype),
+                                      vs.astype(cache["v"].dtype))
+        else:
+            cache["k"] = _write_kv(cache["k"], ks, 0)
+            cache["v"] = _write_kv(cache["v"], vs, 0)
+
+    elif fam == "audio":
+        enc = _encode_audio(params, cfg, batch["frames"], attn_impl)
+
+        def body(h, lp):
+            h, (k, v, xk, xv) = decoder_block(
+                lp, cfg, h, positions=positions, attn_impl=attn_impl,
+                enc_out=enc)
+            return h, (k, v, xk, xv)
+
+        x, (ks, vs, xks, xvs) = jax.lax.scan(_remat(cfg, body), x,
+                                             params["layers"])
+        cache["k"] = _write_kv(cache["k"], ks, 0)
+        cache["v"] = _write_kv(cache["v"], vs, 0)
+        cache["cross_k"] = xks.astype(cache["cross_k"].dtype)
+        cache["cross_v"] = xvs.astype(cache["cross_v"].dtype)
+
+    elif fam == "ssm":
+        def super_body(h, lps):
+            def m_body(hh, lp):
+                hh, st = X.apply_mlstm(lp, cfg, hh)
+                return hh, st
+            h, m_states = jax.lax.scan(_remat(cfg, m_body), h, lps["m"])
+            s_state = None
+            if "s" in lps:
+                h, s_state = X.apply_slstm(lps["s"], cfg, h)
+            return h, (m_states, s_state)
+
+        xs = {"m": params["mlstm"]}
+        if "slstm" in params:
+            xs["s"] = params["slstm"]
+        x, (m_states, s_states) = jax.lax.scan(super_body, x, xs)
+        cache["mlstm"] = m_states
+        if s_states is not None:
+            cache["slstm_c"], cache["slstm_n"], cache["slstm_h"] = s_states
+
+    elif fam == "hybrid":
+        shared = params["shared"]
+
+        def group_body(h, lps):
+            def m_body(hh, lp):
+                y, (st, cv) = S.apply_mamba2(
+                    lp["mamba"], cfg, L.apply_norm(lp["ln"], cfg, hh))
+                return hh + y, (st, cv)
+            h, (sts, cvs) = jax.lax.scan(_remat(cfg, m_body), h, lps)
+            h, (k, v, _, _) = decoder_block(shared, cfg, h,
+                                            positions=positions,
+                                            attn_impl=attn_impl)
+            return h, (sts, cvs, k, v)
+
+        x, (sts, cvs, ks, vs) = jax.lax.scan(group_body, x, params["mamba"])
+        cache["ssm"] = sts
+        cache["conv"] = cvs.astype(cache["conv"].dtype)
+        cache["k"] = _write_kv(cache["k"], ks, 0)
+        cache["v"] = _write_kv(cache["v"], vs, 0)
+
+    else:
+        raise ValueError(fam)
+
+    cache["len"] = jnp.asarray(s, jnp.int32)
+    x = L.apply_norm(params["final_norm"], cfg, x[:, -1:])
+    head = params["embed"]["table"] if cfg.tie_embeddings else params["head"]
+    return L.logits_from_hidden(head, x)[:, 0], cache
+
+
+# ---------------------------------------------------------------------------
+# decode step
+# ---------------------------------------------------------------------------
+
+def decode_step(params, cfg, tokens, cache):
+    """tokens: (B, 1) int32. Returns (logits (B, V) fp32, new cache)."""
+    x = L.embed_tokens(params["embed"], tokens)
+    n = cache["len"]
+    fam = cfg.family
+
+    if fam in TRANSFORMER_FAMILIES:
+        c = cache["k"].shape[2]
+        slot = n % c if cfg.sliding_window is not None else n
+        n_first = len(params.get("first_layers", []))
+        k_news, v_news = [], []
+        for i, lp in enumerate(params.get("first_layers", [])):
+            x, k1, v1 = decoder_block_decode(
+                lp, cfg, x, cache["k"][i], cache["v"][i], n,
+                window=cfg.sliding_window)
+            k_news.append(k1)
+            v_news.append(v1)
+
+        def body(h, xs):
+            lp, kc, vc = xs
+            h, k1, v1 = decoder_block_decode(lp, cfg, h, kc, vc, n,
+                                             window=cfg.sliding_window)
+            return h, (k1, v1)
+
+        x, (ks, vs) = jax.lax.scan(
+            body, x, (params["layers"], cache["k"][n_first:],
+                      cache["v"][n_first:]))
+        if k_news:
+            ks = jnp.concatenate([jnp.stack(k_news), ks], axis=0)
+            vs = jnp.concatenate([jnp.stack(v_news), vs], axis=0)
+        cache["k"] = jax.lax.dynamic_update_slice(
+            cache["k"], ks.astype(cache["k"].dtype), (0, 0, slot, 0, 0))
+        cache["v"] = jax.lax.dynamic_update_slice(
+            cache["v"], vs.astype(cache["v"].dtype), (0, 0, slot, 0, 0))
+
+    elif fam == "audio":
+        x = x + L.sinusoidal_positions(
+            jnp.full((1,), n, jnp.int32), cfg.d_model)[None].astype(x.dtype)
+
+        def body(h, xs):
+            lp, kc, vc, xk, xv = xs
+            h, k1, v1 = decoder_block_decode(lp, cfg, h, kc, vc, n,
+                                             cross_k=xk, cross_v=xv)
+            return h, (k1, v1)
+
+        x, (ks, vs) = jax.lax.scan(
+            body, x, (params["layers"], cache["k"], cache["v"],
+                      cache["cross_k"], cache["cross_v"]))
+        cache["k"] = jax.lax.dynamic_update_slice(
+            cache["k"], ks.astype(cache["k"].dtype), (0, 0, n, 0, 0))
+        cache["v"] = jax.lax.dynamic_update_slice(
+            cache["v"], vs.astype(cache["v"].dtype), (0, 0, n, 0, 0))
+
+    elif fam == "ssm":
+        def super_body(h, xs):
+            def m_body(hh, mxs):
+                lp, st = mxs
+                hh, st = X.mlstm_decode_step(lp, cfg, hh, st)
+                return hh, st
+            h, m_states = jax.lax.scan(m_body, h, (xs["m"], xs["mst"]))
+            out = {"mst": m_states}
+            if "s" in xs:
+                sst = (xs["sc"], xs["sn"], xs["sh"])
+                h, sst = X.slstm_decode_step(xs["s"], cfg, h, sst)
+                out.update(sc=sst[0], sn=sst[1], sh=sst[2])
+            return h, out
+
+        xs = {"m": params["mlstm"], "mst": cache["mlstm"]}
+        if "slstm" in params:
+            xs.update(s=params["slstm"], sc=cache["slstm_c"],
+                      sn=cache["slstm_n"], sh=cache["slstm_h"])
+        x, outs = jax.lax.scan(super_body, x, xs)
+        cache["mlstm"] = outs["mst"]
+        if "slstm" in params:
+            cache["slstm_c"], cache["slstm_n"], cache["slstm_h"] = (
+                outs["sc"], outs["sn"], outs["sh"])
+
+    elif fam == "hybrid":
+        shared = params["shared"]
+
+        def group_body(h, xs):
+            def m_body(hh, mxs):
+                lp, st, cv = mxs
+                y, (st, cv) = S.mamba2_decode_step(
+                    lp["mamba"], cfg, L.apply_norm(lp["ln"], cfg, hh), st, cv)
+                return hh + y, (st, cv)
+            h, (sts, cvs) = jax.lax.scan(
+                m_body, h, (xs["lp"], xs["st"], xs["cv"]))
+            h, k1, v1 = decoder_block_decode(shared, cfg, h, xs["k"],
+                                             xs["v"], n)
+            return h, {"st": sts, "cv": cvs, "k1": k1, "v1": v1}
+
+        x, outs = jax.lax.scan(
+            group_body, x,
+            {"lp": params["mamba"], "st": cache["ssm"], "cv": cache["conv"],
+             "k": cache["k"], "v": cache["v"]})
+        cache["ssm"] = outs["st"]
+        cache["conv"] = outs["cv"]
+        cache["k"] = jax.lax.dynamic_update_slice(
+            cache["k"], outs["k1"].astype(cache["k"].dtype), (0, 0, n, 0, 0))
+        cache["v"] = jax.lax.dynamic_update_slice(
+            cache["v"], outs["v1"].astype(cache["v"].dtype), (0, 0, n, 0, 0))
+    else:
+        raise ValueError(fam)
+
+    cache["len"] = n + 1
+    x = L.apply_norm(params["final_norm"], cfg, x)
+    head = params["embed"]["table"] if cfg.tie_embeddings else params["head"]
+    return hints.logits(L.logits_from_hidden(head, x))[:, 0], cache
+
+
+# ---------------------------------------------------------------------------
+# batch construction (concrete + specs)
+# ---------------------------------------------------------------------------
+
+def batch_struct(cfg, batch_size, seq_len, kind="train"):
+    """Shape/dtype tree for a model input batch of the given kind."""
+    dt = L.dtype_of(cfg)
+    out = {}
+    if kind == "decode":
+        out["tokens"] = ((batch_size, 1), jnp.int32)
+        return out
+    s_tok = seq_len
+    if cfg.family == "vlm" and cfg.n_image_tokens:
+        s_tok = seq_len - cfg.n_image_tokens
+        out["images"] = ((batch_size, cfg.n_image_tokens, cfg.d_model), dt)
+    if cfg.family == "audio":
+        out["frames"] = ((batch_size, cfg.encoder_len, cfg.d_model), dt)
+    out["tokens"] = ((batch_size, s_tok), jnp.int32)
+    if kind == "train":
+        out["labels"] = ((batch_size, s_tok), jnp.int32)
+    return out
+
+
+def batch_spec(cfg, batch_size, seq_len, kind="train"):
+    return {k: jax.ShapeDtypeStruct(sh, dt)
+            for k, (sh, dt) in batch_struct(cfg, batch_size, seq_len,
+                                            kind).items()}
+
+
+def make_dummy_batch(key, cfg, batch_size, seq_len, kind="train"):
+    out = {}
+    for name, (sh, dt) in batch_struct(cfg, batch_size, seq_len,
+                                       kind).items():
+        key, sub = jax.random.split(key)
+        if dt == jnp.int32:
+            out[name] = jax.random.randint(sub, sh, 0, cfg.vocab_size,
+                                           jnp.int32)
+        else:
+            out[name] = (jax.random.normal(sub, sh, jnp.float32) * 0.1
+                         ).astype(dt)
+    return out

@@ -1,0 +1,118 @@
+"""Fine-grained mixture-of-experts (DeepSeekMoE / DBRX style).
+
+Routing: softmax over router logits, top-k experts per token. Dispatch is
+capacity-based gather/scatter (Switch/MegaBlocks-style): tokens are
+scattered into per-expert buffers of capacity
+``C = ceil(tokens * top_k / E * capacity_factor)`` and processed with a
+single grouped einsum over stacked expert weights — so the traced FLOPs
+are proportional to *active* compute (E*C = tokens*top_k*cf), not to the
+full expert count. Overflowing tokens drop their routed contribution
+(shared experts still apply), matching standard capacity semantics.
+
+Expert weights are stacked with a leading E dim and shard over the
+``model`` mesh axis (expert parallelism).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import hints
+from repro.models import layers as L
+
+
+def init_moe(key, cfg):
+    d, dt = cfg.d_model, L.dtype_of(cfg)
+    f = cfg.d_ff_expert
+    e = cfg.n_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": L.dense_init(ks[0], (d, e), jnp.float32),
+        "w_gate": L.dense_init(ks[1], (e, d, f), dt),
+        "w_up": L.dense_init(ks[2], (e, d, f), dt),
+        "w_down": L.dense_init(ks[3], (e, f, d), dt, fan_in=f),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = L.init_mlp(
+            ks[4], cfg, d_ff=cfg.n_shared_experts * cfg.d_ff_expert
+        )
+    return p
+
+
+def _capacity(n_tokens: int, cfg) -> int:
+    c = int(math.ceil(n_tokens * cfg.moe_top_k / cfg.n_experts
+                      * cfg.moe_capacity_factor))
+    return max(8, min(n_tokens, c))
+
+
+def route(router_w, x, top_k: int):
+    """Returns (weights (N,k) fp32 normalized, expert_ids (N,k) int32)."""
+    logits = jnp.einsum("nd,de->ne", x.astype(jnp.float32), router_w)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, ids = jax.lax.top_k(probs, top_k)
+    w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-9)
+    return w, ids
+
+
+def apply_moe(p, cfg, x):
+    """x: (B, S, d) -> (B, S, d)."""
+    b, s, d = x.shape
+    n = b * s
+    k = cfg.moe_top_k
+    e = cfg.n_experts
+    cap = _capacity(n, cfg)
+    xf = x.reshape(n, d)
+
+    w, ids = route(p["router"], xf, k)  # (n,k)
+
+    # --- capacity assignment: position of each (token, slot) within its
+    # expert, computed with a flat one-hot cumsum (sort-free, O(n*k*e)).
+    flat_ids = ids.reshape(-1)  # (n*k,) expert id per routed slot
+    onehot = jax.nn.one_hot(flat_ids, e, dtype=jnp.int32)  # (n*k, e)
+    pos_in_expert = jnp.cumsum(onehot, axis=0) - onehot  # exclusive
+    pos = jnp.sum(pos_in_expert * onehot, axis=-1)  # (n*k,)
+    keep = pos < cap
+
+    # scatter tokens into (e, cap, d) buffers; index e / >=cap -> dropped
+    buf = jnp.zeros((e, cap, d), x.dtype)
+    tok_idx = jnp.repeat(jnp.arange(n), k)
+    scat_e = jnp.where(keep, flat_ids, e)  # e -> out of range -> dropped
+    buf = buf.at[scat_e, pos].add(xf[tok_idx].astype(x.dtype), mode="drop")
+    buf = hints.moe_buf(buf, enable=bool(cfg.moe_buffer_hint))
+
+    # grouped expert FFN: (e, cap, d) x (e, d, f)
+    g = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    if cfg.activation in ("swiglu",):
+        h = jax.nn.silu(g) * u
+    elif cfg.activation == "geglu":
+        h = jax.nn.gelu(g) * u
+    else:
+        h = jax.nn.silu(g) * u
+    y_buf = jnp.einsum("ecf,efd->ecd", h, p["w_down"])  # (e, cap, d)
+    y_buf = hints.moe_buf(y_buf, enable=bool(cfg.moe_buffer_hint))
+
+    # gather back, weighted (out-of-range -> 0 contribution)
+    y_slots = y_buf.at[scat_e, pos].get(mode="fill", fill_value=0)  # (n*k, d)
+    wk = w.reshape(-1).astype(y_slots.dtype)
+    y = jax.ops.segment_sum(y_slots * wk[:, None], tok_idx, num_segments=n)
+
+    if "shared" in p:
+        y = y + L.apply_mlp(p["shared"], cfg, xf)
+    return y.reshape(b, s, d).astype(x.dtype)
+
+
+def aux_load_balance_loss(p, cfg, x):
+    """Switch-style load-balancing auxiliary loss (mean over tokens)."""
+    b, s, d = x.shape
+    xf = x.reshape(-1, d)
+    logits = jnp.einsum("nd,de->ne", xf.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    _, ids = jax.lax.top_k(probs, cfg.moe_top_k)
+    frac = jnp.mean(
+        jax.nn.one_hot(ids, cfg.n_experts, dtype=jnp.float32), axis=(0, 1)
+    )
+    imp = jnp.mean(probs, axis=0)
+    return cfg.n_experts * jnp.sum(frac * imp)

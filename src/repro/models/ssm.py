@@ -1,0 +1,205 @@
+"""Mamba2 (SSD — state-space duality) block, chunkwise-parallel.
+
+Follows the minimal SSD formulation of Mamba2 [arXiv:2405.21060]:
+  h_t = exp(dt_t * A_h) h_{t-1} + dt_t * B_t x_t        (per head h)
+  y_t = C_t^T h_t + D_h x_t
+computed chunkwise: intra-chunk quadratic ("attention-like") term +
+inter-chunk recurrence carried by ``lax.scan`` over chunks. The chunk
+engine (``ssd_chunked``) is shared with the mLSTM (models/xlstm.py),
+which is the same recurrence with f-gates instead of exp(dt*A).
+
+Decode is O(1)/token via the recurrent state (B, H, P, N) plus a rolling
+conv1d state — this is what makes `long_500k` runnable for ssm/hybrid.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+def segsum(log_a):
+    """log_a: (..., l). Returns (..., l, l): sum_{k=j+1..i} log_a_k for
+    i >= j, -inf above the diagonal."""
+    l = log_a.shape[-1]
+    cs = jnp.cumsum(log_a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]  # (..., i, j) = sum (j, i]
+    mask = jnp.tril(jnp.ones((l, l), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, log_a, b, c, chunk: int, h0=None):
+    """Chunkwise SSD scan.
+
+    x:     (B, S, H, P)   inputs (already dt-scaled for mamba / i-gated
+                          for mLSTM)
+    log_a: (B, S, H)      per-step log decay (dt*A for mamba, log f for
+                          mLSTM); must be <= 0 for stability
+    b:     (B, S, H, N)   input maps (mamba B broadcast over heads)
+    c:     (B, S, H, N)   output maps
+    h0:    (B, H, P, N)   initial state or None
+    Returns y (B, S, H, P), h_final (B, H, P, N).
+    """
+    B, S, H, P = x.shape
+    N = b.shape[-1]
+    nchunks = math.ceil(S / chunk)
+    pad = nchunks * chunk - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        log_a = jnp.pad(log_a, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    def to_chunks(t):
+        return t.reshape((B, nchunks, chunk) + t.shape[2:])
+
+    xc, lac, bc, cc = map(to_chunks, (x, log_a, b, c))
+    lac = jnp.moveaxis(lac, -1, 2)  # (B, nc, H, l)
+
+    a_cum = jnp.cumsum(lac, axis=-1)  # (B,nc,H,l)
+    # intra-chunk (diagonal block) term
+    Lmat = jnp.exp(segsum(lac))  # (B,nc,H,l,l)
+    scores = jnp.einsum("bzlhn,bzshn->bzhls", cc, bc,
+                        preferred_element_type=jnp.float32)
+    y_diag = jnp.einsum("bzhls,bzhls,bzshp->bzlhp", scores, Lmat,
+                        xc.astype(jnp.float32))
+
+    # end-of-chunk states from each chunk's inputs
+    decay_to_end = jnp.exp(a_cum[..., -1:] - a_cum)  # (B,nc,H,l)
+    chunk_states = jnp.einsum("bzshn,bzhs,bzshp->bzhpn", bc, decay_to_end,
+                              xc.astype(jnp.float32))
+    chunk_decay = jnp.exp(a_cum[..., -1])  # (B,nc,H)
+
+    # inter-chunk recurrence
+    if h0 is None:
+        h0 = jnp.zeros((B, H, P, N), jnp.float32)
+
+    def body(h, inp):
+        st, dec = inp  # (B,H,P,N), (B,H)
+        h_in = h
+        h = dec[..., None, None] * h + st
+        return h, h_in
+
+    st_s = jnp.moveaxis(chunk_states, 1, 0)
+    dec_s = jnp.moveaxis(chunk_decay, 1, 0)
+    h_final, h_prevs = jax.lax.scan(body, h0.astype(jnp.float32),
+                                    (st_s, dec_s))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)  # (B,nc,H,P,N) state entering chunk
+
+    # contribution of the carried state to each position
+    state_decay = jnp.exp(a_cum)  # (B,nc,H,l)
+    y_off = jnp.einsum("bzlhn,bzhl,bzhpn->bzlhp", cc, state_decay, h_prevs)
+
+    y = (y_diag + y_off).reshape(B, nchunks * chunk, H, P)
+    return y[:, :S].astype(x.dtype), h_final
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+def init_mamba2(key, cfg):
+    d, dt_ = cfg.d_model, L.dtype_of(cfg)
+    d_in = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    h = d_in // cfg.ssm_head_dim
+    k = cfg.ssm_conv
+    ks = jax.random.split(key, 4)
+    zdim = 2 * d_in + 2 * n + h  # z, x, B, C, dt
+    conv_dim = d_in + 2 * n
+    return {
+        "in_proj": L.dense_init(ks[0], (d, zdim), dt_),
+        "conv_w": L.dense_init(ks[1], (k, conv_dim), dt_, fan_in=k),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": {"w": jnp.ones((d_in,), dt_)},
+        "out_proj": L.dense_init(ks[2], (d_in, d), dt_, fan_in=d_in),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    d_in = cfg.ssm_expand * cfg.d_model
+    n = cfg.ssm_state
+    h = d_in // cfg.ssm_head_dim
+    z = zxbcdt[..., :d_in]
+    x = zxbcdt[..., d_in:2 * d_in]
+    b = zxbcdt[..., 2 * d_in:2 * d_in + n]
+    c = zxbcdt[..., 2 * d_in + n:2 * d_in + 2 * n]
+    dt = zxbcdt[..., 2 * d_in + 2 * n:]
+    return z, x, b, c, dt
+
+
+def _causal_conv(x, w, state=None):
+    """x: (B,S,C); w: (k,C) depthwise. Returns (y, new_state (B,k-1,C))."""
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    # depthwise causal conv via stacked shifts (k is tiny, 4)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k))
+    new_state = xp[:, -(k - 1):] if k > 1 else state
+    return y, new_state
+
+
+def apply_mamba2(p, cfg, u, state=None, conv_state=None):
+    """u: (B, S, d). state: (B,H,P,N) or None. Returns y, (state, conv)."""
+    B, S, d = u.shape
+    d_in = cfg.ssm_expand * d
+    P = cfg.ssm_head_dim
+    H = d_in // P
+    zxbcdt = jnp.einsum("bsd,dz->bsz", u, p["in_proj"])
+    z, x, b, c, dt = _split_proj(cfg, zxbcdt)
+    xbc = jnp.concatenate([x, b, c], axis=-1)
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], conv_state)
+    xbc = jax.nn.silu(xbc)
+    x = xbc[..., :d_in].reshape(B, S, H, P)
+    bmat = xbc[..., d_in:d_in + cfg.ssm_state]
+    cmat = xbc[..., d_in + cfg.ssm_state:]
+    bmat = jnp.broadcast_to(bmat[:, :, None, :], (B, S, H, cfg.ssm_state))
+    cmat = jnp.broadcast_to(cmat[:, :, None, :], (B, S, H, cfg.ssm_state))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    a = -jnp.exp(p["A_log"])  # (H,) negative
+    log_a = dt * a  # (B,S,H) <= 0
+    x_bar = x.astype(jnp.float32) * dt[..., None]
+    y, h_final = ssd_chunked(x_bar, log_a, bmat, cmat, cfg.chunk_len,
+                             h0=state)
+    y = y + x.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(B, S, d_in)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = L.rmsnorm(y.astype(u.dtype), p["norm"]["w"])
+    out = jnp.einsum("bsf,fd->bsd", y, p["out_proj"])
+    return out, (h_final, new_conv)
+
+
+def mamba2_decode_step(p, cfg, u, state, conv_state):
+    """u: (B, 1, d). O(1) recurrent update."""
+    B, _, d = u.shape
+    d_in = cfg.ssm_expand * d
+    P = cfg.ssm_head_dim
+    H = d_in // P
+    N = cfg.ssm_state
+    zxbcdt = jnp.einsum("bsd,dz->bsz", u, p["in_proj"])
+    z, x, b, c, dt = _split_proj(cfg, zxbcdt)
+    xbc = jnp.concatenate([x, b, c], axis=-1)
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], conv_state)
+    xbc = jax.nn.silu(xbc)
+    x = xbc[..., :d_in].reshape(B, 1, H, P)[:, 0]
+    bvec = xbc[:, 0, d_in:d_in + N]
+    cvec = xbc[:, 0, d_in + N:]
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt * a)  # (B,H)
+    x_bar = x.astype(jnp.float32) * dt[..., None]  # (B,H,P)
+    upd = jnp.einsum("bhp,bn->bhpn", x_bar, bvec.astype(jnp.float32))
+    state = decay[..., None, None] * state + upd
+    y = jnp.einsum("bhpn,bn->bhp", state, cvec.astype(jnp.float32))
+    y = y + x.astype(jnp.float32) * p["D"][None, :, None]
+    y = y.reshape(B, 1, d_in)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = L.rmsnorm(y.astype(u.dtype), p["norm"]["w"])
+    out = jnp.einsum("bsf,fd->bsd", y, p["out_proj"])
+    return out, (state, new_conv)

@@ -1,0 +1,196 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+mLSTM [arXiv:2405.04517] is a linear-attention-style recurrence
+    C_t = f_t * C_{t-1} + i_t * v_t k_t^T        (matrix memory, per head)
+    n_t = f_t * n_{t-1} + i_t * k_t              (normalizer)
+    y_t = (C_t q_t) / max(|n_t^T q_t|, 1)
+computed chunkwise-parallel through the shared SSD engine
+(:func:`repro.models.ssm.ssd_chunked`) by augmenting the value vector with
+a constant-one channel that carries the normalizer. We use the sigmoid
+gating variant (i = sigmoid, f = sigmoid) for numerical stability on all
+backends; the exponential-gating stabilizer of the paper is equivalent up
+to the gate parameterization and does not change the op/byte stream the
+PIM-AI simulator consumes.
+
+sLSTM has scalar memory with block-diagonal recurrent weights and *must*
+run sequentially -> ``lax.scan`` over time. Decode is O(1)/token for both
+block types, which is what qualifies xlstm-350m for ``long_500k``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.ssm import ssd_chunked
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg):
+    d, dt = cfg.d_model, L.dtype_of(cfg)
+    d_in = 2 * d
+    h = cfg.n_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "norm": {"w": jnp.ones((d,), dt)},
+        "w_up": L.dense_init(ks[0], (d, d_in), dt),
+        "w_gate": L.dense_init(ks[1], (d, d_in), dt),
+        "wq": L.dense_init(ks[2], (d_in, d_in), dt),
+        "wk": L.dense_init(ks[3], (d_in, d_in), dt),
+        "wv": L.dense_init(ks[4], (d_in, d_in), dt),
+        "w_i": L.dense_init(ks[5], (d_in, h), dt),
+        "w_f": L.dense_init(ks[6], (d_in, h), dt),
+        "f_bias": jnp.full((h,), 3.0, jnp.float32),  # start ~remembering
+        "out_norm": {"w": jnp.ones((d_in,), dt)},
+        "w_down": L.dense_init(ks[7], (d_in, d), dt, fan_in=d_in),
+    }
+
+
+def _mlstm_heads(p, cfg, u):
+    """u: (B,S,d_in). Returns q,k,v (B,S,H,P), log_f (B,S,H), i (B,S,H)."""
+    b, s, d_in = u.shape
+    h = cfg.n_heads
+    pdim = d_in // h
+    q = jnp.einsum("bsd,de->bse", u, p["wq"]).reshape(b, s, h, pdim)
+    k = jnp.einsum("bsd,de->bse", u, p["wk"]).reshape(b, s, h, pdim)
+    v = jnp.einsum("bsd,de->bse", u, p["wv"]).reshape(b, s, h, pdim)
+    k = k / jnp.sqrt(jnp.float32(pdim)).astype(k.dtype)
+    i_pre = jnp.einsum("bsd,dh->bsh", u, p["w_i"]).astype(jnp.float32)
+    f_pre = jnp.einsum("bsd,dh->bsh", u, p["w_f"]).astype(jnp.float32)
+    log_f = jax.nn.log_sigmoid(f_pre + p["f_bias"])
+    i_gate = jax.nn.sigmoid(i_pre)
+    return q, k, v, log_f, i_gate
+
+
+def apply_mlstm(p, cfg, x, state=None):
+    """x: (B,S,d). state: (B,H,P+1,N) or None. Returns (y, new_state)."""
+    b, s, d = x.shape
+    xin = L.rmsnorm(x, p["norm"]["w"])
+    u = jnp.einsum("bsd,de->bse", xin, p["w_up"])
+    z = jnp.einsum("bsd,de->bse", xin, p["w_gate"])
+    q, k, v, log_f, i_gate = _mlstm_heads(p, cfg, u)
+    # augment v with the normalizer channel (carried through the SSD state)
+    ones = jnp.ones(v.shape[:-1] + (1,), v.dtype)
+    v_aug = jnp.concatenate([v, ones], axis=-1) * i_gate[..., None].astype(v.dtype)
+    y_aug, h_final = ssd_chunked(v_aug, log_f, k, q, cfg.chunk_len, h0=state)
+    y = y_aug[..., :-1]
+    denom = y_aug[..., -1:]
+    y = y / jnp.maximum(jnp.abs(denom), 1.0)
+    y = y.reshape(b, s, -1)
+    y = L.rmsnorm(y.astype(x.dtype), p["out_norm"]["w"])
+    y = y * jax.nn.silu(z.astype(y.dtype))
+    out = jnp.einsum("bse,ed->bsd", y, p["w_down"])
+    return x + out, h_final
+
+
+def mlstm_decode_step(p, cfg, x, state):
+    """x: (B,1,d); state (B,H,P+1,N). O(1) recurrent update."""
+    b, _, d = x.shape
+    xin = L.rmsnorm(x, p["norm"]["w"])
+    u = jnp.einsum("bsd,de->bse", xin, p["w_up"])
+    z = jnp.einsum("bsd,de->bse", xin, p["w_gate"])
+    q, k, v, log_f, i_gate = _mlstm_heads(p, cfg, u)
+    q1, k1, v1 = q[:, 0], k[:, 0], v[:, 0]  # (B,H,P)
+    f1 = jnp.exp(log_f[:, 0])  # (B,H)
+    i1 = i_gate[:, 0]
+    ones = jnp.ones(v1.shape[:-1] + (1,), jnp.float32)
+    v_aug = jnp.concatenate([v1.astype(jnp.float32), ones], -1) * i1[..., None]
+    upd = jnp.einsum("bhp,bhn->bhpn", v_aug, k1.astype(jnp.float32))
+    state = f1[..., None, None] * state + upd
+    y_aug = jnp.einsum("bhpn,bhn->bhp", state, q1.astype(jnp.float32))
+    y = y_aug[..., :-1] / jnp.maximum(jnp.abs(y_aug[..., -1:]), 1.0)
+    y = y.reshape(b, 1, -1)
+    y = L.rmsnorm(y.astype(x.dtype), p["out_norm"]["w"])
+    y = y * jax.nn.silu(z.astype(y.dtype))
+    out = jnp.einsum("bse,ed->bsd", y, p["w_down"])
+    return x + out, state
+
+
+def mlstm_state_shape(cfg, batch):
+    d_in = 2 * cfg.d_model
+    pdim = d_in // cfg.n_heads
+    n = d_in // cfg.n_heads
+    return (batch, cfg.n_heads, pdim + 1, n)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg):
+    d, dt = cfg.d_model, L.dtype_of(cfg)
+    h = cfg.n_heads
+    ph = d // h
+    d_ff = int(d * 4 / 3)
+    ks = jax.random.split(key, 4)
+    return {
+        "norm": {"w": jnp.ones((d,), dt)},
+        # input projections for 4 gates (i, f, z, o)
+        "w_in": L.dense_init(ks[0], (d, 4 * d), dt),
+        # block-diagonal recurrent weights, per head: (H, ph, 4*ph)
+        "w_rec": L.dense_init(ks[1], (h, ph, 4 * ph), dt, fan_in=ph),
+        "bias": jnp.zeros((4 * d,), jnp.float32),
+        "ff_norm": {"w": jnp.ones((d,), dt)},
+        "w_ff_up": L.dense_init(ks[2], (d, d_ff), dt),
+        "w_ff_down": L.dense_init(ks[3], (d_ff, d), dt, fan_in=d_ff),
+    }
+
+
+def _slstm_cell(p, cfg, xt, carry):
+    """One time step. xt: (B,d) pre-projected input (B,4d). carry:
+    (c, n, hprev) each (B,H,ph). Returns (y (B,d), new carry)."""
+    c, n, hp = carry
+    h = cfg.n_heads
+    ph = cfg.d_model // h
+    rec = jnp.einsum("bhp,hpq->bhq", hp.astype(p["w_rec"].dtype), p["w_rec"])
+    gates = xt.reshape(xt.shape[0], h, 4 * ph) + rec
+    gates = gates.astype(jnp.float32) + p["bias"].reshape(h, 4 * ph)
+    gi, gf, gz, go = jnp.split(gates, 4, axis=-1)  # (B,H,ph)
+    i = jax.nn.sigmoid(gi)
+    f = jax.nn.sigmoid(gf + 1.0)
+    z = jnp.tanh(gz)
+    o = jax.nn.sigmoid(go)
+    c = f * c + i * z
+    n = f * n + i
+    hnew = o * c / jnp.maximum(n, 1.0)
+    y = hnew.reshape(xt.shape[0], -1)
+    return y, (c, n, hnew)
+
+
+def apply_slstm(p, cfg, x, state=None):
+    """x: (B,S,d). state: (c,n,h) each (B,H,ph) fp32. Sequential scan."""
+    b, s, d = x.shape
+    h = cfg.n_heads
+    ph = d // h
+    xin = L.rmsnorm(x, p["norm"]["w"])
+    xproj = jnp.einsum("bsd,de->bse", xin, p["w_in"])  # (B,S,4d)
+    if state is None:
+        z = jnp.zeros((b, h, ph), jnp.float32)
+        state = (z, z, z)
+
+    def body(carry, xt):
+        y, carry = _slstm_cell(p, cfg, xt, carry)
+        return carry, y
+
+    state, ys = jax.lax.scan(body, state, jnp.moveaxis(xproj, 1, 0))
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)  # (B,S,d)
+    x = x + y
+    # small FF (GeLU)
+    xf = L.rmsnorm(x, p["ff_norm"]["w"])
+    f = jax.nn.gelu(jnp.einsum("bsd,df->bsf", xf, p["w_ff_up"]))
+    x = x + jnp.einsum("bsf,fd->bsd", f, p["w_ff_down"])
+    return x, state
+
+
+def slstm_decode_step(p, cfg, x, state):
+    y, state = apply_slstm(p, cfg, x, state)
+    return y, state
+
+
+def slstm_state_shape(cfg, batch):
+    h = cfg.n_heads
+    ph = cfg.d_model // h
+    return (batch, h, ph)

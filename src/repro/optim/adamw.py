@@ -1,0 +1,91 @@
+"""AdamW in pure JAX: cosine schedule + warmup, global-norm clipping,
+dtype-configurable moments (bf16 moments for the largest archs so the
+optimizer state fits the per-chip HBM budget).
+
+State is a pytree with the same structure/sharding as params, so FSDP
+sharding rules apply transparently.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, *, base_lr, warmup_steps, total_steps,
+                    min_ratio=0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.where(warmup_steps <= 0, 1.0,
+                     jnp.minimum(1.0, step / jnp.maximum(1.0, warmup_steps)))
+    prog = jnp.clip((step - warmup_steps)
+                    / jnp.maximum(1.0, total_steps - warmup_steps), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return base_lr * warm * (min_ratio + (1 - min_ratio) * cos)
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    moment_dtype: str = "float32"  # "bfloat16" for the biggest archs
+
+
+class AdamW:
+    def __init__(self, cfg: OptConfig):
+        self.cfg = cfg
+
+    def init(self, params):
+        dt = jnp.dtype(self.cfg.moment_dtype)
+        zeros = lambda p: jnp.zeros(p.shape, dt)  # noqa: E731
+        return {
+            "mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def apply(self, grads, state, params):
+        c = self.cfg
+        step = state["step"] + 1
+        # global-norm clip (fp32 accumulation)
+        gsq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                  for g in jax.tree.leaves(grads))
+        gnorm = jnp.sqrt(gsq)
+        scale = jnp.minimum(1.0, c.grad_clip / jnp.maximum(gnorm, 1e-12))
+        lr = cosine_schedule(step, base_lr=c.lr, warmup_steps=c.warmup_steps,
+                             total_steps=c.total_steps)
+        bc1 = 1.0 - c.b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - c.b2 ** step.astype(jnp.float32)
+        mdt = jnp.dtype(c.moment_dtype)
+
+        def upd(p, g, mu, nu):
+            g = g.astype(jnp.float32) * scale
+            mu_n = c.b1 * mu.astype(jnp.float32) + (1 - c.b1) * g
+            nu_n = c.b2 * nu.astype(jnp.float32) + (1 - c.b2) * g * g
+            mhat = mu_n / bc1
+            vhat = nu_n / bc2
+            delta = mhat / (jnp.sqrt(vhat) + c.eps)
+            if p.ndim >= 2:  # decoupled weight decay on matrices only
+                delta = delta + c.weight_decay * p.astype(jnp.float32)
+            p_n = p.astype(jnp.float32) - lr * delta
+            return p_n.astype(p.dtype), mu_n.astype(mdt), nu_n.astype(mdt)
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_mu = treedef.flatten_up_to(state["mu"])
+        flat_nu = treedef.flatten_up_to(state["nu"])
+        out = [upd(p, g, m, n)
+               for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_state = {
+            "mu": treedef.unflatten([o[1] for o in out]),
+            "nu": treedef.unflatten([o[2] for o in out]),
+            "step": step,
+        }
+        return new_p, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,163 @@
+"""Post-SPMD HLO analysis: collective bytes with loop trip counts.
+
+XLA's ``cost_analysis`` and a naive text scan both count a while-loop
+body exactly once — but our layer stacks run under ``lax.scan``, so a
+collective inside the loop executes ``n_layers`` (or microbatch) times.
+This parser reconstructs the computation call graph from the HLO text
+(while bodies, conditionals, calls), extracts each while loop's trip
+count from its condition computation's comparison constant, and
+multiplies nested collective bytes through.
+
+Per-op bytes are the *result shape* bytes of the collective — the
+shard-local payload each device sends/receives (matching the
+"collective_bytes / (chips x link_bw)" roofline term definition).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "s32": 4, "u64": 8,
+    "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-_]+)\s*(?:\([^)]*\))?\s*->")
+_CALLED = re.compile(
+    r"(?:condition|body|to_apply|true_computation|false_computation|"
+    r"branch_computations)=\{?%?([\w\.\-_,% ]+)\}?")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class _Comp:
+    name: str
+    direct: dict = field(default_factory=dict)  # kind -> bytes
+    counts: dict = field(default_factory=dict)
+    whiles: list = field(default_factory=list)  # (body, cond, trip|None)
+    calls: list = field(default_factory=list)   # other called computations
+    max_const: int = 1  # largest s32 scalar constant (trip-count fallback)
+
+
+def _split_computations(hlo: str) -> dict:
+    comps: dict[str, _Comp] = {}
+    cur: _Comp | None = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if not s:
+            continue
+        if not raw.startswith((" ", "\t")) and (s.startswith("%")
+                                                or s.startswith("ENTRY")):
+            # computation header: "%name (args...) -> result {"
+            name = s.split("(", 1)[0].replace("ENTRY", "").strip()
+            name = name.lstrip("%").strip()
+            if name:
+                cur = _Comp(name)
+                comps[name] = cur
+                if s.startswith("ENTRY"):
+                    comps["__entry__"] = cur
+            continue
+        if cur is None or " = " not in s:
+            continue
+        lhs, rhs = s.split(" = ", 1)
+        # result is either "(tuple, shapes)" or a single "shape{layout}"
+        m = re.match(r"^(\([^)]*\)|\S+)\s+([\w\.\-]+)\s*\(", rhs)
+        if not m:
+            continue
+        result_part, opname = m.group(1), m.group(2)
+        base = opname.split(".")[0]
+        # s32 scalar constants (potential trip counts)
+        cm = re.match(r"s32\[\]\s+constant\((\d+)\)", rhs)
+        if cm:
+            cur.max_const = max(cur.max_const, int(cm.group(1)))
+        if base == "while":
+            cond = re.search(r"condition=%?([\w\.\-_]+)", rhs)
+            body = re.search(r"body=%?([\w\.\-_]+)", rhs)
+            trip = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', rhs)
+            if cond and body:
+                cur.whiles.append((body.group(1), cond.group(1),
+                                   int(trip.group(1)) if trip else None))
+            continue
+        matched = False
+        for k in COLLECTIVES:
+            if base == k or base == k + "-start":
+                cur.direct[k] = cur.direct.get(k, 0) + _shape_bytes(
+                    result_part)
+                cur.counts[k] = cur.counts.get(k, 0) + 1
+                matched = True
+                break
+        if matched:
+            continue
+        # other computation references (call / conditional / fusion)
+        for m in re.finditer(
+                r"(?:to_apply|true_computation|false_computation)"
+                r"=%?([\w\.\-_]+)", rhs):
+            cur.calls.append(m.group(1))
+        bm = re.search(r"branch_computations=\{([^}]*)\}", rhs)
+        if bm:
+            for b in bm.group(1).split(","):
+                cur.calls.append(b.strip().lstrip("%"))
+    return comps
+
+
+def collective_bytes(hlo: str) -> dict:
+    """Trip-count-weighted collective bytes + counts for an HLO module."""
+    comps = _split_computations(hlo)
+    entry = comps.get("__entry__")
+    if entry is None:
+        return {"bytes": {}, "counts": {}, "total_bytes": 0}
+
+    memo: dict[str, tuple] = {}
+
+    def visit(name: str, depth=0) -> tuple:
+        if name in memo:
+            return memo[name]
+        comp = comps.get(name)
+        if comp is None or depth > 64:
+            return ({}, {})
+        memo[name] = ({}, {})  # cycle guard
+        by = dict(comp.direct)
+        ct = dict(comp.counts)
+
+        def add(src_b, src_c, mult=1.0):
+            for k, v in src_b.items():
+                by[k] = by.get(k, 0) + v * mult
+            for k, v in src_c.items():
+                ct[k] = ct.get(k, 0) + v * mult
+
+        for body, cond, trip in comp.whiles:
+            if trip is None:
+                trip = comps[cond].max_const if cond in comps else 1
+            b_b, b_c = visit(body, depth + 1)
+            add(b_b, b_c, max(1, trip))
+            c_b, c_c = visit(cond, depth + 1)
+            add(c_b, c_c, max(1, trip))
+        for c in comp.calls:
+            add(*visit(c, depth + 1))
+        memo[name] = (by, ct)
+        return memo[name]
+
+    by, ct = visit(entry.name)
+    by = {k: int(v) for k, v in by.items() if ct.get(k)}
+    return {"bytes": by,
+            "counts": {k: int(v) for k, v in ct.items() if v},
+            "total_bytes": int(sum(by.values()))}

@@ -1,0 +1,100 @@
+"""Checkpointing: atomicity, keep-k, async, corrupt-file recovery."""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, load_pytree, save_pytree
+
+
+@pytest.fixture
+def tree():
+    k = jax.random.PRNGKey(0)
+    return {
+        "w": jax.random.normal(k, (16, 8), jnp.float32),
+        "b16": jax.random.normal(k, (8,), jnp.float32).astype(jnp.bfloat16),
+        "nested": {"step": jnp.asarray(7, jnp.int32)},
+    }
+
+
+def assert_tree_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        assert x.dtype == y.dtype
+        np.testing.assert_array_equal(
+            np.asarray(x, np.float32), np.asarray(y, np.float32))
+
+
+def test_roundtrip_preserves_dtypes_and_values(tmp_path, tree):
+    p = str(tmp_path / "ck.npz")
+    save_pytree(p, tree)
+    got = load_pytree(p, tree)
+    assert_tree_equal(tree, got)
+
+
+def test_shape_mismatch_rejected(tmp_path, tree):
+    p = str(tmp_path / "ck.npz")
+    save_pytree(p, tree)
+    bad = dict(tree, w=jnp.zeros((4, 4)))
+    with pytest.raises(ValueError):
+        load_pytree(p, bad)
+
+
+def test_keep_k_garbage_collection(tmp_path, tree):
+    m = CheckpointManager(str(tmp_path), keep=2)
+    for s in (10, 20, 30, 40):
+        m.save(s, tree, blocking=True)
+    assert m.steps() == [30, 40]
+    files = os.listdir(tmp_path)
+    assert sum(f.endswith(".npz") for f in files) == 2
+
+
+def test_async_save_then_restore(tmp_path, tree):
+    m = CheckpointManager(str(tmp_path), keep=3)
+    m.save(1, tree, blocking=False)
+    m.wait()
+    step, got = m.restore_latest(tree)
+    assert step == 1
+    assert_tree_equal(tree, got)
+
+
+def test_restore_skips_corrupt_checkpoint(tmp_path, tree):
+    """A truncated newest file (crash mid-write after marker) falls back
+    to the previous valid step."""
+    m = CheckpointManager(str(tmp_path), keep=5)
+    m.save(1, tree, blocking=True)
+    m.save(2, tree, blocking=True)
+    p2 = os.path.join(str(tmp_path), "step_00000002.npz")
+    with open(p2, "wb") as f:
+        f.write(b"corrupt")
+    step, got = m.restore_latest(tree)
+    assert step == 1
+    assert_tree_equal(tree, got)
+
+
+def test_missing_marker_means_invalid(tmp_path, tree):
+    """A .npz without its .done marker (killed before rename) is not a
+    valid step."""
+    m = CheckpointManager(str(tmp_path), keep=5)
+    m.save(3, tree, blocking=True)
+    os.remove(os.path.join(str(tmp_path), "step_00000003.npz.done"))
+    assert m.steps() == []
+    step, got = m.restore_latest(tree)
+    assert step is None and got is None
+
+
+def test_marker_carries_metadata(tmp_path, tree):
+    m = CheckpointManager(str(tmp_path), keep=5)
+    m.save(5, tree, blocking=True, extra={"loss": 1.25})
+    with open(os.path.join(str(tmp_path), "step_00000005.npz.done")) as f:
+        meta = json.load(f)
+    assert meta["step"] == 5 and meta["loss"] == 1.25 and "digest" in meta
+
+
+def test_restore_empty_dir(tmp_path, tree):
+    m = CheckpointManager(str(tmp_path))
+    assert m.restore_latest(tree) == (None, None)

@@ -1,0 +1,162 @@
+"""Fault tolerance: restart/replay, stragglers, compression, remesh."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.distributed import compression as GC
+from repro.distributed.fault_tolerance import (RestartPolicy,
+                                               StragglerMonitor)
+
+
+# ---------------------------------------------------------------------------
+# restart / replay
+# ---------------------------------------------------------------------------
+
+def _toy_problem():
+    """state = params dict; step = one SGD step on a quadratic; data_at
+    deterministic."""
+    w0 = {"w": jnp.ones((4,), jnp.float32)}
+
+    def data_at(step):
+        return jnp.asarray(np.random.default_rng(step).normal(size=4),
+                           jnp.float32)
+
+    @jax.jit
+    def step_fn(state, x):
+        g = jax.grad(lambda w: jnp.sum((w["w"] - x) ** 2))(state)
+        return {"w": state["w"] - 0.1 * g["w"]}
+
+    return w0, step_fn, data_at
+
+
+def test_restart_reproduces_failure_free_run(tmp_path):
+    w0, step_fn, data_at = _toy_problem()
+
+    # failure-free reference
+    ref = RestartPolicy(CheckpointManager(str(tmp_path / "a"), keep=3),
+                        checkpoint_every=5)
+    want, step = ref.run(state=w0, step_fn=step_fn, data_at=data_at,
+                         n_steps=20)
+    assert step == 20
+
+    # crash at steps 7 and 13, restart from checkpoints, same result
+    crashed = {7: False, 13: False}
+
+    def inject(step):
+        if step in crashed and not crashed[step]:
+            crashed[step] = True
+            raise RuntimeError(f"node lost at step {step}")
+
+    pol = RestartPolicy(CheckpointManager(str(tmp_path / "b"), keep=3),
+                        checkpoint_every=5)
+    got, step = pol.run(state=w0, step_fn=step_fn, data_at=data_at,
+                        n_steps=20, inject_failure=inject)
+    assert step == 20
+    assert pol.restarts == 2
+    np.testing.assert_allclose(np.asarray(got["w"]), np.asarray(want["w"]),
+                               rtol=1e-6)
+
+
+def test_restart_limit_raises(tmp_path):
+    w0, step_fn, data_at = _toy_problem()
+
+    def always_fail(step):
+        raise RuntimeError("flaky")
+
+    pol = RestartPolicy(CheckpointManager(str(tmp_path), keep=2),
+                        checkpoint_every=5, max_restarts=2)
+    with pytest.raises(RuntimeError, match="exceeded"):
+        pol.run(state=w0, step_fn=step_fn, data_at=data_at, n_steps=10,
+                inject_failure=always_fail)
+
+
+# ---------------------------------------------------------------------------
+# stragglers
+# ---------------------------------------------------------------------------
+
+def test_straggler_detection():
+    m = StragglerMonitor(factor=3.0, min_samples=3)
+    for i in range(5):
+        assert not m.observe(i, 1.0)
+    assert m.observe(5, 10.0)          # 10x the EMA -> straggler
+    assert len(m.events) == 1
+    assert not m.observe(6, 1.1)       # normal step unaffected
+    # the straggler did not poison the EMA
+    assert m.ema_s < 1.5
+
+
+def test_straggler_needs_warmup():
+    m = StragglerMonitor(min_samples=3)
+    assert not m.observe(0, 100.0)     # first sample can't be judged
+    assert m.deadline_s == float("inf")
+
+
+# ---------------------------------------------------------------------------
+# gradient compression + error feedback
+# ---------------------------------------------------------------------------
+
+def test_compress_roundtrip_bounded_error():
+    g = jax.random.normal(jax.random.PRNGKey(0), (1000,))
+    codes, scale, shape = GC.compress(g, block=256)
+    rec = GC.decompress(codes, scale, shape)
+    blocks = np.asarray(g).reshape(-1)
+    err = np.abs(np.asarray(rec) - blocks)
+    # error bounded by half a quantization step per block
+    step = np.repeat(np.asarray(scale).reshape(-1), 256)[: blocks.size]
+    assert (err <= step / 2 + 1e-7).all()
+
+
+def test_compress_handles_non_multiple_sizes():
+    g = jax.random.normal(jax.random.PRNGKey(1), (3, 7, 11))
+    codes, scale, shape = GC.compress(g, block=256)
+    rec = GC.decompress(codes, scale, shape)
+    assert rec.shape == g.shape
+    assert float(jnp.max(jnp.abs(rec - g))) < 0.1
+
+
+def test_error_feedback_preserves_gradient_sum():
+    """Sum of compressed grads + final residual == sum of true grads:
+    error feedback loses nothing over time."""
+    key = jax.random.PRNGKey(2)
+    err = jnp.zeros((512,), jnp.float32)
+    total_true = jnp.zeros((512,))
+    total_sent = jnp.zeros((512,))
+    for i in range(20):
+        key, k = jax.random.split(key)
+        g = jax.random.normal(k, (512,))
+        g_hat, err = GC.roundtrip_with_feedback(g, err, block=128)
+        total_true += g
+        total_sent += g_hat
+    np.testing.assert_allclose(
+        np.asarray(total_sent + err), np.asarray(total_true), atol=1e-4)
+
+
+def test_tree_apply():
+    params = {"a": jnp.ones((100,)), "b": {"c": jnp.ones((37,))}}
+    grads = jax.tree.map(
+        lambda p: jax.random.normal(jax.random.PRNGKey(0), p.shape), params)
+    err = GC.init_error_state(params)
+    g_hat, new_err = GC.apply(grads, err, block=64)
+    assert jax.tree.structure(g_hat) == jax.tree.structure(grads)
+    for g, gh in zip(jax.tree.leaves(grads), jax.tree.leaves(g_hat)):
+        assert float(jnp.max(jnp.abs(g - gh))) < 0.1
+
+
+# ---------------------------------------------------------------------------
+# elastic remesh
+# ---------------------------------------------------------------------------
+
+def test_remesh_single_device_roundtrip():
+    """Re-placing a tree onto a (1,1) mesh preserves values (the full
+    multi-device path is exercised by the dry-run subprocess tests)."""
+    from repro.distributed.fault_tolerance import remesh
+    from repro.launch.mesh import make_mesh
+    state = {"wq": jax.random.normal(jax.random.PRNGKey(0), (8, 16))}
+    mesh = make_mesh((1, 1), ("data", "model"))
+    got = remesh(state, mesh)
+    np.testing.assert_array_equal(np.asarray(got["wq"]),
+                                  np.asarray(state["wq"]))

@@ -1,0 +1,171 @@
+"""Model-zoo behaviour: every assigned arch, reduced config.
+
+The strongest check is prefill+decode == full-forward consistency: the
+incremental path (KV/state caches) must produce the same logits as the
+full-sequence path on the same tokens.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.models import model as MD
+
+ARCHS = registry.list_archs()
+KEY = jax.random.PRNGKey(7)
+
+
+@pytest.fixture(scope="module")
+def built():
+    """params + smoke config per arch (built once)."""
+    out = {}
+    for name in ARCHS:
+        cfg = registry.get_smoke_config(name)
+        out[name] = (cfg, MD.init_params(KEY, cfg))
+    return out
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_loss_finite_and_grads_flow(built, arch):
+    cfg, params = built[arch]
+    batch = MD.make_dummy_batch(KEY, cfg, 2, 32, "train")
+    loss, _ = MD.loss_fn(params, cfg, batch)
+    assert jnp.isfinite(loss)
+    grads = jax.grad(lambda p: MD.loss_fn(p, cfg, batch)[0])(params)
+    leaves = jax.tree.leaves(grads)
+    assert all(np.isfinite(np.asarray(g, np.float32)).all() for g in leaves)
+    assert any(float(jnp.abs(g.astype(jnp.float32)).max()) > 0
+               for g in leaves)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_matches_forward(built, arch):
+    """Greedy decode continuation must equal the full-forward logits."""
+    cfg, params = built[arch]
+    if cfg.is_moe:
+        # sharpen the router so top-k decisions sit far from ties —
+        # routing flips from path-dependent rounding are a real MoE
+        # inference property, not the cache bug this test hunts — and
+        # raise the capacity factor so no run drops tokens (capacity
+        # depends on the co-batched token count, so drop patterns are
+        # legitimately path-dependent under the default factor).
+        params = jax.tree_util.tree_map_with_path(
+            lambda p, x: x * 16.0
+            if any(getattr(k, "key", "") == "router" for k in p) else x,
+            params)
+        cfg = cfg.replace(moe_capacity_factor=64.0)
+    s_total = 24
+    batch = MD.make_dummy_batch(KEY, cfg, 2, s_total, "prefill")
+    toks = batch["tokens"]          # vlm: s_total - n_image_tokens cols
+    s_tok = toks.shape[1]
+    s_prompt = s_tok - 8            # decode the last 8 text tokens
+    n_prefix = cfg.n_image_tokens if cfg.family == "vlm" else 0
+
+    # full forward over all tokens
+    full_logits = MD.forward(params, cfg, batch)
+
+    # prefill on the prompt prefix, then decode the rest token-by-token
+    prompt = dict(batch, tokens=toks[:, :s_prompt])
+    logits, cache = MD.prefill(params, cfg, prompt, capacity=s_total + 4)
+    np.testing.assert_allclose(
+        np.asarray(logits, np.float32),
+        np.asarray(full_logits[:, n_prefix + s_prompt - 1], np.float32),
+        atol=2e-2, rtol=2e-2)
+
+    tol = 6e-2 if cfg.is_moe else 3e-2  # router-weight products amplify
+    for i in range(s_prompt, s_tok):    # bf16 rounding slightly
+        logits, cache = MD.decode_step(params, cfg, toks[:, i:i + 1], cache)
+        np.testing.assert_allclose(
+            np.asarray(logits, np.float32),
+            np.asarray(full_logits[:, n_prefix + i], np.float32),
+            atol=tol, rtol=tol,
+            err_msg=f"{arch}: decode step {i} diverges from forward")
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_cache_spec_matches_init_cache(built, arch):
+    cfg, _ = built[arch]
+    spec = MD.cache_spec(cfg, 2, 32)
+    cache = MD.init_cache(cfg, 2, 32)
+    assert jax.tree.map(lambda s: (s.shape, s.dtype), spec) == \
+        jax.tree.map(lambda a: (a.shape, a.dtype), cache)
+
+
+def test_sliding_window_cache_rolls():
+    """h2o-danube SWA: cache capacity is bounded by the window and the
+    decode path stays correct past the window boundary."""
+    cfg = registry.get_smoke_config("h2o-danube-1.8b")
+    assert cfg.sliding_window == 32
+    params = MD.init_params(KEY, cfg)
+    cache = MD.init_cache(cfg, 1, 128)
+    assert cache["k"].shape[2] == 32  # capacity clamped to window
+
+    s_total = 48  # crosses the window
+    batch = MD.make_dummy_batch(KEY, cfg, 1, s_total, "prefill")
+    full_logits = MD.forward(params, cfg, batch)
+    prompt = dict(batch, tokens=batch["tokens"][:, :40])
+    logits, cache = MD.prefill(params, cfg, prompt, capacity=64)
+    np.testing.assert_allclose(
+        np.asarray(logits, np.float32),
+        np.asarray(full_logits[:, 39], np.float32), atol=3e-2, rtol=3e-2)
+    for i in range(40, s_total):
+        logits, cache = MD.decode_step(
+            params, cfg, batch["tokens"][:, i:i + 1], cache)
+        np.testing.assert_allclose(
+            np.asarray(logits, np.float32),
+            np.asarray(full_logits[:, i], np.float32),
+            atol=4e-2, rtol=4e-2, err_msg=f"SWA decode step {i}")
+
+
+def test_vlm_prefix_carries_no_loss():
+    cfg = registry.get_smoke_config("internvl2-26b")
+    params = MD.init_params(KEY, cfg)
+    batch = MD.make_dummy_batch(KEY, cfg, 2, 24, "train")
+    assert "images" in batch
+    loss, _ = MD.loss_fn(params, cfg, batch)
+    assert jnp.isfinite(loss)
+    # logits sliced to label length inside loss_fn
+    logits = MD.forward(params, cfg, batch)
+    assert logits.shape[1] == batch["labels"].shape[1] + cfg.n_image_tokens
+
+
+def test_whisper_encoder_decoder_shapes():
+    cfg = registry.get_smoke_config("whisper-large-v3")
+    params = MD.init_params(KEY, cfg)
+    batch = MD.make_dummy_batch(KEY, cfg, 2, 16, "prefill")
+    assert batch["frames"].shape == (2, cfg.encoder_len, cfg.d_model)
+    logits, cache = MD.prefill(params, cfg, batch, capacity=24)
+    assert cache["cross_k"].shape[2] == cfg.encoder_len
+    assert logits.shape == (2, cfg.vocab_size)
+
+
+def test_moe_router_probabilities_normalized():
+    from repro.models import moe as M
+    cfg = registry.get_smoke_config("deepseek-moe-16b")
+    params = MD.init_params(KEY, cfg)
+    # shared experts + routed top-k present in layer params
+    lp = params["layers"]
+    assert "moe" in lp
+
+
+@pytest.mark.parametrize("arch", ["xlstm-350m", "zamba2-2.7b"])
+def test_recurrent_state_is_constant_size(built, arch):
+    """O(1)/token decode state — the long_500k enabling property."""
+    cfg, params = built[arch]
+    c16 = MD.cache_spec(cfg, 1, 16)
+    c4k = MD.cache_spec(cfg, 1, 4096)
+    for name in ("mlstm", "ssm", "conv", "slstm_c"):
+        if name in c16:
+            assert c16[name].shape == c4k[name].shape
+
+
+def test_param_count_analytical_close_to_actual():
+    """ArchConfig.param_count() ~ actual init (within 2% on smoke)."""
+    for arch in ("qwen1.5-0.5b", "phi3-mini-3.8b", "deepseek-moe-16b"):
+        cfg = registry.get_smoke_config(arch)
+        params = MD.init_params(KEY, cfg)
+        actual = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+        assert abs(cfg.param_count() - actual) / actual < 0.02, arch

@@ -1,0 +1,205 @@
+"""Validation of the paper's quantitative claims (Fig 4, Fig 5, §5.1).
+
+Each test asserts our re-derived ratio lands in a band around the
+paper's figure. Bands are the paper's own numbers widened by a
+documented tolerance; where the paper's panels are mutually
+inconsistent with its Table 1 (see DESIGN.md §6 / EXPERIMENTS.md §Paper
+-claims) the asserted band covers our first-principles value and the
+discrepancy is recorded rather than hidden.
+
+Scenario runs are cached per module — the underlying jaxpr traces of
+llama2-70b/mixtral are the expensive part.
+"""
+from __future__ import annotations
+
+import pytest
+
+from repro.core import profiles as HW
+from repro.core.metrics import battery_queries
+from repro.core.scenarios import run_cloud, run_mobile
+
+
+@pytest.fixture(scope="module")
+def cloud():
+    return {(m, a): run_cloud(m, a)
+            for m in ("llama2-70b", "mixtral-8x22b")
+            for a in ("gqa", "mha")}
+
+
+@pytest.fixture(scope="module")
+def mobile():
+    return {m: run_mobile(m) for m in ("llama2-7b", "mistral-7b")}
+
+
+# ---------------------------------------------------------------------------
+# Table 1 / §2 composition
+# ---------------------------------------------------------------------------
+
+def test_table1_server_composition():
+    """24 DIMMs x 16 chips reproduces the Table-1 server row exactly."""
+    comp = HW.check_composition()
+    for got, want in comp.values():
+        assert abs(got - want) < 1e-6
+
+
+def test_dimm_aggregates():
+    """§2.2: one DIMM = 32GB, 1.6 TB/s, 128 TFLOPs."""
+    d = HW.pim_dimm()
+    assert abs(d.mem_bw_gbs - 1638.4) < 1e-6
+    assert abs(d.tops - 128) < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Fig 4 — cloud
+# ---------------------------------------------------------------------------
+
+def test_cloud_ttft_gqa_about_3x(cloud):
+    """§4.1.1: GQA first-token latency ~3x the DGX-H100."""
+    for m in ("llama2-70b", "mixtral-8x22b"):
+        assert 2.4 <= cloud[(m, "gqa")]["ratios"]["ttft"] <= 3.3
+
+
+def test_cloud_ttft_mha_about_75pct_longer(cloud):
+    """§4.1.1: MHA first-token latency ~1.75x the DGX-H100."""
+    for m in ("llama2-70b", "mixtral-8x22b"):
+        assert 1.3 <= cloud[(m, "mha")]["ratios"]["ttft"] <= 2.1
+
+
+def test_cloud_decode_tokens_per_s_band(cloud):
+    """§4.1.2: 2.23x-2.75x more tokens/s (paper band; +-25% tol —
+    our GQA cells sit slightly above, MHA slightly below, see
+    EXPERIMENTS.md §Paper-claims)."""
+    for k, r in cloud.items():
+        assert 2.23 * 0.75 <= r["ratios"]["tokens_per_s"] <= 2.75 * 1.25, k
+
+
+def test_cloud_decode_energy_per_token(cloud):
+    """§4.1.2: 15-40%% less energy per token (ratio 1.18-1.67; +25% tol
+    above — our model favors PIM more at MHA)."""
+    for k, r in cloud.items():
+        assert 1.18 <= r["ratios"]["energy_per_token"] <= 1.67 * 1.25, k
+
+
+def test_cloud_qps_advantage(cloud):
+    """§4.1.3: PIM processes more queries/s (paper avg +55%; our
+    first-principles value is higher — the paper's own panel ratios
+    imply ~+74%, see EXPERIMENTS.md). Assert the direction + ceiling."""
+    ratios = [r["ratios"]["qps"] for r in cloud.values()]
+    avg = sum(ratios) / len(ratios)
+    assert all(x > 1.4 for x in ratios)
+    assert 1.5 <= avg <= 2.2
+
+
+def test_cloud_energy_per_query_equivalent(cloud):
+    """§4.1.3: 'consuming equivalent energy per query'."""
+    for k, r in cloud.items():
+        assert 0.85 <= r["ratios"]["energy_per_query"] <= 1.35, k
+
+
+def test_cloud_tco_band(cloud):
+    """§5.1/abstract: TCO/QPS up to 6.94x better (6.2-6.94; +15% tol)."""
+    ratios = [r["ratios"]["tco_per_qps"] for r in cloud.values()]
+    assert all(6.2 * 0.9 <= x <= 6.94 * 1.15 for x in ratios), ratios
+
+
+# ---------------------------------------------------------------------------
+# Fig 5 — mobile
+# ---------------------------------------------------------------------------
+
+def test_mobile_ttft_similar(mobile):
+    """§4.2.1: all profiles achieve similar first-token latency."""
+    for r in mobile.values():
+        tt = [m.ttft_s for m in r["profiles"].values()]
+        assert max(tt) / min(tt) < 1.4, tt
+
+
+def test_mobile_encode_energy_savings():
+    """§4.2.1: encode energy savings ~28.5% (A17), ~16.4%/15.3%
+    (Snapdragon/Dimensity) — +-7pp tolerance."""
+    from repro.configs import registry
+    from repro.core.scenarios import (MOBILE_ORCHESTRATION_S,
+                                      MOBILE_PROFILES)
+    from repro.core.simulator import LLMSimulator, SimConfig
+    cfg = registry.get_config("llama2-7b")
+    enc = {}
+    for hw in MOBILE_PROFILES:
+        sim = LLMSimulator(cfg, hw, SimConfig(
+            weight_bits=4, act_bits=16,
+            orchestration_s=MOBILE_ORCHESTRATION_S))
+        enc[hw.name] = sim.encode(1, 1000).energy_j
+    pim = enc[MOBILE_PROFILES[0].name]
+    saving = {k: 1 - pim / v for k, v in enc.items() if not
+              k.startswith("pim")}
+    assert abs(saving["a17-pro"] - 0.285) < 0.07, saving
+    assert abs(saving["snapdragon-8-gen3"] - 0.164) < 0.07, saving
+    assert abs(saving["dimensity-9300"] - 0.153) < 0.07, saving
+
+
+def test_mobile_tokens_per_s(mobile):
+    """§4.2.2: +49.6% vs A17 Pro, +24.5%/+24.7% vs the others
+    (+-7% tol)."""
+    for r in mobile.values():
+        ra = r["ratios"]
+        assert 1.40 <= ra["a17-pro"]["tokens_per_s"] <= 1.60
+        assert 1.18 <= ra["snapdragon-8-gen3"]["tokens_per_s"] <= 1.35
+        assert 1.18 <= ra["dimensity-9300"]["tokens_per_s"] <= 1.35
+
+
+def test_mobile_energy_per_token_10_to_20x(mobile):
+    """Abstract/§4.2.2: 20x less energy/token vs A17, 10x vs others."""
+    for r in mobile.values():
+        ra = r["ratios"]
+        assert 17.0 <= ra["a17-pro"]["energy_per_token"] <= 22.0
+        assert 8.5 <= ra["snapdragon-8-gen3"]["energy_per_token"] <= 11.5
+        assert 8.5 <= ra["dimensity-9300"]["energy_per_token"] <= 11.5
+
+
+def test_mobile_qps_25_to_45pct(mobile):
+    """§4.2.3/abstract: ~45% more QPS than A17, ~25% more than others."""
+    for r in mobile.values():
+        ra = r["ratios"]
+        assert 1.35 <= ra["a17-pro"]["qps"] <= 1.55
+        assert 1.18 <= ra["snapdragon-8-gen3"]["qps"] <= 1.35
+        assert 1.18 <= ra["dimensity-9300"]["qps"] <= 1.35
+
+
+def test_mobile_energy_per_query_band(mobile):
+    """§4.2.3: 13.4x less energy than A17, 6.9x than others (+-10%)."""
+    for r in mobile.values():
+        ra = r["ratios"]
+        assert 11.5 <= ra["a17-pro"]["energy_per_query"] <= 14.8
+        assert 6.0 <= ra["snapdragon-8-gen3"]["energy_per_query"] <= 7.6
+        assert 6.0 <= ra["dimensity-9300"]["energy_per_query"] <= 7.6
+
+
+def test_mobile_1000_token_epq_band():
+    """§5.1: at 1000 output tokens the EPQ ratios rise to 9.8-19.5x."""
+    r = run_mobile("llama2-7b", 1000, 1000)
+    ra = r["ratios"]
+    assert 17.5 <= ra["a17-pro"]["energy_per_query"] <= 20.5
+    assert 9.0 <= ra["snapdragon-8-gen3"]["energy_per_query"] <= 10.8
+
+
+def test_mobile_battery_life_scales_with_epq(mobile):
+    """§5.1: 6.9-13.4x more inferences per charge == the EPQ ratio."""
+    r = mobile["llama2-7b"]
+    pim_name = [k for k in r["profiles"] if k.startswith("pim")][0]
+    pim = r["profiles"][pim_name]
+    a17 = r["profiles"]["a17-pro"]
+    wh = 15.0  # representative phone battery
+    ratio = (battery_queries(wh, pim.energy_per_query_j)
+             / battery_queries(wh, a17.energy_per_query_j))
+    assert abs(ratio - r["ratios"]["a17-pro"]["energy_per_query"]) < 1e-9
+
+
+# ---------------------------------------------------------------------------
+# §5.1 — long generation
+# ---------------------------------------------------------------------------
+
+def test_cloud_advantage_grows_with_output_len(cloud):
+    """§5.1: at 1000/1000 the PIM advantage is larger than at 1000/100."""
+    r_long = run_cloud("llama2-70b", "gqa", 1000, 1000)
+    r_short = cloud[("llama2-70b", "gqa")]
+    assert r_long["ratios"]["qps"] > r_short["ratios"]["qps"]
+    assert (r_long["ratios"]["energy_per_query"]
+            > r_short["ratios"]["energy_per_query"])

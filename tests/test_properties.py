@@ -1,0 +1,160 @@
+"""Property-based tests (hypothesis) on system invariants."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import trace as T
+from repro.core.profiles import HardwareProfile, PIM_AI_CHIP
+from repro.core.simulator import SimConfig, _op_cost
+from repro.data import DataConfig, SyntheticLMStream
+from repro.distributed import compression as GC
+from repro.kernels import ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# simulator cost model invariants
+# ---------------------------------------------------------------------------
+
+@given(flops=st.floats(1e6, 1e15), wbytes=st.floats(1e3, 1e12),
+       obytes=st.floats(1e2, 1e9))
+@settings(**SETTINGS)
+def test_op_cost_nonnegative_and_roofline(flops, wbytes, obytes):
+    op = T.OpRecord("gemm", "dot_general", flops=flops,
+                    in_bytes=wbytes + obytes, out_bytes=obytes,
+                    weight_bytes=wbytes)
+    r = _op_cost(op, PIM_AI_CHIP, SimConfig())
+    assert r.seconds >= 0 and r.energy_j >= 0
+    assert r.seconds == max(r.compute_s, r.memory_s)
+
+
+@given(flops=st.floats(1e6, 1e12), bits=st.sampled_from([4, 8, 16]))
+@settings(**SETTINGS)
+def test_lower_weight_bits_never_slower_or_hungrier(flops, bits):
+    op = T.OpRecord("gemv", "dot_general", flops=flops, in_bytes=2e9,
+                    out_bytes=1e4, weight_bytes=2e9)
+    r16 = _op_cost(op, PIM_AI_CHIP, SimConfig(weight_bits=16))
+    rb = _op_cost(op, PIM_AI_CHIP, SimConfig(weight_bits=bits))
+    assert rb.seconds <= r16.seconds + 1e-12
+    assert rb.energy_j <= r16.energy_j + 1e-12
+
+
+@given(bw=st.floats(10, 10_000), pj=st.floats(0.1, 50))
+@settings(**SETTINGS)
+def test_energy_independent_of_bandwidth(bw, pj):
+    """E = bits * pJ/bit: bandwidth changes time, never energy."""
+    op = T.OpRecord("gemv", "dot_general", flops=1e9, in_bytes=1e9,
+                    out_bytes=1e3, weight_bytes=1e9)
+    hw1 = HardwareProfile("a", 10, 0.4, bw, pj, 10, 10, 1, 1)
+    hw2 = HardwareProfile("b", 10, 0.4, bw * 3, pj, 10, 10, 1, 1)
+    r1 = _op_cost(op, hw1, SimConfig())
+    r2 = _op_cost(op, hw2, SimConfig())
+    assert r1.energy_j == r2.energy_j
+    assert r2.memory_s < r1.memory_s
+
+
+# ---------------------------------------------------------------------------
+# tracer invariants
+# ---------------------------------------------------------------------------
+
+@given(m=st.integers(1, 64), k=st.integers(1, 64), n=st.integers(1, 64))
+@settings(**SETTINGS)
+def test_matmul_flop_formula(m, k, n):
+    ops = T.trace_ops(
+        lambda a, b: a @ b,
+        jax.ShapeDtypeStruct((m, k), jnp.float32),
+        jax.ShapeDtypeStruct((k, n), jnp.float32))
+    mm = [o for o in ops if o.prim == "dot_general"][0]
+    assert mm.flops == 2 * m * k * n
+    assert mm.kind == ("gemv" if m == 1 else "gemm")
+
+
+@given(trips=st.integers(1, 16))
+@settings(max_examples=8, deadline=None)
+def test_scan_linearity(trips):
+    def f(x, w):
+        def body(h, _):
+            return h @ w, None
+        h, _ = jax.lax.scan(body, x, None, length=trips)
+        return h
+
+    ops = T.trace_ops(f, jax.ShapeDtypeStruct((4, 8), jnp.float32),
+                      jax.ShapeDtypeStruct((8, 8), jnp.float32))
+    total = sum(o.flops for o in ops if o.kind in ("gemm", "gemv"))
+    assert total == trips * 2 * 4 * 8 * 8
+
+
+# ---------------------------------------------------------------------------
+# quantization invariants
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 1000), scale=st.floats(0.01, 10.0))
+@settings(**SETTINGS)
+def test_int4_roundtrip_bound(seed, scale):
+    w = jax.random.normal(jax.random.PRNGKey(seed), (256, 32)) * scale
+    packed, scales = ref.quantize_int4(w, group=128)
+    assert packed.dtype == jnp.uint8
+    assert packed.shape == (128, 32)
+    # reconstruct and bound error by half a step
+    lo = (packed & 0xF).astype(jnp.int8)
+    hi = (packed >> 4).astype(jnp.int8)
+    lo = jnp.where(lo >= 8, lo - 16, lo)
+    hi = jnp.where(hi >= 8, hi - 16, hi)
+    wq = jnp.zeros(w.shape, jnp.int8).at[0::2].set(lo).at[1::2].set(hi)
+    deq = wq.astype(jnp.float32) * jnp.repeat(scales, 128, axis=0)
+    err = np.abs(np.asarray(w - deq))
+    bound = np.repeat(np.asarray(scales), 128, axis=0) / 2 + 1e-6
+    assert (err <= bound).all()
+
+
+@given(seed=st.integers(0, 1000), n=st.integers(1, 2000))
+@settings(**SETTINGS)
+def test_grad_compression_error_bound(seed, n):
+    g = jax.random.normal(jax.random.PRNGKey(seed), (n,))
+    codes, scale, shape = GC.compress(g, block=256)
+    rec = GC.decompress(codes, scale, shape)
+    assert rec.shape == g.shape
+    # |err| <= scale/2 per element, scale = blockmax/127
+    err = float(jnp.max(jnp.abs(rec - g)))
+    assert err <= float(jnp.max(scale)) / 2 + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# data pipeline invariants
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 100), step=st.integers(0, 100),
+       hosts=st.sampled_from([1, 2, 4, 8]))
+@settings(**SETTINGS)
+def test_host_shards_partition(seed, step, hosts):
+    cfg = DataConfig(vocab_size=64, seq_len=16, global_batch=8, seed=seed)
+    full = SyntheticLMStream(cfg).batch_at(step)["tokens"]
+    parts = [SyntheticLMStream(cfg, i, hosts).batch_at(step)["tokens"]
+             for i in range(hosts)]
+    np.testing.assert_array_equal(np.concatenate(parts), full)
+
+
+# ---------------------------------------------------------------------------
+# attention invariants
+# ---------------------------------------------------------------------------
+
+@given(s=st.integers(2, 64), seed=st.integers(0, 50))
+@settings(max_examples=10, deadline=None)
+def test_causal_attention_prefix_invariance(s, seed):
+    """Causal attention output at position i depends only on tokens
+    <= i: truncating the suffix never changes the prefix output."""
+    from repro.models.attention import reference_attention
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(k1, (1, s, 2, 8), jnp.float32)
+    k = jax.random.normal(k2, (1, s, 2, 8), jnp.float32)
+    v = jax.random.normal(k3, (1, s, 2, 8), jnp.float32)
+    full = reference_attention(q, k, v, causal=True)
+    cut = s // 2
+    part = reference_attention(q[:, :cut], k[:, :cut], v[:, :cut],
+                               causal=True)
+    np.testing.assert_allclose(np.asarray(full[:, :cut]), np.asarray(part),
+                               atol=1e-5, rtol=1e-5)

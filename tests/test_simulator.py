@@ -1,0 +1,171 @@
+"""Unit behaviour of the analytical PIM-AI simulator (paper §3.1)."""
+from __future__ import annotations
+
+import pytest
+
+from repro.configs import registry
+from repro.core import profiles as HW
+from repro.core import trace as T
+from repro.core.simulator import (LLMSimulator, SimConfig, _host_transfer,
+                                  _op_cost)
+
+CFG = registry.get_config("llama2-7b")
+
+
+def make_sim(hw=HW.PIM_AI_MOBILE, **kw):
+    return LLMSimulator(CFG, hw, SimConfig(**kw))
+
+
+# ---------------------------------------------------------------------------
+# per-op roofline
+# ---------------------------------------------------------------------------
+
+def test_weight_gemm_is_roofline_max():
+    """A weight GEMM costs max(compute, weight-stream) seconds."""
+    op = T.OpRecord("gemm", "dot_general", flops=1e12, in_bytes=2e9,
+                    out_bytes=1e6, weight_bytes=2e9)
+    hw = HW.PIM_AI_MOBILE
+    r = _op_cost(op, hw, SimConfig())
+    assert r.seconds == pytest.approx(
+        max(1e12 / hw.ops_per_s, 2e9 / (hw.mem_bw_gbs * 1e9)))
+
+
+def test_gemv_memory_bound_charges_all_operands():
+    """Decode GEMV (KV stream) pays the full operand traffic — the
+    memory-bound behaviour the paper's architecture targets."""
+    op = T.OpRecord("gemv", "dot_general", flops=1e9, in_bytes=1e9,
+                    out_bytes=1e5, weight_bytes=0.0)
+    hw = HW.A17_PRO
+    r = _op_cost(op, hw, SimConfig())
+    assert r.memory_s > r.compute_s
+    assert r.seconds == pytest.approx(r.memory_s)
+    assert r.mem_bytes == pytest.approx(1e9 + 1e5)
+
+
+def test_attention_scores_gemm_is_sram_resident():
+    """>=2 batch dims + no weight operand => flash-fused: no memory."""
+    op = T.OpRecord("gemm", "dot_general", flops=1e9, in_bytes=64e9,
+                    out_bytes=64e9, weight_bytes=0.0, batch_dims=2)
+    r = _op_cost(op, HW.A17_PRO, SimConfig())
+    assert r.mem_bytes == 0.0
+    assert r.seconds == pytest.approx(r.compute_s)
+
+
+def test_stacked_expert_gemm_charges_weights():
+    """Rank-3 expert weights (1 batch dim) remain a memory stream."""
+    op = T.OpRecord("gemm", "dot_general", flops=1e9, in_bytes=5e8,
+                    out_bytes=1e6, weight_bytes=4e8, batch_dims=1)
+    r = _op_cost(op, HW.A17_PRO, SimConfig())
+    assert r.mem_bytes == pytest.approx(4e8)
+
+
+def test_weight_bits_scale_weight_stream_and_mac_energy():
+    op = T.OpRecord("gemm", "dot_general", flops=1e12, in_bytes=2e9,
+                    out_bytes=1e6, weight_bytes=2e9)
+    hw = HW.A17_PRO
+    r16 = _op_cost(op, hw, SimConfig(weight_bits=16))
+    r4 = _op_cost(op, hw, SimConfig(weight_bits=4))
+    assert r4.mem_bytes == pytest.approx(r16.mem_bytes / 4)
+    assert r4.energy_j < r16.energy_j
+
+
+def test_host_transfer_uses_direction_params():
+    hw = HW.PIM_AI_SERVER  # asymmetric: 22 h2d / 528 d2h
+    up = _host_transfer(1e9, hw, d2h=False)
+    down = _host_transfer(1e9, hw, d2h=True)
+    assert up.seconds == pytest.approx(1e9 / 22e9)
+    assert down.seconds == pytest.approx(1e9 / 528e9)
+    assert up.energy_j > down.energy_j  # 1920 vs 50 pJ/bit
+
+
+# ---------------------------------------------------------------------------
+# phases
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def sim():
+    return make_sim()
+
+
+def test_encode_compute_bound_decode_memory_bound(sim):
+    """The paper's central claim (§1.2): prefill is compute-bound,
+    decode is memory-bound."""
+    enc = sim.encode(1, 1000)
+    dec = sim.decode(1, 1000, 100)
+    assert enc.compute_s > enc.memory_s
+    assert dec.memory_s > dec.compute_s
+
+
+def test_decode_time_grows_with_context(sim):
+    """KV history reads grow with cache length (§3.1)."""
+    short = sim.decode(1, 500, 100).seconds
+    long = sim.decode(1, 4000, 100).seconds
+    assert long > short
+
+
+def test_decode_scales_linearly_in_output_tokens(sim):
+    d1 = sim.decode(1, 1000, 50)
+    d2 = sim.decode(1, 1000, 100)
+    # not exactly 2x (mean cache length shifts) but close
+    assert d2.seconds / d1.seconds == pytest.approx(2.0, rel=0.05)
+    assert d2.energy_j / d1.energy_j == pytest.approx(2.0, rel=0.05)
+
+
+def test_orchestration_adds_per_step_latency():
+    s0 = make_sim(orchestration_s=0.0)
+    s1 = make_sim(orchestration_s=0.05)
+    d0 = s0.decode(1, 1000, 100).seconds
+    d1 = s1.decode(1, 1000, 100).seconds
+    assert d1 - d0 == pytest.approx(0.05 * 100, rel=1e-6)
+
+
+def test_quantization_speeds_up_decode():
+    """W4 weights stream 4x fewer bytes -> faster memory-bound decode."""
+    s16 = make_sim(weight_bits=16)
+    s4 = make_sim(weight_bits=4)
+    assert s4.decode(1, 1000, 100).seconds < s16.decode(1, 1000, 100).seconds
+
+
+def test_batching_improves_tokens_per_second():
+    """§1.2: batching balances bandwidth and compute."""
+    hw = HW.pim_engine()
+    cfg70 = registry.get_config("llama2-70b")
+    sim = LLMSimulator(cfg70, hw, SimConfig())
+    r1 = sim.generate(1, 100, 20)
+    sim2 = LLMSimulator(cfg70, hw, SimConfig())
+    r8 = sim2.generate(8, 100, 20)
+    assert r8["tokens_per_s"] > 4 * r1["tokens_per_s"]
+
+
+def test_tp_collective_charged_per_layer():
+    s1 = make_sim(tp_degree=1)
+    s2 = make_sim(hw=HW.pim_engine(), tp_degree=128)
+    # only checks the term exists and scales with (tp-1)/tp monotonically
+    e1 = s1.encode(1, 1000)
+    e2 = s2.encode(1, 1000)
+    assert e2.host_bytes > e1.host_bytes
+
+
+def test_generate_metric_consistency(sim):
+    r = sim.generate(1, 1000, 100)
+    assert r["qps"] == pytest.approx(
+        1.0 / (r["encode"].seconds + r["decode"].seconds))
+    assert r["tokens_per_s"] == pytest.approx(
+        100 / r["decode"].seconds)
+    assert r["energy_per_query_j"] == pytest.approx(
+        r["encode"].energy_j + r["decode"].energy_j)
+
+
+# ---------------------------------------------------------------------------
+# composition / profiles
+# ---------------------------------------------------------------------------
+
+def test_profile_scaling_preserves_energies():
+    p = HW.PIM_AI_CHIP.scaled(16)
+    assert p.tops == pytest.approx(16 * HW.PIM_AI_CHIP.tops)
+    assert p.mem_pj_per_bit == HW.PIM_AI_CHIP.mem_pj_per_bit
+    assert p.pj_per_op == HW.PIM_AI_CHIP.pj_per_op
+
+
+def test_engine_count_per_8u():
+    assert HW.ENGINES_PER_8U == 12  # 4 servers x 24 DIMMs / 8 per engine

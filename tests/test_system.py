@@ -1,0 +1,143 @@
+"""End-to-end system behaviour: the full train loop with checkpointing,
+fault injection, gradient compression, and the serve loop — the
+framework story in one file."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import registry
+from repro.data import make_train_stream
+from repro.distributed import compression as GC
+from repro.distributed.fault_tolerance import RestartPolicy
+from repro.launch import steps as ST
+from repro.models import model as MD
+from repro.optim import AdamW, OptConfig
+
+KEY = jax.random.PRNGKey(0)
+
+
+def build(arch="qwen1.5-0.5b", **cfg_kw):
+    cfg = registry.get_smoke_config(arch).replace(**cfg_kw)
+    params = MD.init_params(KEY, cfg)
+    opt = AdamW(OptConfig(lr=3e-3, warmup_steps=5, total_steps=200,
+                          weight_decay=0.0))
+    return cfg, params, opt
+
+
+@pytest.mark.slow
+def test_train_loss_decreases():
+    """~60 steps on the synthetic stream must cut the loss clearly."""
+    cfg, params, opt = build(remat="none", dtype="float32")
+    stream = make_train_stream(cfg, 8, 32, seed=0)
+    step = jax.jit(ST.build_train_step(cfg, opt))
+    state = opt.init(params)
+    losses = []
+    for i in range(60):
+        b = {k: jnp.asarray(v) for k, v in stream.batch_at(i).items()}
+        params, state, m = step(params, state, b)
+        losses.append(float(m["loss"]))
+    first, last = np.mean(losses[:5]), np.mean(losses[-5:])
+    assert last < first - 0.3, (first, last)
+
+
+@pytest.mark.slow
+def test_microbatched_step_matches_full_batch():
+    """Gradient accumulation (scan over microbatches) == one big batch."""
+    cfg, params, opt = build(dtype="float32", remat="none")
+    stream = make_train_stream(cfg, 8, 32, seed=1)
+    b = {k: jnp.asarray(v) for k, v in stream.batch_at(0).items()}
+
+    s_full = jax.jit(ST.build_train_step(cfg.replace(microbatch=1), opt))
+    s_micro = jax.jit(ST.build_train_step(cfg.replace(microbatch=4), opt))
+    p1, st1, m1 = s_full(params, opt.init(params), b)
+    p2, st2, m2 = s_micro(params, opt.init(params), b)
+    assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), rel=1e-5)
+    for a, c in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(c, np.float32),
+                                   atol=1e-5, rtol=1e-4)
+
+
+@pytest.mark.slow
+def test_train_with_compression_still_learns():
+    cfg, params, opt = build(remat="none", dtype="float32")
+    stream = make_train_stream(cfg, 8, 32, seed=0)
+    err = GC.init_error_state(params)
+    state = opt.init(params)
+    losses = []
+    for i in range(50):
+        b = {k: jnp.asarray(v) for k, v in stream.batch_at(i).items()}
+        loss, grads = jax.value_and_grad(
+            lambda p: MD.loss_fn(p, cfg, b)[0])(params)
+        g_hat, err = GC.apply(grads, err, block=128)
+        params, state, _ = opt.apply(g_hat, state, params)
+        losses.append(float(loss))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.25
+
+
+@pytest.mark.slow
+def test_full_story_train_crash_restart_serve(tmp_path):
+    """Train with checkpoints, crash, restart, resume to the identical
+    state, then serve from the trained weights."""
+    cfg, params, opt = build(dtype="float32", remat="none")
+    stream = make_train_stream(cfg, 8, 32, seed=0)
+    jit_step = jax.jit(ST.build_train_step(cfg, opt))
+
+    def mk_state(p):
+        return {"params": p, "opt": opt.init(p),
+                "step": jnp.asarray(0, jnp.int32)}
+
+    def step_fn(state, batch):
+        p, o, m = jit_step(state["params"], state["opt"], batch)
+        return {"params": p, "opt": o, "step": state["step"] + 1}
+
+    def data_at(i):
+        return {k: jnp.asarray(v) for k, v in stream.batch_at(i).items()}
+
+    # reference run, no crash
+    ref = RestartPolicy(CheckpointManager(str(tmp_path / "ref"), keep=2),
+                        checkpoint_every=8)
+    want, _ = ref.run(state=mk_state(params), step_fn=step_fn,
+                      data_at=data_at, n_steps=24)
+
+    crashed = []
+
+    def inject(step):
+        if step == 13 and not crashed:
+            crashed.append(step)
+            raise RuntimeError("preempted")
+
+    pol = RestartPolicy(CheckpointManager(str(tmp_path / "b"), keep=2),
+                        checkpoint_every=8)
+    got, end = pol.run(state=mk_state(params), step_fn=step_fn,
+                       data_at=data_at, n_steps=24, inject_failure=inject)
+    assert end == 24 and pol.restarts == 1
+    for a, b in zip(jax.tree.leaves(want["params"]),
+                    jax.tree.leaves(got["params"])):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=1e-6)
+
+    # serve from the trained weights
+    from repro.serving import EngineConfig, ServingEngine
+    eng = ServingEngine(got["params"], cfg, EngineConfig(
+        max_batch=2, max_seq_len=48, max_new_tokens=4))
+    eng.submit(np.arange(8) % cfg.vocab_size)
+    done = eng.run()
+    assert len(done) == 1 and len(done[0].output) == 4
+
+
+def test_serve_step_builder_greedy():
+    cfg, params, _ = build(dtype="float32")
+    serve = jax.jit(ST.build_serve_step(cfg))
+    cache = MD.init_cache(cfg, 2, 32)
+    batch = MD.make_dummy_batch(KEY, cfg, 2, 8, "prefill")
+    _, cache = MD.prefill(params, cfg, batch, 32)
+    tok = jnp.zeros((2, 1), jnp.int32)
+    next_tok, logits, cache = serve(params, tok, cache)
+    assert next_tok.shape == (2, 1)
+    assert (np.asarray(next_tok) ==
+            np.asarray(jnp.argmax(logits, -1)[:, None])).all()

@@ -1,0 +1,154 @@
+"""The jaxpr op-stream tracer (core/trace.py) — the JAX analogue of the
+paper's PyTorch interception layer."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import trace as T
+
+
+def test_matmul_flops_exact():
+    def f(x, w):
+        return x @ w
+
+    x = jax.ShapeDtypeStruct((8, 64), jnp.float32)
+    w = jax.ShapeDtypeStruct((64, 32), jnp.float32)
+    ops = T.trace_ops(f, x, w)
+    mm = [o for o in ops if o.kind == "gemm"]
+    assert len(mm) == 1
+    assert mm[0].flops == 2 * 8 * 64 * 32
+    assert mm[0].weight_bytes == 64 * 32 * 4
+    assert mm[0].in_bytes == (8 * 64 + 64 * 32) * 4
+
+
+def test_gemv_classification():
+    """m == 1 rows -> gemv (the decode workload class)."""
+    def f(x, w):
+        return x @ w
+
+    x = jax.ShapeDtypeStruct((1, 64), jnp.float32)
+    w = jax.ShapeDtypeStruct((64, 32), jnp.float32)
+    ops = T.trace_ops(f, x, w)
+    assert [o.kind for o in ops if o.prim == "dot_general"] == ["gemv"]
+
+
+def test_batched_attention_scores_batch_dims():
+    def f(q, k):
+        return jnp.einsum("bqhd,bkhd->bhqk", q, k)
+
+    q = jax.ShapeDtypeStruct((2, 16, 4, 8), jnp.float32)
+    k = jax.ShapeDtypeStruct((2, 16, 4, 8), jnp.float32)
+    ops = T.trace_ops(f, q, k)
+    mm = [o for o in ops if o.prim == "dot_general"][0]
+    assert mm.batch_dims == 2
+    assert mm.weight_bytes == 0.0
+    assert mm.flops == 2 * 2 * 4 * 16 * 16 * 8
+
+
+def test_stacked_expert_weight_detection():
+    def f(x, w):
+        return jnp.einsum("ecd,edf->ecf", x, w)
+
+    x = jax.ShapeDtypeStruct((4, 8, 16), jnp.float32)
+    w = jax.ShapeDtypeStruct((4, 16, 32), jnp.float32)
+    ops = T.trace_ops(f, x, w)
+    mm = [o for o in ops if o.prim == "dot_general"][0]
+    assert mm.batch_dims == 1
+    assert mm.weight_bytes == 4 * 16 * 32 * 4
+
+
+def test_scan_multiplies_trip_count():
+    def f(x, w):
+        def body(h, _):
+            return jnp.tanh(h @ w), None
+        h, _ = jax.lax.scan(body, x, None, length=7)
+        return h
+
+    x = jax.ShapeDtypeStruct((8, 16), jnp.float32)
+    w = jax.ShapeDtypeStruct((16, 16), jnp.float32)
+    ops = T.trace_ops(f, x, w)
+    mm = [o for o in ops if o.kind == "gemm"]
+    assert len(mm) == 1
+    assert mm[0].flops == 7 * 2 * 8 * 16 * 16
+    assert mm[0].count == 7
+
+
+def test_nested_scan_and_remat():
+    def f(x, w):
+        @jax.checkpoint
+        def blk(h):
+            return jnp.tanh(h @ w)
+
+        def outer(h, _):
+            def inner(hh, _):
+                return blk(hh), None
+            h, _ = jax.lax.scan(inner, h, None, length=3)
+            return h, None
+        h, _ = jax.lax.scan(outer, x, None, length=2)
+        return h
+
+    x = jax.ShapeDtypeStruct((4, 16), jnp.float32)
+    w = jax.ShapeDtypeStruct((16, 16), jnp.float32)
+    ops = T.trace_ops(f, x, w)
+    total = sum(o.flops for o in ops if o.kind == "gemm")
+    assert total == 6 * 2 * 4 * 16 * 16
+
+
+def test_gather_charges_gathered_rows_only():
+    def f(table, idx):
+        return table[idx]
+
+    table = jax.ShapeDtypeStruct((1000, 64), jnp.float32)
+    idx = jax.ShapeDtypeStruct((8,), jnp.int32)
+    ops = T.trace_ops(f, table, idx)
+    data = [o for o in ops if o.kind == "data"]
+    assert len(data) == 1
+    # reads the 8 gathered rows (+ indices), not the 1000-row table
+    assert data[0].out_bytes == 8 * 64 * 4
+    assert data[0].in_bytes < 1000 * 64 * 4 / 2
+
+
+def test_totals_aggregation():
+    def f(x, w):
+        return jax.nn.relu(x @ w).sum()
+
+    x = jax.ShapeDtypeStruct((8, 16), jnp.float32)
+    w = jax.ShapeDtypeStruct((16, 16), jnp.float32)
+    t = T.totals(T.trace_ops(f, x, w))
+    assert t.matmul_flops == 2 * 8 * 16 * 16
+    assert t.vector_ops > 0  # relu + reduce
+
+
+# ---------------------------------------------------------------------------
+# two-point linear tracing (KV growth)
+# ---------------------------------------------------------------------------
+
+def test_trace_linear_recovers_linear_costs():
+    def of_len(L):
+        kv = jax.ShapeDtypeStruct((1, L, 8), jnp.float32)
+        q = jax.ShapeDtypeStruct((1, 8), jnp.float32)
+
+        def f(q, kv):
+            return jnp.einsum("bd,bkd->bk", q, kv)
+
+        return f, (q, kv)
+
+    lin = T.trace_linear(of_len, 64, 256)
+    mm = [o for o in lin if o.prim == "dot_general"][0]
+    # flops(L) = 2*L*8 exactly
+    for L in (64, 100, 256, 1000):
+        assert mm.at(L).flops == pytest.approx(2 * L * 8)
+
+
+def test_trace_linear_rejects_structural_change():
+    def of_len(L):
+        x = jax.ShapeDtypeStruct((L,), jnp.float32)
+        if L > 100:
+            return (lambda x: jnp.sin(x).sum()), (x,)
+        return (lambda x: (jnp.sin(x) + jnp.cos(x)).sum()), (x,)
+
+    with pytest.raises(ValueError):
+        T.trace_linear(of_len, 64, 256)

@@ -1,0 +1,18 @@
+"""W4A16 integration: full decode through the quant_gemv kernel path
+(the paper's mobile mode) tracks the fp32 model."""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "examples"))
+
+import pytest
+
+
+@pytest.mark.slow
+def test_w4_decode_tracks_full_precision():
+    from w4_mobile_decode import run
+    corr, mad = run(n_steps=6, verbose=False)
+    assert min(corr) > 0.95, corr       # int4 on random weights
+    assert max(mad) < 0.5, mad          # log-prob deviation bounded
