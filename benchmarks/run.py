@@ -7,6 +7,7 @@ One module per paper table/figure (see DESIGN.md §7):
   bench_tco             §5.1 3-year TCO/QPS
   bench_long_generation §5.1 1000/1000 + mobile battery scaling
   bench_roofline        §Roofline table from the dry-run artifacts
+  bench_serving         engine batching: aligned vs ragged, disp/step
 """
 from __future__ import annotations
 
@@ -17,7 +18,7 @@ import time
 def main(argv=None):
     from benchmarks import (bench_cloud, bench_long_generation,
                             bench_mobile, bench_profiles, bench_roofline,
-                            bench_tco)
+                            bench_serving, bench_tco)
     benches = {
         "profiles": bench_profiles.run,
         "cloud": bench_cloud.run,
@@ -25,6 +26,7 @@ def main(argv=None):
         "tco": bench_tco.run,
         "long_generation": bench_long_generation.run,
         "roofline": bench_roofline.run,
+        "serving": bench_serving.run,
     }
     names = (argv if argv is not None else sys.argv[1:]) or list(benches)
     for name in names:

@@ -27,6 +27,7 @@ following the paper's model:
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
 
 import jax
@@ -157,7 +158,7 @@ class LLMSimulator:
         self.cfg = cfg
         self.hw = hw
         self.sim = sim or SimConfig()
-        self._decode_linear = None
+        self._decode_linear = {}   # keyed (batch, max_len, ragged)
         self._prefill_cache = {}
 
     # -- traced op streams -------------------------------------------------
@@ -174,14 +175,34 @@ class LLMSimulator:
             self._prefill_cache[key] = T.trace_ops(fn, params, spec)
         return self._prefill_cache[key]
 
-    def _decode_ops_linear(self, batch: int, max_len: int):
-        if self._decode_linear is None:
+    def _decode_ops_linear(self, batch: int, max_len: int, *,
+                           ragged: bool = False):
+        """Linear-in-cache-length op stream of one decode step.
+
+        Memoized per ``(batch, max_len, ragged)`` — a reused simulator
+        must not return the first call's trace for a different batch
+        size or sequence length. ``ragged=True`` traces the serving
+        engine's fully-ragged single-dispatch step: per-row position
+        vector + live mask (masked KV scatter instead of a
+        dynamic-update-slice), so simulated cloud batching charges the
+        same compiled graph the real engine runs.
+        """
+        key = (batch, max_len, ragged)
+        if key not in self._decode_linear:
             params = jax.eval_shape(
                 lambda k: MD.init_params(k, self.cfg), jax.random.PRNGKey(0))
 
             def of_len(L):
                 cache = MD.cache_spec(self.cfg, batch, L)
                 tok = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+                if ragged:
+                    cache["len"] = jax.ShapeDtypeStruct((batch,), jnp.int32)
+                    live = jax.ShapeDtypeStruct((batch,), jnp.bool_)
+
+                    def fn(p, t, c, lv):
+                        return MD.decode_step(p, self.cfg, t, c, live=lv)
+
+                    return fn, (params, tok, cache, live)
 
                 def fn(p, t, c):
                     return MD.decode_step(p, self.cfg, t, c)
@@ -190,8 +211,8 @@ class LLMSimulator:
 
             L1 = max(32, max_len // 2)
             L2 = max_len
-            self._decode_linear = T.trace_linear(of_len, L1, L2)
-        return self._decode_linear
+            self._decode_linear[key] = T.trace_linear(of_len, L1, L2)
+        return self._decode_linear[key]
 
     # -- phases --------------------------------------------------------------
     def encode(self, batch: int, n_in: int) -> PhaseResult:
@@ -211,9 +232,15 @@ class LLMSimulator:
         total.host_s += self.sim.orchestration_s
         return total
 
-    def decode(self, batch: int, n_in: int, n_out: int) -> PhaseResult:
-        """Generate n_out tokens after the first (cache grows each step)."""
-        ops = self._decode_ops_linear(batch, n_in + n_out)
+    def decode(self, batch: int, n_in: float, n_out: int, *,
+               ragged: bool = False) -> PhaseResult:
+        """Generate n_out tokens after the first (cache grows each step).
+
+        ``n_in`` may be fractional (mean prompt length of a ragged
+        batch); ``ragged`` charges the engine's single-dispatch ragged
+        decode graph instead of the aligned one."""
+        ops = self._decode_ops_linear(batch, int(math.ceil(n_in)) + n_out,
+                                      ragged=ragged)
         total = PhaseResult()
         # evaluate the linear per-op model at each step's cache length;
         # summing the linear model over steps == evaluating at the mean L.
@@ -237,6 +264,33 @@ class LLMSimulator:
         total.seconds += self.sim.orchestration_s * n_out
         total.host_s += self.sim.orchestration_s * n_out
         return total
+
+    def serve(self, n_ins, n_out: int) -> dict:
+        """Continuous-batching cloud scenario (matches ``ServingEngine``):
+        per-request prefill + one fully-ragged decode dispatch per step
+        over the whole batch, each row's KV span growing from its own
+        prompt length. The linear per-op cost model is evaluated at the
+        batch-mean cache length (summing a linear model over ragged rows
+        == evaluating it at the row mean)."""
+        batch = len(n_ins)
+        enc = PhaseResult()
+        t_cum = ttft_sum = 0.0
+        for n in n_ins:
+            e = self.encode(1, int(n))
+            enc.add(e)
+            t_cum += e.seconds      # prefills run sequentially: request i
+            ttft_sum += t_cum       # waits for every earlier admit too
+        n_mean = sum(float(n) for n in n_ins) / batch
+        dec = self.decode(batch, n_mean, n_out, ragged=True)
+        return {
+            "encode": enc,
+            "decode": dec,
+            "ttft_s": ttft_sum / batch,
+            "tokens_per_s": batch * n_out / dec.seconds,
+            "energy_per_token_j": dec.energy_j / (batch * n_out),
+            "qps": batch / (enc.seconds + dec.seconds),
+            "decode_dispatches": n_out,   # one per step, whole batch
+        }
 
     def generate(self, batch: int, n_in: int, n_out: int) -> dict:
         enc = self.encode(batch, n_in)

@@ -10,9 +10,12 @@ the TPU analogue of the paper's bank-parallel split — and all G query
 heads of one KV head share each streamed tile (the GQA amplification
 that PIM-AI's capacity argument is about).
 
-Grid: (B, Hkv, num_s_blocks); the cache length arrives as a scalar-
-prefetch argument so the kernel masks invalid slots without the host
-slicing the cache.
+Grid: (B, Hkv, num_s_blocks); the cache lengths arrive as a per-row
+(B,) scalar-prefetch vector so each batch row masks its own valid KV
+span — the fully-ragged continuous-batching case where every serving
+slot sits at a different absolute position — without the host slicing
+the cache or splitting the batch into position groups. A scalar
+``cache_len`` is accepted too (broadcast to all rows).
 """
 from __future__ import annotations
 
@@ -31,7 +34,7 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
             scale, block_s):
     sb = pl.program_id(2)
     ns = pl.num_programs(2)
-    cache_len = len_ref[0]
+    cache_len = len_ref[pl.program_id(0)]  # this row's valid KV span
 
     @pl.when(sb == 0)
     def _init():
@@ -69,8 +72,8 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
 def decode_attention_bhgd(q, k_cache, v_cache, cache_len, *, block_s=512,
                           interpret=True):
-    """q (B, Hkv, G, Dh); caches (B, S, Hkv, Dh); cache_len scalar int32.
-    Returns (B, Hkv, G, Dh)."""
+    """q (B, Hkv, G, Dh); caches (B, S, Hkv, Dh); cache_len scalar or
+    per-row (B,) int32 valid-KV lengths. Returns (B, Hkv, G, Dh)."""
     b, hkv, g, dh = q.shape
     s = k_cache.shape[1]
     block_s = min(block_s, max(8, s))
@@ -100,9 +103,11 @@ def decode_attention_bhgd(q, k_cache, v_cache, cache_len, *, block_s=512,
             pltpu.VMEM((g, dh), jnp.float32),
         ],
     )
+    lens = jnp.broadcast_to(
+        jnp.asarray(cache_len, jnp.int32).reshape(-1), (b,))
     out = pl.pallas_call(
         kernel, grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, hkv, g, dh), q.dtype),
         interpret=interpret,
-    )(jnp.asarray(cache_len, jnp.int32).reshape(1), q, k_cache, v_cache)
+    )(lens, q, k_cache, v_cache)
     return out

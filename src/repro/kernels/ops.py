@@ -50,7 +50,8 @@ def flash_attention(q, k, v, *, causal=True, window=None, q_offset=0,
 
 @partial(jax.jit, static_argnames=("block_s",))
 def decode_attention(q, k_cache, v_cache, cache_len, *, block_s=512):
-    """q (B,1,Hq,Dh); caches (B,S,Hkv,Dh). Split-KV GQA flash decode."""
+    """q (B,1,Hq,Dh); caches (B,S,Hkv,Dh). Split-KV GQA flash decode.
+    ``cache_len``: scalar, or per-row (B,) int32 for ragged batches."""
     b, _, hq, dh = q.shape
     hkv = k_cache.shape[2]
     g = hq // hkv

@@ -28,14 +28,16 @@ def flash_attention_ref(q, k, v, *, causal=True, window=None):
 
 
 def decode_attention_ref(q, k_cache, v_cache, cache_len):
-    """q (B,1,Hq,Dh); caches (B,S,Hkv,Dh); GQA grouped. fp32 out."""
+    """q (B,1,Hq,Dh); caches (B,S,Hkv,Dh); GQA grouped. ``cache_len``
+    scalar or per-row (B,) ragged valid lengths. fp32 out."""
     b, _, hq, dh = q.shape
     _, s, hkv, _ = k_cache.shape
     g = hq // hkv
     qg = q.reshape(b, hkv, g, dh)
     scores = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache,
                         preferred_element_type=jnp.float32) / math.sqrt(dh)
-    valid = jnp.arange(s)[None, None, None, :] < cache_len
+    clen = jnp.asarray(cache_len).reshape(-1, 1, 1, 1)  # (B|1, 1, 1, 1)
+    valid = jnp.arange(s)[None, None, None, :] < clen
     scores = jnp.where(valid, scores, -1e30)
     p = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_cache.dtype), v_cache,

@@ -180,10 +180,13 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, window=None,
     """Single-token attention against a (possibly rolling) KV cache.
 
     q: (B, 1, Hq, Dh); k_cache/v_cache: (B, Smax, Hkv, Dh);
-    cache_len: scalar — number of valid entries. With ``window``, the
-    cache is a rolling buffer of width Smax == window and every slot is
-    valid once cache_len >= window. ``kv_offset`` is the absolute
-    position of cache slot 0 (0 for dense caches).
+    cache_len: number of valid entries — a scalar, or a per-row (B,)
+    vector for fully-ragged continuous batching (each serving slot
+    masks its own valid KV span, so one dispatch serves slots at
+    arbitrary distinct positions). With ``window``, the cache is a
+    rolling buffer of width Smax == window and every slot is valid once
+    cache_len >= window. ``kv_offset`` is the absolute position of
+    cache slot 0 (0 for dense caches).
 
     ``extra_k``/``extra_v`` (B, 1, Hkv, Dh): the *current* token's KV,
     treated as one additional always-valid slot. This lets the caller
@@ -198,8 +201,7 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, window=None,
         preferred_element_type=jnp.float32,
     ) / math.sqrt(dh)
     slot = jnp.arange(smax)
-    # cache_len: scalar, or per-row (B,) for continuous batching
-    clen = jnp.asarray(cache_len)
+    clen = jnp.asarray(cache_len)  # scalar, or ragged per-row (B,)
     clen_b = clen.reshape(-1, 1) if clen.ndim else clen
     if window is None:
         valid = slot[None, :] < clen_b

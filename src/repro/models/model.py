@@ -115,10 +115,15 @@ def attn_full(p, cfg, x, *, positions, causal=True, window=None,
 
 
 def attn_decode(p, cfg, x, k_cache, v_cache, cache_len, *, window=None):
-    """Single-token attention. x: (B,1,d). Returns (out, k1, v1)."""
+    """Single-token attention. x: (B,1,d). ``cache_len`` is a scalar, or
+    a per-row (B,) vector for fully-ragged continuous batching (each row
+    rotates/masks at its own absolute position). Returns (out, k1, v1).
+    """
     q, k1, v1 = _proj_qkv(p, cfg, x)
     if _use_rope(cfg):
-        pos = jnp.full((1,), cache_len, jnp.int32)
+        clen = jnp.asarray(cache_len, jnp.int32)
+        pos = clen.reshape(-1, 1) if clen.ndim else \
+            jnp.full((1,), clen, jnp.int32)
         q = L.apply_rope(q, pos, cfg.rope_theta)
         k1 = L.apply_rope(k1, pos, cfg.rope_theta)
     o = decode_attention(q, k_cache, v_cache, cache_len, window=window,
@@ -430,6 +435,25 @@ def init_cache(cfg, batch_size, capacity):
             for k, (sh, dt) in cache_struct(cfg, batch_size, capacity).items()}
 
 
+def cache_batch_axes(cache: dict) -> dict:
+    """Batch-dim index per cache leaf (None = no batch dim). The single
+    source of truth for per-leaf batch axes — the serving engine's slot
+    splice and ``decode_step``'s live-mask merges both derive from it."""
+    axes = {}
+    for name, leaf in cache.items():
+        if name == "len" or getattr(leaf, "ndim", 0) == 0:
+            axes[name] = None
+        elif name in ("k", "v", "cross_k", "cross_v"):
+            axes[name] = 1        # (L|G, B, C, H, Dh)
+        elif name in ("ssm", "conv", "mlstm"):
+            axes[name] = 2        # (outer, inner, B, ...)
+        elif name.startswith("slstm"):
+            axes[name] = 1        # (outer, B, ...)
+        else:
+            raise KeyError(f"unknown cache leaf {name}")
+    return axes
+
+
 def cache_spec(cfg, batch_size, capacity):
     return {k: jax.ShapeDtypeStruct(sh, dt)
             for k, (sh, dt) in cache_struct(cfg, batch_size, capacity).items()}
@@ -445,9 +469,17 @@ def _write_kv(cache_arr, kv, start):
         cache_arr, kv.astype(cache_arr.dtype), (0, 0, start, 0, 0))
 
 
-def prefill(params, cfg, batch, capacity, *, attn_impl="chunked"):
+def prefill(params, cfg, batch, capacity, *, attn_impl="chunked",
+            logit_index=None):
     """Process the prompt, fill the cache. Returns (last logits (B,V),
-    cache)."""
+    cache).
+
+    ``logit_index`` (scalar or (B,) int32): position to read logits
+    from instead of the last one — used for right-padded (bucketed)
+    prompts where the true last token sits at ``n_prompt - 1``. Causal
+    attention guarantees pad positions never influence earlier rows;
+    their garbage KV is masked at decode by per-row cache lengths.
+    """
     x, positions, _ = _embed_inputs(params, cfg, batch)
     s = x.shape[1]
     b = x.shape[0]
@@ -548,7 +580,12 @@ def prefill(params, cfg, batch, capacity, *, attn_impl="chunked"):
         raise ValueError(fam)
 
     cache["len"] = jnp.asarray(s, jnp.int32)
-    x = L.apply_norm(params["final_norm"], cfg, x[:, -1:])
+    if logit_index is None:
+        x = x[:, -1:]
+    else:
+        idx = jnp.asarray(logit_index, jnp.int32).reshape(-1, 1, 1)
+        x = jnp.take_along_axis(x, idx, axis=1)
+    x = L.apply_norm(params["final_norm"], cfg, x)
     head = params["embed"]["table"] if cfg.tie_embeddings else params["head"]
     return L.logits_from_hidden(head, x)[:, 0], cache
 
@@ -557,10 +594,48 @@ def prefill(params, cfg, batch, capacity, *, attn_impl="chunked"):
 # decode step
 # ---------------------------------------------------------------------------
 
-def decode_step(params, cfg, tokens, cache):
-    """tokens: (B, 1) int32. Returns (logits (B, V) fp32, new cache)."""
+def _write_token_kv(cache_arr, kv, slot, live=None):
+    """Write one decoded token's KV ``kv`` (L|G, B, 1, H, Dh) into
+    ``cache_arr`` (L|G, B, C, H, Dh) at ``slot`` — a scalar, or a per-row
+    (B,) vector for ragged continuous batching. Rows where ``live`` is
+    False keep their previous cache exactly (the write is dropped, no
+    full-cache merge)."""
+    kv = kv.astype(cache_arr.dtype)
+    slot = jnp.asarray(slot, jnp.int32)
+    if slot.ndim == 0:
+        out = jax.lax.dynamic_update_slice(cache_arr, kv, (0, 0, slot, 0, 0))
+        if live is not None:
+            out = jnp.where(live.reshape(1, -1, 1, 1, 1), out, cache_arr)
+        return out
+    b, c = cache_arr.shape[1], cache_arr.shape[2]
+    if live is not None:
+        slot = jnp.where(live, slot, c)  # out-of-range rows are dropped
+    return cache_arr.at[:, jnp.arange(b), slot].set(kv[:, :, 0], mode="drop")
+
+
+def _merge_rows(new, old, live, axis):
+    """Per-row live-mask merge for O(1) recurrent state leaves: rows
+    where ``live`` is False keep their previous state."""
+    if live is None:
+        return new
+    shape = [1] * new.ndim
+    shape[axis] = -1
+    return jnp.where(live.reshape(shape), new, old)
+
+
+def decode_step(params, cfg, tokens, cache, *, live=None):
+    """tokens: (B, 1) int32. Returns (logits (B, V) fp32, new cache).
+
+    ``cache['len']`` may be a scalar (all rows at the same position —
+    the straight-line generation path) or a per-row (B,) vector (fully
+    ragged continuous batching: every serving slot advances at its own
+    absolute position in one dispatch). ``live`` ((B,) bool, optional)
+    freezes non-live rows: their KV rows, recurrent state, and length
+    are left exactly as they were, so a serving engine can run free /
+    retired slots through the same jitted step with no post-hoc cache
+    merge."""
     x = L.embed_tokens(params["embed"], tokens)
-    n = cache["len"]
+    n = jnp.asarray(cache["len"], jnp.int32)
     fam = cfg.family
 
     if fam in TRANSFORMER_FAMILIES:
@@ -587,14 +662,12 @@ def decode_step(params, cfg, tokens, cache):
         if k_news:
             ks = jnp.concatenate([jnp.stack(k_news), ks], axis=0)
             vs = jnp.concatenate([jnp.stack(v_news), vs], axis=0)
-        cache["k"] = jax.lax.dynamic_update_slice(
-            cache["k"], ks.astype(cache["k"].dtype), (0, 0, slot, 0, 0))
-        cache["v"] = jax.lax.dynamic_update_slice(
-            cache["v"], vs.astype(cache["v"].dtype), (0, 0, slot, 0, 0))
+        cache["k"] = _write_token_kv(cache["k"], ks, slot, live)
+        cache["v"] = _write_token_kv(cache["v"], vs, slot, live)
 
     elif fam == "audio":
-        x = x + L.sinusoidal_positions(
-            jnp.full((1,), n, jnp.int32), cfg.d_model)[None].astype(x.dtype)
+        pos = n.reshape(-1, 1) if n.ndim else jnp.full((1, 1), n, jnp.int32)
+        x = x + L.sinusoidal_positions(pos, cfg.d_model).astype(x.dtype)
 
         def body(h, xs):
             lp, kc, vc, xk, xv = xs
@@ -605,10 +678,8 @@ def decode_step(params, cfg, tokens, cache):
         x, (ks, vs) = jax.lax.scan(
             body, x, (params["layers"], cache["k"], cache["v"],
                       cache["cross_k"], cache["cross_v"]))
-        cache["k"] = jax.lax.dynamic_update_slice(
-            cache["k"], ks.astype(cache["k"].dtype), (0, 0, n, 0, 0))
-        cache["v"] = jax.lax.dynamic_update_slice(
-            cache["v"], vs.astype(cache["v"].dtype), (0, 0, n, 0, 0))
+        cache["k"] = _write_token_kv(cache["k"], ks, n, live)
+        cache["v"] = _write_token_kv(cache["v"], vs, n, live)
 
     elif fam == "ssm":
         def super_body(h, xs):
@@ -629,10 +700,13 @@ def decode_step(params, cfg, tokens, cache):
             xs.update(s=params["slstm"], sc=cache["slstm_c"],
                       sn=cache["slstm_n"], sh=cache["slstm_h"])
         x, outs = jax.lax.scan(super_body, x, xs)
-        cache["mlstm"] = outs["mst"]
+        axes = cache_batch_axes(cache)
+        cache["mlstm"] = _merge_rows(outs["mst"], cache["mlstm"], live,
+                                     axes["mlstm"])
         if "slstm" in params:
-            cache["slstm_c"], cache["slstm_n"], cache["slstm_h"] = (
-                outs["sc"], outs["sn"], outs["sh"])
+            for nm, new in (("slstm_c", outs["sc"]), ("slstm_n", outs["sn"]),
+                            ("slstm_h", outs["sh"])):
+                cache[nm] = _merge_rows(new, cache[nm], live, axes[nm])
 
     elif fam == "hybrid":
         shared = params["shared"]
@@ -653,16 +727,17 @@ def decode_step(params, cfg, tokens, cache):
             group_body, x,
             {"lp": params["mamba"], "st": cache["ssm"], "cv": cache["conv"],
              "k": cache["k"], "v": cache["v"]})
-        cache["ssm"] = outs["st"]
-        cache["conv"] = outs["cv"]
-        cache["k"] = jax.lax.dynamic_update_slice(
-            cache["k"], outs["k1"].astype(cache["k"].dtype), (0, 0, n, 0, 0))
-        cache["v"] = jax.lax.dynamic_update_slice(
-            cache["v"], outs["v1"].astype(cache["v"].dtype), (0, 0, n, 0, 0))
+        axes = cache_batch_axes(cache)
+        cache["ssm"] = _merge_rows(outs["st"], cache["ssm"], live,
+                                   axes["ssm"])
+        cache["conv"] = _merge_rows(outs["cv"].astype(cache["conv"].dtype),
+                                    cache["conv"], live, axes["conv"])
+        cache["k"] = _write_token_kv(cache["k"], outs["k1"], n, live)
+        cache["v"] = _write_token_kv(cache["v"], outs["v1"], n, live)
     else:
         raise ValueError(fam)
 
-    cache["len"] = n + 1
+    cache["len"] = n + 1 if live is None else n + live.astype(jnp.int32)
     x = L.apply_norm(params["final_norm"], cfg, x)
     head = params["embed"]["table"] if cfg.tie_embeddings else params["head"]
     return hints.logits(L.logits_from_hidden(head, x))[:, 0], cache

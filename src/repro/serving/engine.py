@@ -15,15 +15,26 @@ prefill/decode interleave with no generation-length head-of-line
 blocking.
 
 Ragged positions: slots generally sit at different absolute positions.
-``decode_step`` takes one scalar position, so the engine decodes one
-*position group* at a time and merges the updated cache back under a
-per-slot row mask **inside the jitted step** — rows outside the group
-keep their exact previous KV *and* recurrent state (SSM/xLSTM states
-would otherwise advance spuriously). On real TPU serving the per-group
-loop amortizes to ~1 group in steady state (slots admitted together
-stay aligned); the fully-ragged single-dispatch path (per-slot length
-vectors threaded through the attention mask) is the production
-extension and is purely additive to this engine's interface.
+``decode_step`` threads a per-slot position vector ``(B,)`` through the
+attention mask (each row rotates and masks its own valid KV span) and a
+per-slot ``live`` mask through the KV write and recurrent-state
+(SSM/xLSTM/conv) updates, so one jitted dispatch advances every live
+slot regardless of how their prompt lengths diverge — the fully-ragged
+single-dispatch path. The hot path is exactly **one** kernel launch per
+engine step; ``decode_dispatches`` counts them.
+
+Prefill admission is *bucketed* for attention families: prompts are
+right-padded to a small geometric set of bucket lengths so admission
+compiles once per bucket instead of once per unique prompt length. Pad
+positions are causally downstream of the real tokens (they never alter
+them) and their garbage KV rows are masked off by the per-slot length
+vector, then progressively overwritten as decode advances. Recurrent
+families (ssm/hybrid) and rolling SWA caches prefill at exact length —
+padding would advance their state / roll garbage into the window.
+
+Retirement is checked both at admit time (the prefill token may already
+satisfy EOS or a ``max_new_tokens=1`` budget — such requests never
+occupy a decode slot) and after each decode step.
 """
 from __future__ import annotations
 
@@ -45,6 +56,9 @@ class EngineConfig:
     eos_token: int = -1          # -1 -> never stops on token
     max_new_tokens: int = 64
     sample: str = "greedy"
+    prefill_bucket_min: int = 16  # smallest prompt bucket (power-of-two
+                                  # buckets up from here); 0 disables
+                                  # bucketing even for attention families
 
 
 @dataclass
@@ -67,21 +81,9 @@ class Request:
         return self.t_done - self.t_submit
 
 
-def cache_batch_axes(cache: dict) -> dict:
-    """Batch-dim index per cache leaf (None = no batch dim)."""
-    axes = {}
-    for name, leaf in cache.items():
-        if name == "len" or getattr(leaf, "ndim", 0) == 0:
-            axes[name] = None
-        elif name in ("k", "v", "cross_k", "cross_v"):
-            axes[name] = 1        # (L|G, B, C, H, Dh)
-        elif name in ("ssm", "conv", "mlstm"):
-            axes[name] = 2        # (outer, inner, B, ...)
-        elif name.startswith("slstm"):
-            axes[name] = 1        # (outer, B, ...)
-        else:
-            raise KeyError(f"unknown cache leaf {name}")
-    return axes
+# single source of truth for per-leaf batch axes lives next to the
+# cache layout itself
+cache_batch_axes = MD.cache_batch_axes
 
 
 class ServingEngine:
@@ -100,10 +102,22 @@ class ServingEngine:
         self.waiting: deque[Request] = deque()
         self.finished: list[Request] = []
         self._next_rid = 0
+        # dispatch accounting (the tentpole invariant: 1 per step)
+        self.decode_dispatches = 0   # jitted decode calls issued
+        self.decode_steps = 0        # engine steps that decoded anything
+        self.prefills = 0
+        # bucketed prefill only where right-padding is harmless: causal
+        # attention masks pad KV per-row; recurrent state (ssm/hybrid)
+        # would advance through pads, rolling SWA would roll them in.
+        self._bucketed = (ecfg.prefill_bucket_min > 0
+                          and cfg.family in MD.TRANSFORMER_FAMILIES
+                          + ("audio",)
+                          and cfg.sliding_window is None)
         axes = self.axes
 
-        def _prefill_one(params, batch):
-            logits, cache1 = MD.prefill(params, cfg, batch, C)
+        def _prefill_one(params, batch, last_idx):
+            logits, cache1 = MD.prefill(params, cfg, batch, C,
+                                        logit_index=last_idx)
             return jnp.argmax(logits, -1).astype(jnp.int32), cache1
 
         def _splice(big, rows, slot):
@@ -118,27 +132,18 @@ class ServingEngine:
                         b, rows[name].astype(b.dtype), slot, ax)
             return out
 
-        def _decode_group(params, toks, cache, pos, row_mask):
-            """Decode all slots at position ``pos``; rows where
-            ``row_mask`` is False keep their previous cache exactly."""
-            old = cache
+        def _decode_ragged(params, toks, cache, pos, live):
+            """One fully-ragged dispatch: every live slot advances at
+            its own absolute position; non-live rows keep their KV and
+            recurrent state exactly (masked inside ``decode_step``)."""
             logits, new = MD.decode_step(params, cfg, toks,
-                                         dict(cache, len=pos))
-            merged = {}
-            for name, leaf in new.items():
-                ax = axes[name]
-                if ax is None:
-                    merged[name] = old[name]  # positions tracked host-side
-                    continue
-                shape = [1] * leaf.ndim
-                shape[ax] = -1
-                m = row_mask.reshape(shape)
-                merged[name] = jnp.where(m, leaf, old[name])
-            return jnp.argmax(logits, -1).astype(jnp.int32), merged
+                                         dict(cache, len=pos), live=live)
+            new["len"] = cache["len"]  # positions tracked host-side
+            return jnp.argmax(logits, -1).astype(jnp.int32), new
 
-        self._prefill_one = jax.jit(_prefill_one)
+        self._prefill_one = jax.jit(_prefill_one)  # one compile per bucket
         self._splice = jax.jit(_splice)  # slot is traced: one compile total
-        self._decode_group = jax.jit(_decode_group)
+        self._decode_ragged = jax.jit(_decode_ragged)  # one compile total
 
     # -- public API -----------------------------------------------------------
     def submit(self, prompt, max_new_tokens: int | None = None) -> Request:
@@ -158,58 +163,92 @@ class ServingEngine:
         return self.finished
 
     def step(self):
-        """One engine iteration: admit -> batched decode -> retire."""
+        """One engine iteration: admit -> single ragged decode -> retire."""
         self._admit()
-        live = [i for i, r in enumerate(self.slot_req) if r is not None]
-        if live:
-            groups: dict[int, list[int]] = {}
-            for i in live:
-                groups.setdefault(int(self.slot_pos[i]), []).append(i)
-            for pos, slots in groups.items():
-                mask = np.zeros(self.ecfg.max_batch, bool)
-                mask[slots] = True
-                new_toks, self.cache = self._decode_group(
-                    self.params, jnp.asarray(self.slot_tok), self.cache,
-                    jnp.asarray(pos, jnp.int32), jnp.asarray(mask))
-                new = np.asarray(new_toks)
-                for i in slots:
-                    req = self.slot_req[i]
-                    req.output.append(int(new[i]))
-                    self.slot_tok[i, 0] = int(new[i])
-                    self.slot_len[i] += 1
-                    self.slot_pos[i] += 1
+        live = np.array([r is not None for r in self.slot_req])
+        if live.any():
+            new_toks, self.cache = self._decode_ragged(
+                self.params, jnp.asarray(self.slot_tok), self.cache,
+                jnp.asarray(self.slot_pos), jnp.asarray(live))
+            self.decode_dispatches += 1
+            self.decode_steps += 1
+            new = np.asarray(new_toks)
+            for i in np.nonzero(live)[0]:
+                req = self.slot_req[i]
+                req.output.append(int(new[i]))
+                self.slot_tok[i, 0] = int(new[i])
+                self.slot_len[i] += 1
+                self.slot_pos[i] += 1
         self._retire()
 
     # -- internals ---------------------------------------------------------
+    def _prompt_cap(self) -> int:
+        """Max admissible prompt tokens: KV capacity less one decode slot
+        and less any non-token prefix (vlm image tokens share the cache),
+        so padded prefill can never overflow into the rolling-cache path."""
+        n_prefix = (self.cfg.n_image_tokens
+                    if self.cfg.family == "vlm" and self.cfg.n_image_tokens
+                    else 0)
+        return self.ecfg.max_seq_len - 1 - n_prefix
+
+    def _bucket_len(self, n: int) -> int:
+        """Smallest power-of-two bucket >= n (floor ``prefill_bucket_min``),
+        capped at the prompt capacity; exact length when bucketing is off."""
+        cap = self._prompt_cap()
+        if not self._bucketed:
+            return min(n, cap)
+        b = self.ecfg.prefill_bucket_min
+        while b < n:
+            b *= 2
+        return min(b, cap)
+
     def _admit(self):
         for slot in [i for i, r in enumerate(self.slot_req) if r is None]:
-            if not self.waiting:
-                break
-            req = self.waiting.popleft()
-            prompt = req.prompt[: self.ecfg.max_seq_len - 1]
-            batch = {"tokens": jnp.asarray(prompt[None, :])}
-            if self.cfg.family == "vlm" and self.cfg.n_image_tokens:
-                batch["images"] = jnp.zeros(
-                    (1, self.cfg.n_image_tokens, self.cfg.d_model),
-                    jnp.bfloat16 if self.cfg.dtype == "bfloat16"
-                    else jnp.float32)
-            if self.cfg.family == "audio":
-                batch["frames"] = jnp.zeros(
-                    (1, self.cfg.encoder_len, self.cfg.d_model),
-                    jnp.bfloat16 if self.cfg.dtype == "bfloat16"
-                    else jnp.float32)
-            tok, rows = self._prefill_one(self.params, batch)
-            self.cache = self._splice(self.cache, rows,
-                                      jnp.asarray(slot, jnp.int32))
-            n_prompt = int(prompt.shape[0])
-            if self.cfg.family == "vlm" and self.cfg.n_image_tokens:
-                n_prompt += self.cfg.n_image_tokens
-            req.t_first = time.time()
-            req.output.append(int(tok[0]))
-            self.slot_req[slot] = req
-            self.slot_len[slot] = 1
-            self.slot_pos[slot] = n_prompt
-            self.slot_tok[slot, 0] = int(tok[0])
+            # a request that retires at admit (budget/EOS on its prefill
+            # token) frees the slot for the next waiting request *this*
+            # step, so insta-finished requests never cost batch capacity
+            while self.waiting and self.slot_req[slot] is None:
+                self._admit_one(slot, self.waiting.popleft())
+
+    def _admit_one(self, slot: int, req: Request):
+        prompt = req.prompt[: self._prompt_cap()]
+        n = int(prompt.shape[0])
+        nb = self._bucket_len(n)
+        toks = np.zeros(nb, np.int32)
+        toks[:n] = prompt   # right-pad to the bucket length
+        batch = {"tokens": jnp.asarray(toks[None, :])}
+        if self.cfg.family == "vlm" and self.cfg.n_image_tokens:
+            batch["images"] = jnp.zeros(
+                (1, self.cfg.n_image_tokens, self.cfg.d_model),
+                jnp.bfloat16 if self.cfg.dtype == "bfloat16"
+                else jnp.float32)
+        if self.cfg.family == "audio":
+            batch["frames"] = jnp.zeros(
+                (1, self.cfg.encoder_len, self.cfg.d_model),
+                jnp.bfloat16 if self.cfg.dtype == "bfloat16"
+                else jnp.float32)
+        n_prompt = n
+        if self.cfg.family == "vlm" and self.cfg.n_image_tokens:
+            n_prompt += self.cfg.n_image_tokens
+        tok, rows = self._prefill_one(
+            self.params, batch, jnp.asarray(n_prompt - 1, jnp.int32))
+        self.prefills += 1
+        req.t_first = time.time()
+        req.output.append(int(tok[0]))
+        # admit-time retirement: the prefill token may already hit the
+        # budget / EOS / capacity — never occupy a decode slot for it.
+        budget = req.max_new_tokens or self.ecfg.max_new_tokens
+        if (budget <= 1 or int(tok[0]) == self.ecfg.eos_token
+                or n_prompt >= self.ecfg.max_seq_len - 1):
+            req.t_done = time.time()
+            self.finished.append(req)
+            return
+        self.cache = self._splice(self.cache, rows,
+                                  jnp.asarray(slot, jnp.int32))
+        self.slot_req[slot] = req
+        self.slot_len[slot] = 1
+        self.slot_pos[slot] = n_prompt
+        self.slot_tok[slot, 0] = int(tok[0])
 
     def _retire(self):
         for i, req in enumerate(self.slot_req):
@@ -241,4 +280,9 @@ class ServingEngine:
             "qps": len(done) / wall if wall > 0 else float("inf"),
             "mean_latency_s": float(np.mean(lat)),
             "mean_ttft_s": float(np.mean(ttft)),
+            "decode_dispatches": self.decode_dispatches,
+            "decode_steps": self.decode_steps,
+            "dispatches_per_step": (self.decode_dispatches
+                                    / max(1, self.decode_steps)),
+            "prefills": self.prefills,
         }

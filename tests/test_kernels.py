@@ -96,6 +96,29 @@ def test_decode_attention_matches_ref(b, s, hq, hkv, dh, clen, dtype):
         **tol_for(dtype))
 
 
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_per_row_lengths(dtype):
+    """Fully-ragged batch: every row masks its own KV span, and each row
+    matches the same kernel run at that row's scalar length."""
+    b, s, hq, hkv, dh = 4, 512, 8, 2, 64
+    lens = jnp.asarray([1, 100, 333, 512], jnp.int32)
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = rand(k1, (b, 1, hq, dh), dtype)
+    kc = rand(k2, (b, s, hkv, dh), dtype)
+    vc = rand(k3, (b, s, hkv, dh), dtype)
+    got = ops.decode_attention(q, kc, vc, lens, block_s=256)
+    want = ref.decode_attention_ref(q, kc, vc, lens)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        **tol_for(dtype))
+    for i, n in enumerate(np.asarray(lens)):
+        row = ops.decode_attention(q[i:i + 1], kc[i:i + 1], vc[i:i + 1],
+                                   jnp.asarray(int(n)), block_s=256)
+        np.testing.assert_allclose(
+            np.asarray(got[i], np.float32), np.asarray(row[0], np.float32),
+            **tol_for(dtype))
+
+
 # ---------------------------------------------------------------------------
 # int4 quantized GEMV (W4A16 mobile mode)
 # ---------------------------------------------------------------------------

@@ -124,3 +124,100 @@ def test_summary_metrics(setup):
     assert s["requests"] == 3
     assert s["tokens"] == 9
     assert s["mean_ttft_s"] > 0 and s["mean_latency_s"] >= s["mean_ttft_s"]
+
+
+# ---------------------------------------------------------------------------
+# ragged single-dispatch invariants
+# ---------------------------------------------------------------------------
+
+def test_single_dispatch_regardless_of_distinct_positions(setup):
+    """The tentpole invariant: one jitted decode dispatch per engine
+    step no matter how many distinct slot positions are live."""
+    cfg, params = setup
+    rng = np.random.default_rng(6)
+    lens = [3, 9, 17, 33]  # four distinct positions, distinct buckets too
+    prompts = [rng.integers(0, cfg.vocab_size, size=n) for n in lens]
+    want = [straight_line_generate(params, cfg, p, 5, 64) for p in prompts]
+    eng = ServingEngine(params, cfg, EngineConfig(
+        max_batch=4, max_seq_len=64, max_new_tokens=5))
+    for p in prompts:
+        eng.submit(p)
+    eng.run()
+    assert eng.decode_steps > 0
+    assert eng.decode_dispatches == eng.decode_steps  # exactly 1 per step
+    got = {r.rid: r.output for r in eng.finished}
+    for i, w in enumerate(want):
+        assert got[i] == w, f"ragged request {i}"
+
+
+def test_max_new_tokens_one_emits_exactly_one(setup):
+    """Regression: budget=1 used to take an extra decode step and emit
+    budget+1 tokens; retirement is now checked at admit time."""
+    cfg, params = setup
+    rng = np.random.default_rng(7)
+    eng = ServingEngine(params, cfg, EngineConfig(
+        max_batch=2, max_seq_len=48, max_new_tokens=10))
+    r = eng.submit(rng.integers(0, cfg.vocab_size, size=8),
+                   max_new_tokens=1)
+    eng.run()
+    assert len(r.output) == 1
+    assert eng.decode_dispatches == 0  # never occupied a decode slot
+    want = straight_line_generate(params, cfg, r.prompt, 1, 48)
+    assert r.output == want
+
+
+def test_eos_on_prefill_token_retires_at_admit(setup):
+    """A request whose prefill token already equals eos_token must not
+    get an extra decode step."""
+    cfg, params = setup
+    rng = np.random.default_rng(8)
+    prompt = rng.integers(0, cfg.vocab_size, size=8)
+    first = straight_line_generate(params, cfg, prompt, 1, 48)[0]
+    eng = ServingEngine(params, cfg, EngineConfig(
+        max_batch=2, max_seq_len=48, max_new_tokens=10, eos_token=first))
+    r = eng.submit(prompt)
+    eng.run()
+    assert r.output == [first]
+    assert eng.decode_dispatches == 0
+
+
+def test_bucketed_prefill_preserves_outputs(setup):
+    """Right-padded bucketed prefill must be token-identical to exact-
+    length prefill (pad KV is masked by the per-slot length vector)."""
+    cfg, params = setup
+    rng = np.random.default_rng(9)
+    lens = [5, 16, 21]  # inside / exactly-on / above a bucket boundary
+    prompts = [rng.integers(0, cfg.vocab_size, size=n) for n in lens]
+    want = [straight_line_generate(params, cfg, p, 4, 64) for p in prompts]
+    eng = ServingEngine(params, cfg, EngineConfig(
+        max_batch=4, max_seq_len=64, max_new_tokens=4))
+    assert eng._bucketed
+    assert [eng._bucket_len(n) for n in lens] == [16, 16, 32]
+    for p in prompts:
+        eng.submit(p)
+    eng.run()
+    got = {r.rid: r.output for r in eng.finished}
+    for i, w in enumerate(want):
+        assert got[i] == w, f"bucketed request {i}"
+
+
+def test_hybrid_family_ragged_engine():
+    """Hybrid (Mamba2+attn) slots at ragged positions: the per-row KV
+    scatter and the live-masked SSM/conv state advance must both hold.
+    Exercises the recurrent-merge path the dense tests never touch."""
+    cfg = registry.get_smoke_config("zamba2-2.7b").replace(dtype="float32")
+    params = MD.init_params(jax.random.PRNGKey(1), cfg)
+    rng = np.random.default_rng(10)
+    lens = [5, 9, 14]
+    prompts = [rng.integers(0, cfg.vocab_size, size=n) for n in lens]
+    want = [straight_line_generate(params, cfg, p, 4, 48) for p in prompts]
+    eng = ServingEngine(params, cfg, EngineConfig(
+        max_batch=4, max_seq_len=48, max_new_tokens=4))
+    assert not eng._bucketed  # recurrent state cannot absorb pad tokens
+    for p in prompts:
+        eng.submit(p)
+    eng.run()
+    assert eng.decode_dispatches == eng.decode_steps
+    got = {r.rid: r.output for r in eng.finished}
+    for i, w in enumerate(want):
+        assert got[i] == w, f"hybrid ragged request {i}"

@@ -169,3 +169,35 @@ def test_profile_scaling_preserves_energies():
 
 def test_engine_count_per_8u():
     assert HW.ENGINES_PER_8U == 12  # 4 servers x 24 DIMMs / 8 per engine
+
+
+# ---------------------------------------------------------------------------
+# decode-trace memoization + ragged serving
+# ---------------------------------------------------------------------------
+
+def test_decode_trace_rekeyed_by_batch_and_len():
+    """Regression: the decode trace was memoized ignoring (batch,
+    max_len), so a reused simulator silently returned the first call's
+    op stream for every later batch size / sequence length."""
+    sim = make_sim()
+    ops_small = sim._decode_ops_linear(1, 256)
+    ops_big = sim._decode_ops_linear(8, 1024)
+    assert ops_small is not ops_big
+    f1 = sum(o.at(128).flops for o in ops_small)
+    f8 = sum(o.at(128).flops for o in ops_big)
+    assert f8 > 4 * f1  # 8x batch must multiply the decode work
+    # and the public decode() path reflects the batch size
+    assert sim.decode(8, 128, 4).seconds > sim.decode(1, 128, 4).seconds
+
+
+def test_ragged_serve_single_dispatch():
+    """The simulated cloud path charges one ragged dispatch per step and
+    is keyed separately from the aligned trace."""
+    sim = make_sim()
+    r = sim.serve([64, 128, 256, 32], 16)
+    assert r["decode_dispatches"] == 16
+    assert r["tokens_per_s"] > 0 and r["energy_per_token_j"] > 0
+    assert any(k[2] for k in sim._decode_linear)  # ragged trace cached
+    sim.decode(4, 120, 16)
+    keys = set(sim._decode_linear)
+    assert (4, 136, True) in keys and (4, 136, False) in keys
