@@ -1,20 +1,28 @@
-"""Serving-engine batching benchmark: aligned vs. fully-ragged workloads.
+"""Serving-engine batching benchmark: aligned vs. fully-ragged
+workloads, contiguous vs. paged KV-cache backends.
 
-The tentpole invariant under test: ``ServingEngine.step`` issues exactly
-**one** jitted decode dispatch per step regardless of how many distinct
-slot positions are live. A position-grouped engine degrades to
-``max_batch`` launches the moment prompt lengths diverge; the ragged
-single-dispatch engine stays at 1 and its tokens/s is flat across the
-two workloads.
+Two invariants under test:
+
+- ``ServingEngine.step`` issues exactly **one** jitted decode dispatch
+  per step regardless of how many distinct slot positions are live (a
+  position-grouped engine degrades to ``max_batch`` launches the moment
+  prompt lengths diverge), and the cache backend must not change that.
+- The paged (block-table) backend produces the same tokens as the
+  contiguous backend while holding strictly fewer resident KV bytes on
+  ragged workloads — the vLLM-style capacity win the paper's
+  keep-KV-resident cloud argument (§1.2, §3.4) depends on.
 
 Also cross-checks against the analytical simulator's continuous-batching
-path (``LLMSimulator.serve``) on a Table-1 cloud profile, which charges
-the same single-dispatch ragged decode graph the engine compiles.
+path (``LLMSimulator.serve``) on Table-1 cloud profiles, which charges
+the same single-dispatch ragged decode graph — and the same resident-KV
+accounting — as the engine backend it models.
 
 Run:  PYTHONPATH=src python -m benchmarks.run serving
+      PYTHONPATH=src python -m benchmarks.bench_serving --json out.json
 """
 from __future__ import annotations
 
+import json
 import time
 
 import jax
@@ -40,9 +48,10 @@ def _workload(kind: str, rng):
     return list(rng.integers(6, 32, size=2 * MAX_BATCH))  # fully ragged
 
 
-def _drive(params, cfg, lens, rng):
+def _drive(params, cfg, lens, rng, kv_cache):
     eng = ServingEngine(params, cfg, EngineConfig(
-        max_batch=MAX_BATCH, max_seq_len=MAX_SEQ, max_new_tokens=N_NEW))
+        max_batch=MAX_BATCH, max_seq_len=MAX_SEQ, max_new_tokens=N_NEW,
+        kv_cache=kv_cache))
     prompts = [rng.integers(0, cfg.vocab_size, size=int(n)) for n in lens]
     # warm every prefill bucket + the decode dispatch out of the timing
     for p in prompts:
@@ -54,11 +63,12 @@ def _drive(params, cfg, lens, rng):
     t0 = time.time()
     for p in prompts:
         eng.submit(p)
-    eng.run()
+    outputs = {r.rid: r.output for r in eng.run()}
     wall = time.time() - t0
     s = eng.summary()
     toks = s["tokens"]
     return {
+        "kv_cache": kv_cache,
         "requests": s["requests"],
         "tokens": toks,
         "tok_s": toks / wall if wall > 0 else float("inf"),
@@ -66,43 +76,89 @@ def _drive(params, cfg, lens, rng):
         "steps": s["decode_steps"],
         "disp_per_step": s["dispatches_per_step"],
         "distinct_pos": len(set(int(n) for n in lens)),
+        "resident_kv_bytes": s["resident_kv_bytes"],
+        "contiguous_kv_bytes": s["contiguous_kv_bytes"],
+        "outputs": outputs,
     }
 
 
-def run():
+def run(json_path: str | None = None):
     cfg = registry.get_smoke_config(MODEL).replace(dtype="float32")
     params = MD.init_params(jax.random.PRNGKey(0), cfg)
-    rng = np.random.default_rng(0)
 
+    results = {"model": MODEL, "max_batch": MAX_BATCH, "max_seq": MAX_SEQ,
+               "n_new": N_NEW, "engine": [], "analytical": []}
     rows = []
+    mismatched = []
     for kind in ("aligned", "ragged"):
-        lens = _workload(kind, rng)
-        m = _drive(params, cfg, lens, rng)
-        rows.append([kind, m["requests"], m["distinct_pos"], m["tokens"],
-                     r3(m["tok_s"]), m["dispatches"], m["steps"],
-                     r3(m["disp_per_step"])])
+        lens = _workload(kind, np.random.default_rng(0))
+        per_backend = {}
+        for kv in ("contiguous", "paged"):
+            m = _drive(params, cfg, lens, np.random.default_rng(1), kv)
+            per_backend[kv] = m
+            rows.append([kind, kv, m["requests"], m["distinct_pos"],
+                         m["tokens"], r3(m["tok_s"]), m["dispatches"],
+                         r3(m["disp_per_step"]),
+                         f"{m['resident_kv_bytes'] / 1024:.0f}K",
+                         f"{m['contiguous_kv_bytes'] / 1024:.0f}K"])
+            results["engine"].append(
+                {"workload": kind,
+                 **{k: v for k, v in m.items() if k != "outputs"}})
+        same = (per_backend["paged"]["outputs"]
+                == per_backend["contiguous"]["outputs"])
+        results["engine"].append({"workload": kind,
+                                  "paged_matches_contiguous": same})
+        if not same:
+            mismatched.append(kind)
     print_table(
         f"engine batching ({MODEL} smoke, {MAX_BATCH} slots, CPU numbers)",
-        ["workload", "reqs", "distinct lens", "tokens", "tok/s",
-         "dispatches", "steps", "disp/step"],
+        ["workload", "kv_cache", "reqs", "distinct lens", "tokens", "tok/s",
+         "dispatches", "disp/step", "resident KV", "dense KV"],
         rows)
 
     # the same two workloads on the paper's cloud hardware (analytical)
     full = registry.get_config(MODEL)
     sim_rows = []
     for kind in ("aligned", "ragged"):
-        lens = _workload(kind, np.random.default_rng(0))
-        for hw in (HW.PIM_AI_CHIP, HW.DGX_H100):
-            sim = LLMSimulator(full, hw, SimConfig())
-            r = sim.serve(lens[:MAX_BATCH], N_NEW)
-            sim_rows.append([kind, hw.name, r3(r["tokens_per_s"]),
-                             r3(r["energy_per_token_j"] * 1e3),
-                             r["decode_dispatches"]])
+        lens = _workload(kind, np.random.default_rng(0))[:MAX_BATCH]
+        for kv in ("contiguous", "paged"):
+            for hw in (HW.PIM_AI_CHIP, HW.DGX_H100):
+                sim = LLMSimulator(full, hw, SimConfig())
+                # max_seq_len mirrors the engine's provisioned capacity:
+                # the dense charge is max_batch x max_seq_len regardless
+                # of what the workload touches
+                r = sim.serve(lens, N_NEW, kv_cache=kv,
+                              max_seq_len=MAX_SEQ)
+                sim_rows.append([kind, kv, hw.name, r3(r["tokens_per_s"]),
+                                 r3(r["energy_per_token_j"] * 1e3),
+                                 f"{r['resident_kv_bytes'] / 2**20:.0f}M",
+                                 f"{r['contiguous_kv_bytes'] / 2**20:.0f}M"])
+                results["analytical"].append(
+                    {"workload": kind, "kv_cache": kv, "profile": hw.name,
+                     "tokens_per_s": r["tokens_per_s"],
+                     "energy_per_token_j": r["energy_per_token_j"],
+                     "resident_kv_bytes": r["resident_kv_bytes"],
+                     "contiguous_kv_bytes": r["contiguous_kv_bytes"]})
     print_table(
         "analytical continuous batching (Table-1 profiles, single-dispatch)",
-        ["workload", "profile", "tok/s", "mJ/token", "dispatches"],
+        ["workload", "kv_cache", "profile", "tok/s", "mJ/token",
+         "resident KV", "dense KV"],
         sim_rows)
+
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(results, f, indent=2, default=float)
+        print(f"\n[wrote {json_path}]")
+    if mismatched:
+        # hard-fail (CI smoke step must go red on the core invariant)
+        raise SystemExit(
+            f"paged outputs diverge from contiguous on: {mismatched}")
+    return results
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None,
+                    help="write machine-readable results to this path")
+    run(ap.parse_args().json)

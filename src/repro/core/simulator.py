@@ -176,24 +176,34 @@ class LLMSimulator:
         return self._prefill_cache[key]
 
     def _decode_ops_linear(self, batch: int, max_len: int, *,
-                           ragged: bool = False):
+                           ragged: bool = False,
+                           kv_cache: str = "contiguous",
+                           kv_block_size: int = 16):
         """Linear-in-cache-length op stream of one decode step.
 
-        Memoized per ``(batch, max_len, ragged)`` — a reused simulator
-        must not return the first call's trace for a different batch
-        size or sequence length. ``ragged=True`` traces the serving
-        engine's fully-ragged single-dispatch step: per-row position
-        vector + live mask (masked KV scatter instead of a
-        dynamic-update-slice), so simulated cloud batching charges the
-        same compiled graph the real engine runs.
+        Memoized per ``(batch, max_len, ragged, kv_cache, block)`` — a
+        reused simulator must not return the first call's trace for a
+        different batch size or sequence length. ``ragged=True`` traces
+        the serving engine's fully-ragged single-dispatch step: per-row
+        position vector + live mask (masked KV scatter instead of a
+        dynamic-update-slice). ``kv_cache="paged"`` traces the
+        block-table decode graph instead — KV pools sized to the
+        *resident* worst case (``batch * ceil(L/bs)`` blocks) with
+        per-row block-table gathers — so simulated cloud batching
+        charges the same compiled graph, and the same resident KV
+        bytes, as the engine backend it models.
         """
-        key = (batch, max_len, ragged)
+        key = (batch, max_len, ragged, kv_cache, kv_block_size)
         if key not in self._decode_linear:
             params = jax.eval_shape(
                 lambda k: MD.init_params(k, self.cfg), jax.random.PRNGKey(0))
 
             def of_len(L):
-                cache = MD.cache_spec(self.cfg, batch, L)
+                if kv_cache == "paged":
+                    cache = MD.paged_cache_spec(
+                        self.cfg, batch, L, kv_block_size, ragged=ragged)
+                else:
+                    cache = MD.cache_spec(self.cfg, batch, L)
                 tok = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
                 if ragged:
                     cache["len"] = jax.ShapeDtypeStruct((batch,), jnp.int32)
@@ -233,14 +243,17 @@ class LLMSimulator:
         return total
 
     def decode(self, batch: int, n_in: float, n_out: int, *,
-               ragged: bool = False) -> PhaseResult:
+               ragged: bool = False, kv_cache: str = "contiguous",
+               kv_block_size: int = 16) -> PhaseResult:
         """Generate n_out tokens after the first (cache grows each step).
 
         ``n_in`` may be fractional (mean prompt length of a ragged
         batch); ``ragged`` charges the engine's single-dispatch ragged
-        decode graph instead of the aligned one."""
+        decode graph instead of the aligned one; ``kv_cache="paged"``
+        charges the block-table graph over resident-sized pools."""
         ops = self._decode_ops_linear(batch, int(math.ceil(n_in)) + n_out,
-                                      ragged=ragged)
+                                      ragged=ragged, kv_cache=kv_cache,
+                                      kv_block_size=kv_block_size)
         total = PhaseResult()
         # evaluate the linear per-op model at each step's cache length;
         # summing the linear model over steps == evaluating at the mean L.
@@ -265,13 +278,24 @@ class LLMSimulator:
         total.host_s += self.sim.orchestration_s * n_out
         return total
 
-    def serve(self, n_ins, n_out: int) -> dict:
+    def serve(self, n_ins, n_out: int, *, kv_cache: str = "contiguous",
+              kv_block_size: int = 16,
+              max_seq_len: int | None = None) -> dict:
         """Continuous-batching cloud scenario (matches ``ServingEngine``):
         per-request prefill + one fully-ragged decode dispatch per step
         over the whole batch, each row's KV span growing from its own
         prompt length. The linear per-op cost model is evaluated at the
         batch-mean cache length (summing a linear model over ragged rows
-        == evaluating it at the row mean)."""
+        == evaluating it at the row mean).
+
+        ``kv_cache`` selects the cache backend being modelled, exactly
+        mirroring ``EngineConfig.kv_cache``: ``"paged"`` traces the
+        block-table decode graph and reports resident KV bytes from the
+        blocks the workload actually touches, instead of the dense
+        ``batch x max_seq_len`` charge (``max_seq_len`` defaults to the
+        workload's own ``max(n_in) + n_out`` capacity)."""
+        from repro.serving.kv_cache import (contiguous_kv_bytes,
+                                            paged_resident_kv_bytes)
         batch = len(n_ins)
         enc = PhaseResult()
         t_cum = ttft_sum = 0.0
@@ -281,7 +305,18 @@ class LLMSimulator:
             t_cum += e.seconds      # prefills run sequentially: request i
             ttft_sum += t_cum       # waits for every earlier admit too
         n_mean = sum(float(n) for n in n_ins) / batch
-        dec = self.decode(batch, n_mean, n_out, ragged=True)
+        dec = self.decode(batch, n_mean, n_out, ragged=True,
+                          kv_cache=kv_cache, kv_block_size=kv_block_size)
+        cap = max_seq_len or (max(int(n) for n in n_ins) + n_out)
+        contiguous_bytes = contiguous_kv_bytes(self.cfg, batch, cap)
+        if kv_cache == "paged":
+            # positions each request ever writes: its prompt plus all
+            # but the last generated token, capped by the capacity
+            resident = paged_resident_kv_bytes(
+                self.cfg, [min(int(n) + n_out - 1, cap) for n in n_ins],
+                kv_block_size)
+        else:
+            resident = contiguous_bytes
         return {
             "encode": enc,
             "decode": dec,
@@ -290,6 +325,9 @@ class LLMSimulator:
             "energy_per_token_j": dec.energy_j / (batch * n_out),
             "qps": batch / (enc.seconds + dec.seconds),
             "decode_dispatches": n_out,   # one per step, whole batch
+            "kv_cache": kv_cache,
+            "resident_kv_bytes": resident,
+            "contiguous_kv_bytes": contiguous_bytes,
         }
 
     def generate(self, batch: int, n_in: int, n_out: int) -> dict:

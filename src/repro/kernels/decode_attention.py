@@ -16,6 +16,17 @@ span — the fully-ragged continuous-batching case where every serving
 slot sits at a different absolute position — without the host slicing
 the cache or splitting the batch into position groups. A scalar
 ``cache_len`` is accepted too (broadcast to all rows).
+
+Paged variant: :func:`decode_attention_paged_bhgd` reads KV from a
+shared block pool (NB, bs, Hkv, Dh) through per-row block tables
+(B, W) — the vLLM-style layout where each serving slot holds only the
+blocks it has actually written. The block table is a *second*
+scalar-prefetch operand, so the K/V BlockSpec index maps dereference
+``tab[b, w]`` before the DMA is issued: the kernel streams exactly the
+row's own blocks HBM->VMEM, never a gathered dense copy. Sentinel
+(unallocated) table entries are clamped onto the last pool block and
+masked off by ``cache_len`` — identical to how the unwritten tail of a
+contiguous cache is masked.
 """
 from __future__ import annotations
 
@@ -110,4 +121,59 @@ def decode_attention_bhgd(q, k_cache, v_cache, cache_len, *, block_s=512,
         out_shape=jax.ShapeDtypeStruct((b, hkv, g, dh), q.dtype),
         interpret=interpret,
     )(lens, q, k_cache, v_cache)
+    return out
+
+
+def _paged_kernel(len_ref, tab_ref, *rest, **kw):
+    # the block table is consumed by the BlockSpec index maps (it steers
+    # which pool block each grid step DMAs); the body itself is the same
+    # online-softmax accumulation as the contiguous kernel.
+    return _kernel(len_ref, *rest, **kw)
+
+
+def decode_attention_paged_bhgd(q, k_pool, v_pool, block_tables, cache_len,
+                                *, interpret=True):
+    """Paged split-KV flash decode.
+
+    q (B, Hkv, G, Dh); ``k_pool``/``v_pool`` (NB, bs, Hkv, Dh) shared
+    block pools; ``block_tables`` (B, W) int32 per-row block ids (their
+    concatenation is the row's logical KV span, entries >= NB are
+    unallocated sentinels); ``cache_len`` scalar or per-row (B,) valid
+    lengths. One grid step streams one pool block — the KV tile size is
+    the cache block size, so paging never re-reads or densifies the
+    pool. Returns (B, Hkv, G, Dh).
+    """
+    b, hkv, g, dh = q.shape
+    nb, bs, _, _ = k_pool.shape
+    w = block_tables.shape[1]
+    kernel = functools.partial(_paged_kernel, scale=1.0 / math.sqrt(dh),
+                               block_s=bs)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, w),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, dh),
+                         lambda bi, h, wi, *_: (bi, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, dh),
+                         lambda bi, h, wi, lens, tab:
+                         (jnp.minimum(tab[bi, wi], nb - 1), 0, h, 0)),
+            pl.BlockSpec((1, bs, 1, dh),
+                         lambda bi, h, wi, lens, tab:
+                         (jnp.minimum(tab[bi, wi], nb - 1), 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, dh),
+                               lambda bi, h, wi, *_: (bi, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, dh), jnp.float32),
+        ],
+    )
+    lens = jnp.broadcast_to(
+        jnp.asarray(cache_len, jnp.int32).reshape(-1), (b,))
+    out = pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, dh), q.dtype),
+        interpret=interpret,
+    )(lens, jnp.asarray(block_tables, jnp.int32), q, k_pool, v_pool)
     return out

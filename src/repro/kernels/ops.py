@@ -61,6 +61,21 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, block_s=512):
     return o.reshape(b, 1, hq, dh)
 
 
+@jax.jit
+def paged_decode_attention(q, k_pool, v_pool, block_tables, cache_len):
+    """q (B,1,Hq,Dh); pools (NB,bs,Hkv,Dh); block_tables (B,W) int32.
+    Split-KV GQA flash decode over a paged (block-table) KV cache — one
+    streamed pool block per grid step, no dense gather."""
+    b, _, hq, dh = q.shape
+    hkv = k_pool.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, dh)
+    o = _dec.decode_attention_paged_bhgd(qg, k_pool, v_pool, block_tables,
+                                         cache_len,
+                                         interpret=_interpret())
+    return o.reshape(b, 1, hq, dh)
+
+
 @partial(jax.jit, static_argnames=("group", "block_n"))
 def quant_gemv(x, w_packed, scales, *, group=128, block_n=256):
     return _qg.quant_gemv(x, w_packed, scales, group=group,

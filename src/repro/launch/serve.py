@@ -30,6 +30,14 @@ def main(argv=None):
     ap.add_argument("--ckpt-dir", default=None,
                     help="restore params from the latest checkpoint")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--kv-cache", default="contiguous",
+                    choices=("contiguous", "paged"),
+                    help="KV-cache backend (paged = block tables)")
+    ap.add_argument("--kv-block-size", type=int, default=16)
+    ap.add_argument("--sample", default="greedy",
+                    choices=("greedy", "temperature"))
+    ap.add_argument("--temperature", type=float, default=1.0)
+    ap.add_argument("--top-k", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = (registry.get_smoke_config(args.arch) if args.smoke
@@ -45,7 +53,9 @@ def main(argv=None):
 
     eng = ServingEngine(params, cfg, EngineConfig(
         max_batch=args.slots, max_seq_len=args.capacity,
-        max_new_tokens=args.max_new))
+        max_new_tokens=args.max_new, kv_cache=args.kv_cache,
+        kv_block_size=args.kv_block_size, sample=args.sample,
+        temperature=args.temperature, top_k=args.top_k, seed=args.seed))
     rng = np.random.default_rng(args.seed)
     for _ in range(args.requests):
         eng.submit(rng.integers(0, cfg.vocab_size, size=args.prompt_len))
@@ -54,7 +64,10 @@ def main(argv=None):
     print(f"served {s['requests']} requests / {s['tokens']} tokens | "
           f"{s['tokens_per_s']:.1f} tok/s | {s['qps']:.2f} QPS | "
           f"mean TTFT {s['mean_ttft_s']*1e3:.0f} ms | "
-          f"mean latency {s['mean_latency_s']*1e3:.0f} ms")
+          f"mean latency {s['mean_latency_s']*1e3:.0f} ms | "
+          f"kv={s['kv_cache']} resident "
+          f"{s['resident_kv_bytes']/2**20:.1f} MiB "
+          f"(dense {s['contiguous_kv_bytes']/2**20:.1f} MiB)")
     sample = done[0]
     print(f"sample output (rid 0): {sample.output}")
     return 0

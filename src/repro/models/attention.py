@@ -175,8 +175,21 @@ def chunked_attention(q, k, v, *, causal=True, window=None, q_offset=0,
     return out[:, :sq]
 
 
+def gather_kv_blocks(pool, block_tables):
+    """Paged-cache gather: ``pool`` (NB, bs, Hkv, Dh) indexed by per-row
+    block tables (B, W) -> dense view (B, W*bs, Hkv, Dh). Sentinel /
+    out-of-range table entries are clamped onto a real block; their rows
+    are garbage and must be masked by ``cache_len`` downstream (exactly
+    like the unwritten tail of a contiguous cache)."""
+    nb, bs, hkv, dh = pool.shape
+    idx = jnp.clip(block_tables, 0, nb - 1)
+    g = pool[idx]  # (B, W, bs, Hkv, Dh)
+    return g.reshape(idx.shape[0], idx.shape[1] * bs, hkv, dh)
+
+
 def decode_attention(q, k_cache, v_cache, cache_len, *, window=None,
-                     kv_offset=0, extra_k=None, extra_v=None):
+                     kv_offset=0, extra_k=None, extra_v=None,
+                     block_tables=None):
     """Single-token attention against a (possibly rolling) KV cache.
 
     q: (B, 1, Hq, Dh); k_cache/v_cache: (B, Smax, Hkv, Dh);
@@ -188,11 +201,21 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, window=None,
     cache_len >= window. ``kv_offset`` is the absolute position of
     cache slot 0 (0 for dense caches).
 
+    ``block_tables`` (B, W) int32: paged-cache indirection. When given,
+    ``k_cache``/``v_cache`` are shared block *pools* (NB, bs, Hkv, Dh)
+    and each row's KV is gathered through its block table into the
+    dense (B, W*bs, Hkv, Dh) view first. With ``W*bs`` equal to the
+    contiguous capacity, the math below is bitwise identical to the
+    contiguous layout (garbage rows are masked either way).
+
     ``extra_k``/``extra_v`` (B, 1, Hkv, Dh): the *current* token's KV,
     treated as one additional always-valid slot. This lets the caller
     keep the cache write outside the attention op (single
     dynamic_update_slice over all layers, no double-buffered cache).
     """
+    if block_tables is not None:
+        k_cache = gather_kv_blocks(k_cache, block_tables)
+        v_cache = gather_kv_blocks(v_cache, block_tables)
     b, _, hq, dh = q.shape
     _, smax, hkv, _ = k_cache.shape
     qg = _expand_gqa(q, hkv)[:, 0]  # (b, hkv, g, dh)

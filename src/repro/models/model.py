@@ -114,10 +114,14 @@ def attn_full(p, cfg, x, *, positions, causal=True, window=None,
     return jnp.einsum("bse,ed->bsd", o, p["wo"]), (k, v)
 
 
-def attn_decode(p, cfg, x, k_cache, v_cache, cache_len, *, window=None):
+def attn_decode(p, cfg, x, k_cache, v_cache, cache_len, *, window=None,
+                block_tables=None):
     """Single-token attention. x: (B,1,d). ``cache_len`` is a scalar, or
     a per-row (B,) vector for fully-ragged continuous batching (each row
-    rotates/masks at its own absolute position). Returns (out, k1, v1).
+    rotates/masks at its own absolute position). With ``block_tables``
+    (B, W), ``k_cache``/``v_cache`` are paged block pools (NB, bs, H,
+    Dh) and each row's KV span is gathered through its table. Returns
+    (out, k1, v1).
     """
     q, k1, v1 = _proj_qkv(p, cfg, x)
     if _use_rope(cfg):
@@ -127,7 +131,8 @@ def attn_decode(p, cfg, x, k_cache, v_cache, cache_len, *, window=None):
         q = L.apply_rope(q, pos, cfg.rope_theta)
         k1 = L.apply_rope(k1, pos, cfg.rope_theta)
     o = decode_attention(q, k_cache, v_cache, cache_len, window=window,
-                         extra_k=k1, extra_v=v1)
+                         extra_k=k1, extra_v=v1,
+                         block_tables=block_tables)
     o = o.reshape(x.shape[0], 1, -1)
     return jnp.einsum("bse,ed->bsd", o, p["wo"]), k1, v1
 
@@ -182,10 +187,12 @@ def decoder_block(p, cfg, x, *, positions, attn_impl, causal=True,
 
 
 def decoder_block_decode(p, cfg, x, k_cache, v_cache, cache_len, *,
-                         window=None, cross_k=None, cross_v=None):
+                         window=None, cross_k=None, cross_v=None,
+                         block_tables=None):
     h = L.apply_norm(p["ln1"], cfg, x)
     a, k1, v1 = attn_decode(p["attn"], cfg, h, k_cache, v_cache,
-                            cache_len, window=window)
+                            cache_len, window=window,
+                            block_tables=block_tables)
     x = x + a
     if cross_k is not None:
         h = L.apply_norm(p["ln_x"], cfg, x)
@@ -460,6 +467,44 @@ def cache_spec(cfg, batch_size, capacity):
 
 
 # ---------------------------------------------------------------------------
+# paged (block-table) cache — attention families only
+# ---------------------------------------------------------------------------
+
+def paged_pool_struct(cfg, num_blocks, block_size, dtype=None):
+    """Shape/dtype of the shared paged KV pools: ``num_blocks`` blocks
+    of ``block_size`` positions each, all layers stacked on the leading
+    axis. Only attention families (dense/moe/vlm) page their KV;
+    recurrent state is O(1)/slot and stays contiguous."""
+    if cfg.family not in TRANSFORMER_FAMILIES:
+        raise ValueError(f"paged KV pools unsupported for {cfg.family!r}")
+    dt = dtype or L.dtype_of(cfg)
+    shape = (cfg.n_layers, num_blocks, block_size, cfg.n_kv_heads,
+             cfg.d_head)
+    return {"k": (shape, dt), "v": (shape, dt)}
+
+
+def init_paged_pools(cfg, num_blocks, block_size):
+    st = paged_pool_struct(cfg, num_blocks, block_size)
+    return (jnp.zeros(*st["k"]), jnp.zeros(*st["v"]))
+
+
+def paged_cache_spec(cfg, batch_size, capacity, block_size,
+                     num_blocks=None, *, ragged=False):
+    """ShapeDtypeStruct pytree of a paged decode cache (tracing /
+    simulator): pools + per-row block tables wide enough for
+    ``capacity`` positions. ``num_blocks`` defaults to exactly the
+    resident worst case, ``batch * ceil(capacity/block_size)``."""
+    w = -(-capacity // block_size)
+    nb = num_blocks or batch_size * w
+    st = paged_pool_struct(cfg, nb, block_size)
+    out = {k: jax.ShapeDtypeStruct(sh, dt) for k, (sh, dt) in st.items()}
+    out["block_tab"] = jax.ShapeDtypeStruct((batch_size, w), jnp.int32)
+    out["len"] = jax.ShapeDtypeStruct((batch_size,) if ragged else (),
+                                      jnp.int32)
+    return out
+
+
+# ---------------------------------------------------------------------------
 # prefill
 # ---------------------------------------------------------------------------
 
@@ -613,6 +658,23 @@ def _write_token_kv(cache_arr, kv, slot, live=None):
     return cache_arr.at[:, jnp.arange(b), slot].set(kv[:, :, 0], mode="drop")
 
 
+def _write_token_kv_paged(pool, kv, block_tab, pos, live=None):
+    """Paged analogue of :func:`_write_token_kv`: scatter one decoded
+    token's KV ``kv`` (L, B, 1, H, Dh) into the shared block pool
+    (L, NB, bs, H, Dh) at each row's ``pos`` via its block table
+    (B, W). Rows that are not live, or whose table entry is the
+    sentinel ``NB`` (block never allocated), drop the write."""
+    kv = kv.astype(pool.dtype)
+    nb, bs = pool.shape[1], pool.shape[2]
+    b = kv.shape[1]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
+    w_idx = jnp.minimum(pos // bs, block_tab.shape[1] - 1)
+    blk = jnp.take_along_axis(block_tab, w_idx[:, None], axis=1)[:, 0]
+    if live is not None:
+        blk = jnp.where(live, blk, nb)  # out-of-range rows are dropped
+    return pool.at[:, blk, pos % bs].set(kv[:, :, 0], mode="drop")
+
+
 def _merge_rows(new, old, live, axis):
     """Per-row live-mask merge for O(1) recurrent state leaves: rows
     where ``live`` is False keep their previous state."""
@@ -633,27 +695,41 @@ def decode_step(params, cfg, tokens, cache, *, live=None):
     freezes non-live rows: their KV rows, recurrent state, and length
     are left exactly as they were, so a serving engine can run free /
     retired slots through the same jitted step with no post-hoc cache
-    merge."""
+    merge.
+
+    Paged caches: when ``cache`` carries a ``block_tab`` leaf (B, W)
+    its ``k``/``v`` leaves are shared block pools (L, NB, bs, H, Dh)
+    — each attention layer gathers per-row KV through the block table
+    and the new token's KV is scattered to block ``tab[b, pos//bs]``,
+    offset ``pos % bs``. Attention families only."""
     x = L.embed_tokens(params["embed"], tokens)
     n = jnp.asarray(cache["len"], jnp.int32)
     fam = cfg.family
+    btab = cache.get("block_tab")
+    if btab is not None and (fam not in TRANSFORMER_FAMILIES
+                             or cfg.sliding_window is not None):
+        raise ValueError("paged cache requires an attention family "
+                         "without a rolling SWA cache")
 
     if fam in TRANSFORMER_FAMILIES:
-        c = cache["k"].shape[2]
-        slot = n % c if cfg.sliding_window is not None else n
+        if cfg.sliding_window is not None:
+            slot = n % cache["k"].shape[2]
+        else:
+            slot = n
         n_first = len(params.get("first_layers", []))
         k_news, v_news = [], []
         for i, lp in enumerate(params.get("first_layers", [])):
             x, k1, v1 = decoder_block_decode(
                 lp, cfg, x, cache["k"][i], cache["v"][i], n,
-                window=cfg.sliding_window)
+                window=cfg.sliding_window, block_tables=btab)
             k_news.append(k1)
             v_news.append(v1)
 
         def body(h, xs):
             lp, kc, vc = xs
             h, k1, v1 = decoder_block_decode(lp, cfg, h, kc, vc, n,
-                                             window=cfg.sliding_window)
+                                             window=cfg.sliding_window,
+                                             block_tables=btab)
             return h, (k1, v1)
 
         x, (ks, vs) = jax.lax.scan(
@@ -662,8 +738,14 @@ def decode_step(params, cfg, tokens, cache, *, live=None):
         if k_news:
             ks = jnp.concatenate([jnp.stack(k_news), ks], axis=0)
             vs = jnp.concatenate([jnp.stack(v_news), vs], axis=0)
-        cache["k"] = _write_token_kv(cache["k"], ks, slot, live)
-        cache["v"] = _write_token_kv(cache["v"], vs, slot, live)
+        if btab is None:
+            cache["k"] = _write_token_kv(cache["k"], ks, slot, live)
+            cache["v"] = _write_token_kv(cache["v"], vs, slot, live)
+        else:
+            cache["k"] = _write_token_kv_paged(cache["k"], ks, btab, n,
+                                               live)
+            cache["v"] = _write_token_kv_paged(cache["v"], vs, btab, n,
+                                               live)
 
     elif fam == "audio":
         pos = n.reshape(-1, 1) if n.ndim else jnp.full((1, 1), n, jnp.int32)

@@ -3,3 +3,13 @@ from repro.serving.engine import (  # noqa: F401
     Request,
     ServingEngine,
 )
+from repro.serving.kv_cache import (  # noqa: F401
+    BlockAllocator,
+    ContiguousCache,
+    KVCacheManager,
+    PagedCache,
+    contiguous_kv_bytes,
+    kv_bytes_per_token,
+    make_kv_cache,
+    paged_resident_kv_bytes,
+)

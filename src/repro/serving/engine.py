@@ -1,44 +1,57 @@
-"""Continuous-batching serving engine.
+"""Continuous-batching serving engine over a pluggable KV-cache API.
 
 The paper's cloud scenario batches decode requests "to balance memory
-bandwidth and compute performance" (§1.2) and runs 12 independent
-8-DIMM inference engines per 4 PIM servers (§3.4). This module is the
+bandwidth and compute performance" (§1.2) and keeps KV state resident
+next to the memory that serves it (§3.4). This module is the
 framework-side realization: a slot-based continuous-batching engine in
-the vLLM style, adapted to JAX's static-shape world.
+the vLLM style, adapted to JAX's static-shape world, that consumes its
+KV cache **only** through the :class:`~repro.serving.kv_cache.
+KVCacheManager` protocol:
 
-Shapes are static (XLA requirement): the engine owns ``max_batch``
-decode slots and a KV cache of fixed capacity. Requests join free slots
-as they arrive (prefill fills the slot's cache rows), decode advances
-live slots in batched ``decode_step`` calls, and finished slots (stop
-token / max tokens) free immediately for the next waiting request —
-prefill/decode interleave with no generation-length head-of-line
-blocking.
+- ``can_admit(n_prompt, budget)`` gates admission on actual capacity,
+- ``splice(rows, slot, ...)`` lands a batch-1 prefill into a slot,
+- ``decode_view(pos, live)`` yields the device pytree one ragged
+  decode dispatch consumes (dense cache, or block pools + block
+  tables),
+- ``commit(new_cache)`` stores the dispatch's result,
+- ``free(slot)`` releases everything at retirement,
+- ``resident_kv_bytes()`` is what the engine (and the analytical
+  simulator) report instead of assuming ``max_batch x max_seq_len``.
 
-Ragged positions: slots generally sit at different absolute positions.
-``decode_step`` threads a per-slot position vector ``(B,)`` through the
-attention mask (each row rotates and masks its own valid KV span) and a
-per-slot ``live`` mask through the KV write and recurrent-state
-(SSM/xLSTM/conv) updates, so one jitted dispatch advances every live
-slot regardless of how their prompt lengths diverge — the fully-ragged
-single-dispatch path. The hot path is exactly **one** kernel launch per
-engine step; ``decode_dispatches`` counts them.
+Two backends ship: ``ContiguousCache`` (dense per-slot rows — the only
+layout recurrent families and rolling SWA caches support) and
+``PagedCache`` (fixed-size blocks + per-slot block tables + free-list
+allocator; blocks allocate lazily and free at retirement, so ragged
+workloads hold resident KV strictly below the contiguous footprint and
+admission can oversubscribe slots against the same pool). The decode
+hot path is identical either way: exactly **one** jitted dispatch per
+engine step (``decode_dispatches`` counts them), with per-slot position
+and live-mask vectors threaded through ``decode_step`` → ``attn_decode``
+→ the split-KV decode kernel — paged caches additionally thread the
+block table, which the kernel dereferences via scalar prefetch.
+
+Sampling is a separate head outside the jitted model closures: the
+prefill/decode dispatches return logits, and ``EngineConfig.sample``
+picks the token — ``"greedy"`` (argmax, bitwise identical to the fused
+path it replaced) or ``"temperature"`` (temperature + optional top-k,
+per-request seeds folded with the request id and absolute position so a
+request's stream is reproducible wherever its slots land).
 
 Prefill admission is *bucketed* for attention families: prompts are
 right-padded to a small geometric set of bucket lengths so admission
-compiles once per bucket instead of once per unique prompt length. Pad
-positions are causally downstream of the real tokens (they never alter
-them) and their garbage KV rows are masked off by the per-slot length
-vector, then progressively overwritten as decode advances. Recurrent
-families (ssm/hybrid) and rolling SWA caches prefill at exact length —
-padding would advance their state / roll garbage into the window.
-
-Retirement is checked both at admit time (the prefill token may already
-satisfy EOS or a ``max_new_tokens=1`` budget — such requests never
-occupy a decode slot) and after each decode step.
+compiles once per bucket. Pad positions are causally downstream of the
+real tokens and their garbage KV is masked off by the per-slot length
+vector (paged backends never even store pad blocks past the prompt).
+Prompts longer than the capacity are truncated with a warning and the
+original length recorded on the request. Retirement is checked at admit
+time (a ``max_new_tokens<=1`` budget or an EOS prefill token never
+occupies a decode slot; ``max_new_tokens=0`` — an explicit zero, not an
+unset field — never even runs prefill) and after each decode step.
 """
 from __future__ import annotations
 
 import time
+import warnings
 from collections import deque
 from dataclasses import dataclass, field
 
@@ -47,18 +60,27 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import model as MD
+from repro.serving.kv_cache import contiguous_kv_bytes, make_kv_cache
 
 
 @dataclass
 class EngineConfig:
     max_batch: int = 8           # decode slots
-    max_seq_len: int = 2048      # KV capacity per slot
+    max_seq_len: int = 2048      # KV positions per request (capacity)
     eos_token: int = -1          # -1 -> never stops on token
     max_new_tokens: int = 64
-    sample: str = "greedy"
+    sample: str = "greedy"       # "greedy" | "temperature"
+    temperature: float = 1.0     # sampling temperature (sample="temperature")
+    top_k: int = 0               # 0 -> full vocab
+    seed: int = 0                # base sampling seed (per-request override
+                                 # via ``submit(..., seed=)``)
     prefill_bucket_min: int = 16  # smallest prompt bucket (power-of-two
                                   # buckets up from here); 0 disables
                                   # bucketing even for attention families
+    kv_cache: str = "contiguous"  # "contiguous" | "paged"
+    kv_block_size: int = 16       # paged: positions per KV block
+    kv_blocks: int = 0            # paged: pool size; 0 -> auto
+                                  # (max_batch * max_seq_len / block_size)
 
 
 @dataclass
@@ -66,11 +88,13 @@ class Request:
     rid: int
     prompt: np.ndarray                 # (S,) int32
     max_new_tokens: int | None = None
+    seed: int | None = None            # per-request sampling seed
     # filled by the engine:
     output: list = field(default_factory=list)
     t_submit: float = 0.0
     t_first: float = 0.0
     t_done: float = 0.0
+    truncated_from: int | None = None  # original prompt length, if clipped
 
     @property
     def ttft_s(self) -> float:
@@ -81,24 +105,20 @@ class Request:
         return self.t_done - self.t_submit
 
 
-# single source of truth for per-leaf batch axes lives next to the
-# cache layout itself
-cache_batch_axes = MD.cache_batch_axes
-
-
 class ServingEngine:
     def __init__(self, params, cfg, ecfg: EngineConfig):
         self.params = params
         self.cfg = cfg
         self.ecfg = ecfg
         B, C = ecfg.max_batch, ecfg.max_seq_len
-        self.cache = MD.init_cache(cfg, B, C)
-        self.axes = cache_batch_axes(self.cache)
+        self.kv = make_kv_cache(cfg, ecfg)
         # host-side slot bookkeeping
         self.slot_req: list[Request | None] = [None] * B
         self.slot_len = np.zeros(B, np.int32)     # tokens generated
         self.slot_pos = np.zeros(B, np.int32)     # absolute position
         self.slot_tok = np.zeros((B, 1), np.int32)
+        self.slot_rid = np.zeros(B, np.int32)     # sampling stream ids
+        self.slot_seed = np.zeros(B, np.int32)
         self.waiting: deque[Request] = deque()
         self.finished: list[Request] = []
         self._next_rid = 0
@@ -113,24 +133,9 @@ class ServingEngine:
                           and cfg.family in MD.TRANSFORMER_FAMILIES
                           + ("audio",)
                           and cfg.sliding_window is None)
-        axes = self.axes
 
         def _prefill_one(params, batch, last_idx):
-            logits, cache1 = MD.prefill(params, cfg, batch, C,
-                                        logit_index=last_idx)
-            return jnp.argmax(logits, -1).astype(jnp.int32), cache1
-
-        def _splice(big, rows, slot):
-            """Write batch-1 ``rows`` into slot ``slot`` of ``big``."""
-            out = {}
-            for name, b in big.items():
-                ax = axes[name]
-                if ax is None:
-                    out[name] = b
-                else:
-                    out[name] = jax.lax.dynamic_update_slice_in_dim(
-                        b, rows[name].astype(b.dtype), slot, ax)
-            return out
+            return MD.prefill(params, cfg, batch, C, logit_index=last_idx)
 
         def _decode_ragged(params, toks, cache, pos, live):
             """One fully-ragged dispatch: every live slot advances at
@@ -139,16 +144,44 @@ class ServingEngine:
             logits, new = MD.decode_step(params, cfg, toks,
                                          dict(cache, len=pos), live=live)
             new["len"] = cache["len"]  # positions tracked host-side
-            return jnp.argmax(logits, -1).astype(jnp.int32), new
+            return logits, new
 
         self._prefill_one = jax.jit(_prefill_one)  # one compile per bucket
-        self._splice = jax.jit(_splice)  # slot is traced: one compile total
         self._decode_ragged = jax.jit(_decode_ragged)  # one compile total
+        self._sample = jax.jit(self._make_sampler())
+
+    def _make_sampler(self):
+        """Sampling head over returned logits — outside the model jits,
+        so backends/layouts can never perturb token selection."""
+        mode = self.ecfg.sample
+        if mode == "greedy":
+            def _sample(logits, seeds, rids, pos):
+                return jnp.argmax(logits, -1).astype(jnp.int32)
+            return _sample
+        if mode == "temperature":
+            temp = float(max(self.ecfg.temperature, 1e-6))
+            top_k = int(self.ecfg.top_k)
+
+            def _sample(logits, seeds, rids, pos):
+                lg = logits.astype(jnp.float32) / temp
+                if 0 < top_k < lg.shape[-1]:
+                    kth = jax.lax.top_k(lg, top_k)[0][..., -1:]
+                    lg = jnp.where(lg < kth, -jnp.inf, lg)
+
+                def row(lgr, s, r, p):
+                    key = jax.random.fold_in(
+                        jax.random.fold_in(jax.random.PRNGKey(s), r), p)
+                    return jax.random.categorical(key, lgr)
+
+                return jax.vmap(row)(lg, seeds, rids, pos).astype(jnp.int32)
+            return _sample
+        raise ValueError(f"unknown sample mode {mode!r}")
 
     # -- public API -----------------------------------------------------------
-    def submit(self, prompt, max_new_tokens: int | None = None) -> Request:
+    def submit(self, prompt, max_new_tokens: int | None = None,
+               seed: int | None = None) -> Request:
         req = Request(self._next_rid, np.asarray(prompt, np.int32),
-                      max_new_tokens, t_submit=time.time())
+                      max_new_tokens, seed=seed, t_submit=time.time())
         self._next_rid += 1
         self.waiting.append(req)
         return req
@@ -167,12 +200,16 @@ class ServingEngine:
         self._admit()
         live = np.array([r is not None for r in self.slot_req])
         if live.any():
-            new_toks, self.cache = self._decode_ragged(
-                self.params, jnp.asarray(self.slot_tok), self.cache,
+            cache = self.kv.decode_view(self.slot_pos, live)
+            logits, new_cache = self._decode_ragged(
+                self.params, jnp.asarray(self.slot_tok), cache,
                 jnp.asarray(self.slot_pos), jnp.asarray(live))
+            self.kv.commit(new_cache)
             self.decode_dispatches += 1
             self.decode_steps += 1
-            new = np.asarray(new_toks)
+            new = np.asarray(self._sample(
+                logits, jnp.asarray(self.slot_seed),
+                jnp.asarray(self.slot_rid), jnp.asarray(self.slot_pos)))
             for i in np.nonzero(live)[0]:
                 req = self.slot_req[i]
                 req.output.append(int(new[i]))
@@ -182,6 +219,12 @@ class ServingEngine:
         self._retire()
 
     # -- internals ---------------------------------------------------------
+    def _budget(self, req: Request) -> int:
+        """Generation budget; an explicit 0 means zero tokens (the old
+        ``or``-fallback treated 0 as "use the engine default")."""
+        return (req.max_new_tokens if req.max_new_tokens is not None
+                else self.ecfg.max_new_tokens)
+
     def _prompt_cap(self) -> int:
         """Max admissible prompt tokens: KV capacity less one decode slot
         and less any non-token prefix (vlm image tokens share the cache),
@@ -208,11 +251,38 @@ class ServingEngine:
             # token) frees the slot for the next waiting request *this*
             # step, so insta-finished requests never cost batch capacity
             while self.waiting and self.slot_req[slot] is None:
-                self._admit_one(slot, self.waiting.popleft())
+                req = self.waiting.popleft()
+                if not self._admit_one(slot, req):
+                    # cache backend out of capacity: keep FIFO order and
+                    # retry after decode frees blocks at retirement
+                    self.waiting.appendleft(req)
+                    return
 
-    def _admit_one(self, slot: int, req: Request):
-        prompt = req.prompt[: self._prompt_cap()]
+    def _admit_one(self, slot: int, req: Request) -> bool:
+        """Admit ``req`` into ``slot``; False when the cache backend
+        cannot reserve capacity yet (request stays queued)."""
+        budget = self._budget(req)
+        if budget <= 0:
+            # explicit zero-token request: nothing to generate — never
+            # runs prefill, never touches the cache
+            req.t_first = req.t_done = time.time()
+            self.finished.append(req)
+            return True
+        cap = self._prompt_cap()
+        prompt = req.prompt
+        if int(prompt.shape[0]) > cap:
+            req.truncated_from = int(prompt.shape[0])
+            warnings.warn(
+                f"request {req.rid}: prompt truncated from "
+                f"{req.truncated_from} to {cap} tokens "
+                f"(max_seq_len={self.ecfg.max_seq_len})", stacklevel=4)
+            prompt = prompt[:cap]
         n = int(prompt.shape[0])
+        n_prompt = n
+        if self.cfg.family == "vlm" and self.cfg.n_image_tokens:
+            n_prompt += self.cfg.n_image_tokens
+        if not self.kv.can_admit(n_prompt, budget):
+            return False
         nb = self._bucket_len(n)
         toks = np.zeros(nb, np.int32)
         toks[:n] = prompt   # right-pad to the bucket length
@@ -227,35 +297,37 @@ class ServingEngine:
                 (1, self.cfg.encoder_len, self.cfg.d_model),
                 jnp.bfloat16 if self.cfg.dtype == "bfloat16"
                 else jnp.float32)
-        n_prompt = n
-        if self.cfg.family == "vlm" and self.cfg.n_image_tokens:
-            n_prompt += self.cfg.n_image_tokens
-        tok, rows = self._prefill_one(
+        logits, rows = self._prefill_one(
             self.params, batch, jnp.asarray(n_prompt - 1, jnp.int32))
         self.prefills += 1
+        seed = req.seed if req.seed is not None else self.ecfg.seed
+        tok = int(np.asarray(self._sample(
+            logits, jnp.asarray([seed], jnp.int32),
+            jnp.asarray([req.rid], jnp.int32),
+            jnp.asarray([n_prompt - 1], jnp.int32)))[0])
         req.t_first = time.time()
-        req.output.append(int(tok[0]))
+        req.output.append(tok)
         # admit-time retirement: the prefill token may already hit the
         # budget / EOS / capacity — never occupy a decode slot for it.
-        budget = req.max_new_tokens or self.ecfg.max_new_tokens
-        if (budget <= 1 or int(tok[0]) == self.ecfg.eos_token
+        if (budget <= 1 or tok == self.ecfg.eos_token
                 or n_prompt >= self.ecfg.max_seq_len - 1):
             req.t_done = time.time()
             self.finished.append(req)
-            return
-        self.cache = self._splice(self.cache, rows,
-                                  jnp.asarray(slot, jnp.int32))
+            return True
+        self.kv.splice(rows, slot, n_prompt, budget)
         self.slot_req[slot] = req
         self.slot_len[slot] = 1
         self.slot_pos[slot] = n_prompt
-        self.slot_tok[slot, 0] = int(tok[0])
+        self.slot_tok[slot, 0] = tok
+        self.slot_rid[slot] = req.rid
+        self.slot_seed[slot] = seed
+        return True
 
     def _retire(self):
         for i, req in enumerate(self.slot_req):
             if req is None:
                 continue
-            budget = req.max_new_tokens or self.ecfg.max_new_tokens
-            done = (self.slot_len[i] >= budget
+            done = (self.slot_len[i] >= self._budget(req)
                     or req.output[-1] == self.ecfg.eos_token
                     or self.slot_pos[i] >= self.ecfg.max_seq_len - 1)
             if done:
@@ -263,6 +335,7 @@ class ServingEngine:
                 self.finished.append(req)
                 self.slot_req[i] = None
                 self.slot_len[i] = 0
+                self.kv.free(i)
 
     # -- metrics ---------------------------------------------------------------
     def summary(self) -> dict:
@@ -285,4 +358,11 @@ class ServingEngine:
             "dispatches_per_step": (self.decode_dispatches
                                     / max(1, self.decode_steps)),
             "prefills": self.prefills,
+            "truncated": sum(r.truncated_from is not None for r in done),
+            "kv_cache": self.kv.name,
+            # peak bytes the cache backend actually held vs. what a
+            # dense max_batch x max_seq_len cache charges regardless
+            "resident_kv_bytes": self.kv.peak_resident_kv_bytes,
+            "contiguous_kv_bytes": contiguous_kv_bytes(
+                self.cfg, self.ecfg.max_batch, self.ecfg.max_seq_len),
         }

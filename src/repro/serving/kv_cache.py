@@ -1,0 +1,361 @@
+"""Pluggable KV-cache managers for the serving engine.
+
+The paper's cloud-scenario efficiency (§1.2, §3.4) hinges on how much
+KV state stays resident per admitted request: a contiguous layout
+charges every decode slot the full ``max_seq_len`` capacity even when
+its request only ever touches a fraction of it. This module makes the
+cache layout an explicit seam — :class:`KVCacheManager` is the protocol
+the engine (and the analytical simulator) consume, with two backends:
+
+- :class:`ContiguousCache` — the classic dense ``(L, B, C, H, Dh)``
+  layout; per-slot rows spliced/overwritten in place. Capacity cost is
+  ``max_batch * max_seq_len`` positions regardless of workload. The
+  only layout recurrent families (ssm/hybrid) and rolling SWA caches
+  support.
+- :class:`PagedCache` — vLLM-style block-table layout for attention
+  families: one shared pool of fixed-size KV blocks ``(L, NB, bs, H,
+  Dh)`` plus a host-side per-slot block table and free-list allocator.
+  Blocks are allocated lazily (prefill allocates just the prompt's
+  blocks, decode allocates one block per ``bs`` generated tokens) and
+  freed at retirement, so resident KV bytes track what requests
+  actually use — and admission can oversubscribe positions relative to
+  a contiguous cache of the same byte budget.
+
+Admission safety: ``PagedCache`` reserves (but does not allocate) the
+worst-case block count of every admitted request — ``can_admit`` only
+accepts a request when the free pool covers all outstanding
+reservations, so an admitted request can never deadlock mid-decode.
+
+The decode-view contract: ``decode_view(pos, live)`` returns the device
+pytree ``decode_step`` consumes. Contiguous returns the dense cache;
+paged returns ``{"k": pool, "v": pool, "block_tab": (B, W) int32,
+"len": ...}`` and ``model.decode_step`` follows the block-table
+indirection (gathered per-layer views for attention, per-row
+block/offset scatter for the new token's KV).
+"""
+from __future__ import annotations
+
+import math
+import warnings
+from typing import Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as MD
+
+
+# ---------------------------------------------------------------------------
+# shared byte accounting (engine summary + analytical simulator)
+# ---------------------------------------------------------------------------
+
+def kv_bytes_per_token(cfg) -> int:
+    """Bytes of self-attention KV state one cached position occupies
+    across all layers (0 for pure-recurrent families)."""
+    st = MD.cache_struct(cfg, 1, 1)
+    total = 0
+    for name in ("k", "v"):
+        if name in st:
+            sh, dt = st[name]
+            total += int(np.prod(sh)) * np.dtype(dt).itemsize
+    return total
+
+
+def contiguous_kv_bytes(cfg, batch: int, capacity: int) -> int:
+    """Total cache footprint of the dense layout (every leaf but the
+    position counter) — the ``max_batch x max_seq_len`` charge."""
+    total = 0
+    for name, (sh, dt) in MD.cache_struct(cfg, batch, capacity).items():
+        if name == "len":
+            continue
+        total += int(np.prod(sh)) * np.dtype(dt).itemsize
+    return total
+
+
+def paged_resident_kv_bytes(cfg, lens, block_size: int) -> int:
+    """Resident bytes of a paged cache holding ``lens[i]`` positions per
+    request: allocated blocks only, each rounded up to ``block_size``."""
+    blocks = sum(math.ceil(n / block_size) for n in lens)
+    return blocks * block_size * kv_bytes_per_token(cfg)
+
+
+# ---------------------------------------------------------------------------
+# protocol
+# ---------------------------------------------------------------------------
+
+@runtime_checkable
+class KVCacheManager(Protocol):
+    """What the serving engine needs from a cache backend."""
+
+    name: str
+
+    def can_admit(self, n_prompt: int, budget: int) -> bool:
+        """True if capacity exists for a request of this prompt length
+        and generation budget (worst case, no mid-decode failure)."""
+        ...
+
+    def splice(self, rows: dict, slot: int, n_prompt: int,
+               budget: int) -> None:
+        """Write a batch-1 prefill cache into ``slot``."""
+        ...
+
+    def decode_view(self, pos: np.ndarray, live: np.ndarray) -> dict:
+        """Device cache pytree for one ragged decode dispatch (allocates
+        any block the step is about to write, for paged backends)."""
+        ...
+
+    def commit(self, new_cache: dict) -> None:
+        """Store the cache pytree returned by the decode dispatch."""
+        ...
+
+    def free(self, slot: int) -> None:
+        """Release slot state at retirement."""
+        ...
+
+    def resident_kv_bytes(self) -> int:
+        """Bytes of KV state currently resident."""
+        ...
+
+    @property
+    def peak_resident_kv_bytes(self) -> int:
+        """High-water mark of :meth:`resident_kv_bytes` over the run
+        (what ``ServingEngine.summary`` reports)."""
+        ...
+
+
+# ---------------------------------------------------------------------------
+# block allocator (host-side free list)
+# ---------------------------------------------------------------------------
+
+class BlockAllocator:
+    """Free-list allocator over ``num_blocks`` fixed-size KV blocks.
+
+    Guards the two classic allocator bugs: double-free (freeing a block
+    that is not allocated raises) and leakage (accounting is exact:
+    ``free_blocks + allocated_blocks == num_blocks`` always).
+    """
+
+    def __init__(self, num_blocks: int):
+        if num_blocks <= 0:
+            raise ValueError(f"need at least one block, got {num_blocks}")
+        self.num_blocks = num_blocks
+        # pop from the end -> block 0 handed out first (deterministic)
+        self._free = list(range(num_blocks - 1, -1, -1))
+        self._allocated: set[int] = set()
+        self.peak_allocated = 0
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def allocated_blocks(self) -> int:
+        return len(self._allocated)
+
+    def alloc(self) -> int:
+        if not self._free:
+            raise RuntimeError("KV block pool exhausted (reservation "
+                               "accounting should have prevented this)")
+        blk = self._free.pop()
+        self._allocated.add(blk)
+        self.peak_allocated = max(self.peak_allocated, len(self._allocated))
+        return blk
+
+    def free(self, blk: int) -> None:
+        if blk not in self._allocated:
+            raise ValueError(f"double free or foreign block: {blk}")
+        self._allocated.remove(blk)
+        self._free.append(blk)
+
+
+# ---------------------------------------------------------------------------
+# contiguous backend (the original layout, behind the protocol)
+# ---------------------------------------------------------------------------
+
+class ContiguousCache:
+    """Dense per-slot cache: every slot owns ``max_seq_len`` positions
+    (plus any recurrent state), spliced/overwritten in place."""
+
+    name = "contiguous"
+
+    def __init__(self, cfg, ecfg):
+        self.cfg = cfg
+        B, C = ecfg.max_batch, ecfg.max_seq_len
+        self._cache = MD.init_cache(cfg, B, C)
+        axes = MD.cache_batch_axes(self._cache)
+        self._footprint = contiguous_kv_bytes(cfg, B, C)
+
+        def _splice(big, rows, slot):
+            out = {}
+            for name, b in big.items():
+                ax = axes[name]
+                if ax is None:
+                    out[name] = b
+                else:
+                    out[name] = jax.lax.dynamic_update_slice_in_dim(
+                        b, rows[name].astype(b.dtype), slot, ax)
+            return out
+
+        self._splice = jax.jit(_splice)  # slot is traced: one compile
+
+    def can_admit(self, n_prompt: int, budget: int) -> bool:
+        return True  # every slot already owns full capacity
+
+    def splice(self, rows: dict, slot: int, n_prompt: int,
+               budget: int) -> None:
+        self._cache = self._splice(self._cache, rows,
+                                   jnp.asarray(slot, jnp.int32))
+
+    def decode_view(self, pos, live) -> dict:
+        return self._cache
+
+    def commit(self, new_cache: dict) -> None:
+        self._cache = new_cache
+
+    def free(self, slot: int) -> None:
+        pass  # rows are overwritten by the next admit
+
+    def resident_kv_bytes(self) -> int:
+        return self._footprint
+
+    @property
+    def peak_resident_kv_bytes(self) -> int:
+        return self._footprint
+
+
+# ---------------------------------------------------------------------------
+# paged backend (block tables over a shared pool)
+# ---------------------------------------------------------------------------
+
+class PagedCache:
+    """Block-table cache for attention families (dense/moe/vlm, no
+    sliding window): a shared ``(L, NB, bs, H, Dh)`` pool, a host-side
+    per-slot block table, lazy allocation, retirement-time free."""
+
+    name = "paged"
+
+    def __init__(self, cfg, ecfg):
+        if cfg.family not in MD.TRANSFORMER_FAMILIES:
+            raise ValueError(f"paged cache does not support family "
+                             f"{cfg.family!r}")
+        if cfg.sliding_window is not None:
+            raise ValueError("paged cache does not support rolling SWA "
+                             "caches (already capacity-bounded)")
+        bs, C = ecfg.kv_block_size, ecfg.max_seq_len
+        if bs <= 0 or C % bs:
+            raise ValueError(
+                f"kv_block_size={bs} must be positive and divide "
+                f"max_seq_len={C} (the gathered decode view must match "
+                "the contiguous capacity bitwise)")
+        self.cfg = cfg
+        self.block_size = bs
+        self.table_width = W = C // bs
+        self.num_blocks = NB = ecfg.kv_blocks or ecfg.max_batch * W
+        self._bytes_per_token = kv_bytes_per_token(cfg)
+        self._pool_k, self._pool_v = MD.init_paged_pools(cfg, NB, bs)
+        B = ecfg.max_batch
+        # NB is the sentinel "no block" id: jitted scatters drop it,
+        # gathers clamp it onto a real (masked-off) block.
+        self.table = np.full((B, W), NB, np.int32)
+        self.allocator = BlockAllocator(NB)
+        self._reserved = np.zeros(B, np.int64)
+        self._max_seq_len = C
+
+        def _splice(pool_k, pool_v, rows_k, rows_v, blocks):
+            # rows (L, 1, C, H, Dh) -> per-block (L, W, bs, H, Dh);
+            # sentinel entries of ``blocks`` are dropped (pad blocks
+            # past the prompt are never stored).
+            L, _, _, H, Dh = rows_k.shape
+            rk = rows_k[:, 0].reshape(L, W, bs, H, Dh)
+            rv = rows_v[:, 0].reshape(L, W, bs, H, Dh)
+            pool_k = pool_k.at[:, blocks].set(
+                rk.astype(pool_k.dtype), mode="drop")
+            pool_v = pool_v.at[:, blocks].set(
+                rv.astype(pool_v.dtype), mode="drop")
+            return pool_k, pool_v
+
+        self._splice = jax.jit(_splice)  # fixed W: one compile total
+
+    # -- accounting -------------------------------------------------------
+    def _need_blocks(self, n_prompt: int, budget: int) -> int:
+        """Worst-case blocks a request ever touches: positions
+        ``0 .. n_prompt + budget - 2`` (the last generated token's KV is
+        never written), capped by the retirement bound ``C - 1``."""
+        n_pos = min(n_prompt + max(budget, 1) - 1, self._max_seq_len - 1)
+        return math.ceil(max(n_pos, 1) / self.block_size)
+
+    def can_admit(self, n_prompt: int, budget: int) -> bool:
+        need = self._need_blocks(n_prompt, budget)
+        if need > self.allocator.num_blocks:
+            raise ValueError(
+                f"request needs {need} KV blocks but the pool only has "
+                f"{self.allocator.num_blocks}; raise kv_blocks or lower "
+                "max_new_tokens")
+        outstanding = int(self._reserved.sum())
+        return self.allocator.free_blocks - outstanding >= need
+
+    # -- protocol ---------------------------------------------------------
+    def splice(self, rows: dict, slot: int, n_prompt: int,
+               budget: int) -> None:
+        now = math.ceil(n_prompt / self.block_size)
+        blocks = [self.allocator.alloc() for _ in range(now)]
+        self.table[slot, :now] = blocks
+        self._reserved[slot] = self._need_blocks(n_prompt, budget) - now
+        vec = np.full(self.table_width, self.num_blocks, np.int32)
+        vec[:now] = blocks
+        self._pool_k, self._pool_v = self._splice(
+            self._pool_k, self._pool_v, rows["k"], rows["v"],
+            jnp.asarray(vec))
+
+    def decode_view(self, pos, live) -> dict:
+        for i in np.nonzero(live)[0]:
+            b = int(pos[i]) // self.block_size
+            if self.table[i, b] == self.num_blocks:
+                self.table[i, b] = self.allocator.alloc()
+                self._reserved[i] = max(0, int(self._reserved[i]) - 1)
+        return {"k": self._pool_k, "v": self._pool_v,
+                "block_tab": jnp.asarray(self.table),
+                "len": jnp.zeros((), jnp.int32)}
+
+    def commit(self, new_cache: dict) -> None:
+        self._pool_k = new_cache["k"]
+        self._pool_v = new_cache["v"]
+
+    def free(self, slot: int) -> None:
+        for blk in self.table[slot]:
+            if blk != self.num_blocks:
+                self.allocator.free(int(blk))
+        self.table[slot] = self.num_blocks
+        self._reserved[slot] = 0
+
+    def resident_kv_bytes(self) -> int:
+        return (self.allocator.allocated_blocks * self.block_size
+                * self._bytes_per_token)
+
+    @property
+    def peak_resident_kv_bytes(self) -> int:
+        return (self.allocator.peak_allocated * self.block_size
+                * self._bytes_per_token)
+
+
+# ---------------------------------------------------------------------------
+# factory
+# ---------------------------------------------------------------------------
+
+def make_kv_cache(cfg, ecfg) -> KVCacheManager:
+    """Build the configured backend; families the paged layout cannot
+    express (recurrent state, rolling SWA) fall back to contiguous."""
+    kind = getattr(ecfg, "kv_cache", "contiguous")
+    if kind == "contiguous":
+        return ContiguousCache(cfg, ecfg)
+    if kind == "paged":
+        if (cfg.family not in MD.TRANSFORMER_FAMILIES
+                or cfg.sliding_window is not None):
+            warnings.warn(
+                f"paged KV cache unsupported for family={cfg.family!r} "
+                f"sliding_window={cfg.sliding_window}; falling back to "
+                "contiguous", stacklevel=2)
+            return ContiguousCache(cfg, ecfg)
+        return PagedCache(cfg, ecfg)
+    raise ValueError(f"unknown kv_cache backend {kind!r}")

@@ -119,6 +119,32 @@ def test_decode_attention_per_row_lengths(dtype):
             **tol_for(dtype))
 
 
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_decode_attention_matches_dense_gather(dtype):
+    """The paged split-KV kernel (block pools + scalar-prefetched block
+    tables) must match the contiguous kernel run on the densely gathered
+    view; sentinel (unallocated) table entries are masked by lens."""
+    from repro.models.attention import gather_kv_blocks
+    b, hq, hkv, dh, bs, w = 3, 8, 4, 64, 64, 4
+    nb = b * w + 2  # a couple of free blocks stay in the pool
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = rand(k1, (b, 1, hq, dh), dtype)
+    kp = rand(k2, (nb, bs, hkv, dh), dtype)
+    vp = rand(k3, (nb, bs, hkv, dh), dtype)
+    perm = np.random.default_rng(0).permutation(nb)[: b * w]
+    tab = np.asarray(perm, np.int32).reshape(b, w)
+    tab[0, 3] = nb  # unallocated tails (sentinel id == nb)
+    tab[1, 2:] = nb
+    tab = jnp.asarray(tab)
+    lens = jnp.asarray([3 * bs - 5, bs + 7, 4 * bs], jnp.int32)
+    got = ops.paged_decode_attention(q, kp, vp, tab, lens)
+    kd, vd = gather_kv_blocks(kp, tab), gather_kv_blocks(vp, tab)
+    want = ops.decode_attention(q, kd, vd, lens, block_s=bs)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        **tol_for(dtype))
+
+
 # ---------------------------------------------------------------------------
 # int4 quantized GEMV (W4A16 mobile mode)
 # ---------------------------------------------------------------------------

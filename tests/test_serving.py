@@ -201,6 +201,87 @@ def test_bucketed_prefill_preserves_outputs(setup):
         assert got[i] == w, f"bucketed request {i}"
 
 
+def test_max_new_tokens_zero_generates_nothing(setup):
+    """Regression: ``max_new_tokens=0`` used to fall back to the engine
+    default (``0 or default``); an explicit 0 now means zero tokens and
+    never even runs prefill."""
+    cfg, params = setup
+    rng = np.random.default_rng(11)
+    eng = ServingEngine(params, cfg, EngineConfig(
+        max_batch=2, max_seq_len=48, max_new_tokens=10))
+    r0 = eng.submit(rng.integers(0, cfg.vocab_size, size=8),
+                    max_new_tokens=0)
+    r1 = eng.submit(rng.integers(0, cfg.vocab_size, size=8))
+    eng.run()
+    assert r0.output == []
+    assert r0.t_done >= r0.t_submit
+    assert len(r1.output) == 10          # default budget still applies
+    assert eng.prefills == 1             # the zero request never prefilled
+
+
+def test_prompt_truncation_warns_and_records(setup):
+    cfg, params = setup
+    rng = np.random.default_rng(12)
+    eng = ServingEngine(params, cfg, EngineConfig(
+        max_batch=2, max_seq_len=32, max_new_tokens=2))
+    long_prompt = rng.integers(0, cfg.vocab_size, size=80)
+    short = rng.integers(0, cfg.vocab_size, size=8)
+    with pytest.warns(UserWarning, match="truncated from 80"):
+        r = eng.submit(long_prompt)
+        rs = eng.submit(short)
+        eng.run()
+    assert r.truncated_from == 80
+    assert rs.truncated_from is None
+    assert eng.summary()["truncated"] == 1
+    # the truncated request generated from the clipped prompt
+    want = straight_line_generate(params, cfg, long_prompt[:31], 1, 32)
+    assert r.output[:1] == want
+
+
+# ---------------------------------------------------------------------------
+# sampling head (EngineConfig.sample)
+# ---------------------------------------------------------------------------
+
+def test_greedy_sampling_head_is_default_and_bitwise(setup):
+    """Moving argmax out of the jitted closures must not change greedy
+    outputs (same logits, same argmax)."""
+    cfg, params = setup
+    rng = np.random.default_rng(13)
+    prompt = rng.integers(0, cfg.vocab_size, size=10)
+    want = straight_line_generate(params, cfg, prompt, 5, 64)
+    eng = ServingEngine(params, cfg, EngineConfig(
+        max_batch=2, max_seq_len=64, max_new_tokens=5))
+    assert eng.ecfg.sample == "greedy"
+    r = eng.submit(prompt)
+    eng.run()
+    assert r.output == want
+
+
+def test_temperature_sampling_reproducible_per_request_seed(setup):
+    cfg, params = setup
+    rng = np.random.default_rng(14)
+    prompt = rng.integers(0, cfg.vocab_size, size=8)
+    ecfg = EngineConfig(max_batch=2, max_seq_len=64, max_new_tokens=6,
+                        sample="temperature", temperature=0.8, top_k=8)
+
+    def sample_once(seed):
+        eng = ServingEngine(params, cfg, ecfg)
+        r = eng.submit(prompt, seed=seed)
+        eng.run()
+        return r.output
+
+    a, b, c = sample_once(7), sample_once(7), sample_once(8)
+    assert a == b                      # same seed -> same stream
+    assert c != a                      # different seed -> different stream
+    assert all(0 <= t < cfg.vocab_size for t in a)
+
+
+def test_unknown_sample_mode_raises(setup):
+    cfg, params = setup
+    with pytest.raises(ValueError, match="sample mode"):
+        ServingEngine(params, cfg, EngineConfig(sample="beam"))
+
+
 def test_hybrid_family_ragged_engine():
     """Hybrid (Mamba2+attn) slots at ragged positions: the per-row KV
     scatter and the live-masked SSM/conv state advance must both hold.

@@ -200,4 +200,5 @@ def test_ragged_serve_single_dispatch():
     assert any(k[2] for k in sim._decode_linear)  # ragged trace cached
     sim.decode(4, 120, 16)
     keys = set(sim._decode_linear)
-    assert (4, 136, True) in keys and (4, 136, False) in keys
+    assert (4, 136, True, "contiguous", 16) in keys
+    assert (4, 136, False, "contiguous", 16) in keys
