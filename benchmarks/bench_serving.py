@@ -1,24 +1,35 @@
 """Serving-engine batching benchmark: aligned vs. fully-ragged
-workloads, contiguous vs. paged KV-cache backends.
+workloads, contiguous vs. paged KV-cache backends, blocking vs.
+chunked-prefill schedulers.
 
-Two invariants under test:
+Invariants under test:
 
 - ``ServingEngine.step`` issues exactly **one** jitted decode dispatch
   per step regardless of how many distinct slot positions are live (a
   position-grouped engine degrades to ``max_batch`` launches the moment
-  prompt lengths diverge), and the cache backend must not change that.
+  prompt lengths diverge), and neither the cache backend nor the
+  scheduler may change that (chunked adds at most one prefill-chunk
+  dispatch per step).
 - The paged (block-table) backend produces the same tokens as the
   contiguous backend while holding strictly fewer resident KV bytes on
   ragged workloads — the vLLM-style capacity win the paper's
   keep-KV-resident cloud argument (§1.2, §3.4) depends on.
+- ``--scheduler chunked``: greedy outputs are bitwise identical to the
+  blocking scheduler (hard-fail otherwise), while p99 TTFT of *short*
+  requests on a mixed short/long workload drops strictly below
+  blocking — the head-of-line-blocking win the paper's
+  prefill/decode time-multiplexing argument (§4) predicts.
 
 Also cross-checks against the analytical simulator's continuous-batching
 path (``LLMSimulator.serve``) on Table-1 cloud profiles, which charges
-the same single-dispatch ragged decode graph — and the same resident-KV
-accounting — as the engine backend it models.
+the same single-dispatch ragged decode graph — and, under
+``scheduler="chunked"``, the same chunk-interleaved schedule shape — as
+the engine it models.
 
 Run:  PYTHONPATH=src python -m benchmarks.run serving
       PYTHONPATH=src python -m benchmarks.bench_serving --json out.json
+      PYTHONPATH=src python -m benchmarks.bench_serving \
+          --scheduler chunked --json out-chunked.json
 """
 from __future__ import annotations
 
@@ -39,62 +50,94 @@ MODEL = "qwen1.5-0.5b"
 MAX_BATCH = 4
 MAX_SEQ = 96
 N_NEW = 8
+CHUNK = 16          # chunked-prefill token budget per step
+# head-of-line workload: one batch-filling wave (no slot queueing, so
+# TTFT isolates the prefill schedule) with a long prompt whose O(n^2)
+# monolithic prefill genuinely dominates a decode step — the regime the
+# chunked policy exists for (at 96-token capacity the effect hides
+# behind per-dispatch overhead)
+MIXED_SEQ = 1024
+MIXED_LONG = 900
+MIXED_CHUNK = 64
+MIXED_SHORT_MAX = 14
 
 
 def _workload(kind: str, rng):
     """Prompt lengths for one batch-filling wave of requests."""
     if kind == "aligned":
         return [12] * (2 * MAX_BATCH)
+    if kind == "mixed":
+        # one long prompt submitted *first*, shorts queued behind it in
+        # the same slot wave — the head-of-line-blocking scenario
+        # chunked prefill exists for
+        return [MIXED_LONG] + list(
+            rng.integers(6, MIXED_SHORT_MAX, size=MAX_BATCH - 1))
     return list(rng.integers(6, 32, size=2 * MAX_BATCH))  # fully ragged
 
 
-def _drive(params, cfg, lens, rng, kv_cache):
+def _drive(params, cfg, lens, rng, kv_cache, scheduler="blocking",
+           max_seq=MAX_SEQ, chunk=CHUNK):
     eng = ServingEngine(params, cfg, EngineConfig(
-        max_batch=MAX_BATCH, max_seq_len=MAX_SEQ, max_new_tokens=N_NEW,
-        kv_cache=kv_cache))
+        max_batch=MAX_BATCH, max_seq_len=max_seq, max_new_tokens=N_NEW,
+        kv_cache=kv_cache, scheduler=scheduler, chunk_tokens=chunk))
     prompts = [rng.integers(0, cfg.vocab_size, size=int(n)) for n in lens]
-    # warm every prefill bucket + the decode dispatch out of the timing
+    # warm every prefill bucket/chunk shape + the decode dispatch out of
+    # the timing
     for p in prompts:
         eng.submit(p, max_new_tokens=2)
     eng.run()
     eng.finished.clear()
     eng.decode_dispatches = eng.decode_steps = eng.prefills = 0
+    eng.prefill_chunk_dispatches = 0
 
     t0 = time.time()
     for p in prompts:
         eng.submit(p)
-    outputs = {r.rid: r.output for r in eng.run()}
+    done = eng.run()
+    outputs = {r.rid: r.output for r in done}
     wall = time.time() - t0
     s = eng.summary()
     toks = s["tokens"]
+    short = [r for r in done if len(r.prompt) < MIXED_LONG]
     return {
         "kv_cache": kv_cache,
+        "scheduler": s["scheduler"],
         "requests": s["requests"],
         "tokens": toks,
         "tok_s": toks / wall if wall > 0 else float("inf"),
         "dispatches": s["decode_dispatches"],
         "steps": s["decode_steps"],
         "disp_per_step": s["dispatches_per_step"],
+        "prefill_chunks": s["prefill_chunks"],
         "distinct_pos": len(set(int(n) for n in lens)),
+        "ttft_p50_s": s["ttft_p50_s"],
+        "ttft_p99_s": s["ttft_p99_s"],
+        "mean_itl_s": s["mean_itl_s"],
+        "short_ttft_p50_s": float(np.percentile(
+            [r.ttft_s for r in short], 50)) if short else 0.0,
+        "short_ttft_p99_s": float(np.percentile(
+            [r.ttft_s for r in short], 99)) if short else 0.0,
         "resident_kv_bytes": s["resident_kv_bytes"],
         "contiguous_kv_bytes": s["contiguous_kv_bytes"],
         "outputs": outputs,
     }
 
 
-def run(json_path: str | None = None):
+def run(json_path: str | None = None, scheduler: str = "blocking"):
     cfg = registry.get_smoke_config(MODEL).replace(dtype="float32")
     params = MD.init_params(jax.random.PRNGKey(0), cfg)
 
     results = {"model": MODEL, "max_batch": MAX_BATCH, "max_seq": MAX_SEQ,
-               "n_new": N_NEW, "engine": [], "analytical": []}
+               "n_new": N_NEW, "scheduler": scheduler, "chunk_tokens": CHUNK,
+               "engine": [], "analytical": [], "head_of_line": []}
     rows = []
     mismatched = []
     for kind in ("aligned", "ragged"):
         lens = _workload(kind, np.random.default_rng(0))
         per_backend = {}
         for kv in ("contiguous", "paged"):
-            m = _drive(params, cfg, lens, np.random.default_rng(1), kv)
+            m = _drive(params, cfg, lens, np.random.default_rng(1), kv,
+                       scheduler)
             per_backend[kv] = m
             rows.append([kind, kv, m["requests"], m["distinct_pos"],
                          m["tokens"], r3(m["tok_s"]), m["dispatches"],
@@ -111,16 +154,66 @@ def run(json_path: str | None = None):
         if not same:
             mismatched.append(kind)
     print_table(
-        f"engine batching ({MODEL} smoke, {MAX_BATCH} slots, CPU numbers)",
+        f"engine batching ({MODEL} smoke, {MAX_BATCH} slots, "
+        f"{scheduler} scheduler, CPU numbers)",
         ["workload", "kv_cache", "reqs", "distinct lens", "tokens", "tok/s",
          "dispatches", "disp/step", "resident KV", "dense KV"],
         rows)
 
-    # the same two workloads on the paper's cloud hardware (analytical)
+    if scheduler == "chunked":
+        # head-of-line-blocking demonstration: one long prompt queued
+        # ahead of shorts; chunked must (a) emit bitwise-identical
+        # tokens and (b) cut the shorts' tail TTFT strictly below
+        # blocking, on both cache backends.
+        hol_rows = []
+        lens = _workload("mixed", np.random.default_rng(2))
+        for kv in ("contiguous", "paged"):
+            per_sched = {}
+            for sched in ("blocking", "chunked"):
+                m = _drive(params, cfg, lens, np.random.default_rng(3), kv,
+                           sched, max_seq=MIXED_SEQ, chunk=MIXED_CHUNK)
+                per_sched[sched] = m
+                hol_rows.append(
+                    [kv, sched, m["prefill_chunks"],
+                     r3(m["ttft_p50_s"] * 1e3),
+                     r3(m["short_ttft_p50_s"] * 1e3),
+                     r3(m["short_ttft_p99_s"] * 1e3),
+                     r3(m["mean_itl_s"] * 1e3)])
+                results["head_of_line"].append(
+                    {"kv_cache": kv, "scheduler": sched,
+                     **{k: v for k, v in m.items() if k != "outputs"}})
+            same = (per_sched["chunked"]["outputs"]
+                    == per_sched["blocking"]["outputs"])
+            win = (per_sched["chunked"]["short_ttft_p99_s"]
+                   < per_sched["blocking"]["short_ttft_p99_s"])
+            results["head_of_line"].append(
+                {"kv_cache": kv, "chunked_matches_blocking": same,
+                 "chunked_short_p99_ttft_below_blocking": win})
+            if not same:
+                mismatched.append(f"mixed/{kv} (chunked vs blocking)")
+            if not win:
+                mismatched.append(
+                    f"mixed/{kv}: chunked short-request p99 TTFT "
+                    f"{per_sched['chunked']['short_ttft_p99_s']:.4f}s not "
+                    f"below blocking "
+                    f"{per_sched['blocking']['short_ttft_p99_s']:.4f}s")
+        print_table(
+            f"head-of-line blocking (mixed workload: 1x{MIXED_LONG}-token "
+            f"prompt ahead of {MAX_BATCH - 1} shorts, "
+            f"cap={MIXED_SEQ}, chunk={MIXED_CHUNK})",
+            ["kv_cache", "scheduler", "chunks", "ttft p50 ms",
+             "short p50 ms", "short p99 ms", "itl ms"],
+            hol_rows)
+
+    # the same workloads on the paper's cloud hardware (analytical)
     full = registry.get_config(MODEL)
     sim_rows = []
-    for kind in ("aligned", "ragged"):
+    sim_kinds = ("aligned", "ragged") if scheduler == "blocking" \
+        else ("aligned", "ragged", "mixed")
+    for kind in sim_kinds:
         lens = _workload(kind, np.random.default_rng(0))[:MAX_BATCH]
+        cap = MIXED_SEQ if kind == "mixed" else MAX_SEQ
+        chunk = MIXED_CHUNK if kind == "mixed" else CHUNK
         for kv in ("contiguous", "paged"):
             for hw in (HW.PIM_AI_CHIP, HW.DGX_H100):
                 sim = LLMSimulator(full, hw, SimConfig())
@@ -128,20 +221,35 @@ def run(json_path: str | None = None):
                 # the dense charge is max_batch x max_seq_len regardless
                 # of what the workload touches
                 r = sim.serve(lens, N_NEW, kv_cache=kv,
-                              max_seq_len=MAX_SEQ)
+                              max_seq_len=cap, scheduler=scheduler,
+                              chunk_tokens=chunk)
                 sim_rows.append([kind, kv, hw.name, r3(r["tokens_per_s"]),
                                  r3(r["energy_per_token_j"] * 1e3),
+                                 r["prefill_chunks"],
                                  f"{r['resident_kv_bytes'] / 2**20:.0f}M",
                                  f"{r['contiguous_kv_bytes'] / 2**20:.0f}M"])
                 results["analytical"].append(
                     {"workload": kind, "kv_cache": kv, "profile": hw.name,
+                     "scheduler": r["scheduler"],
                      "tokens_per_s": r["tokens_per_s"],
                      "energy_per_token_j": r["energy_per_token_j"],
+                     "prefill_chunks": r["prefill_chunks"],
+                     "ttft_s": r["ttft_s"],
                      "resident_kv_bytes": r["resident_kv_bytes"],
                      "contiguous_kv_bytes": r["contiguous_kv_bytes"]})
+                if scheduler == "chunked":
+                    # schedule-shape cross-check: the analytical model
+                    # must chunk exactly like the engine's scheduler
+                    import math as _m
+                    want = sum(_m.ceil(int(n) / chunk) for n in lens)
+                    if r["prefill_chunks"] != want:
+                        mismatched.append(
+                            f"sim schedule shape {kind}/{kv}/{hw.name}: "
+                            f"{r['prefill_chunks']} chunks != {want}")
     print_table(
-        "analytical continuous batching (Table-1 profiles, single-dispatch)",
-        ["workload", "kv_cache", "profile", "tok/s", "mJ/token",
+        f"analytical continuous batching (Table-1 profiles, "
+        f"{scheduler} scheduler)",
+        ["workload", "kv_cache", "profile", "tok/s", "mJ/token", "chunks",
          "resident KV", "dense KV"],
         sim_rows)
 
@@ -150,9 +258,9 @@ def run(json_path: str | None = None):
             json.dump(results, f, indent=2, default=float)
         print(f"\n[wrote {json_path}]")
     if mismatched:
-        # hard-fail (CI smoke step must go red on the core invariant)
+        # hard-fail (CI smoke step must go red on the core invariants)
         raise SystemExit(
-            f"paged outputs diverge from contiguous on: {mismatched}")
+            f"serving invariants violated: {mismatched}")
     return results
 
 
@@ -161,4 +269,9 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", default=None,
                     help="write machine-readable results to this path")
-    run(ap.parse_args().json)
+    ap.add_argument("--scheduler", default="blocking",
+                    choices=["blocking", "chunked"],
+                    help="prefill scheduling policy for the engine runs "
+                         "(chunked also runs the head-of-line comparison)")
+    args = ap.parse_args()
+    run(args.json, scheduler=args.scheduler)

@@ -1,5 +1,8 @@
-"""Dev smoke: forward + prefill + decode for every assigned arch (reduced)."""
+"""Dev smoke: forward + prefill + decode + a chunked-prefill serve pass
+for every assigned arch (reduced shapes) — family-specific prefill
+regressions surface here without waiting on the full test suite."""
 import sys
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -7,6 +10,7 @@ import numpy as np
 
 from repro.configs import registry
 from repro.models import model as MD
+from repro.serving import ChunkedScheduler, EngineConfig, ServingEngine
 
 archs = sys.argv[1:] or registry.list_archs()
 key = jax.random.PRNGKey(0)
@@ -27,7 +31,24 @@ for name in archs:
             logits, cache = MD.decode_step(params, cfg, tok, cache)
             assert np.isfinite(np.asarray(logits)).all(), f"{name}: decode NaN"
             tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-        print(f"OK   {name:20s} loss={float(loss):.3f} params={n_params}")
+        # chunked-prefill serve pass: one long + one short prompt through
+        # the engine (families without chunk support fall back to
+        # blocking — the pass still exercises their serve path)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")  # expected fallback warnings
+            eng = ServingEngine(params, cfg, EngineConfig(
+                max_batch=2, max_seq_len=64, max_new_tokens=3,
+                scheduler="chunked", chunk_tokens=16))
+        rng = np.random.default_rng(0)
+        for n in (40, 6):
+            eng.submit(rng.integers(0, cfg.vocab_size, size=n))
+        done = eng.run()
+        assert len(done) == 2, f"{name}: serve retired {len(done)}/2"
+        assert all(len(r.output) == 3 for r in done), f"{name}: serve output"
+        mode = ("chunked" if isinstance(eng.scheduler, ChunkedScheduler)
+                else "blocking-fallback")
+        print(f"OK   {name:20s} loss={float(loss):.3f} params={n_params} "
+              f"serve={mode}/{eng.summary()['prefill_chunks']}ch")
     except Exception as e:  # noqa: BLE001
         print(f"FAIL {name:20s} {type(e).__name__}: {e}")
         import traceback; traceback.print_exc()

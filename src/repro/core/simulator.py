@@ -160,6 +160,7 @@ class LLMSimulator:
         self.sim = sim or SimConfig()
         self._decode_linear = {}   # keyed (batch, max_len, ragged)
         self._prefill_cache = {}
+        self._chunk_cache = {}     # keyed (chunk_tokens, capacity)
 
     # -- traced op streams -------------------------------------------------
     def _prefill_ops(self, batch: int, n_in: int):
@@ -221,8 +222,37 @@ class LLMSimulator:
 
             L1 = max(32, max_len // 2)
             L2 = max_len
+            if L1 == L2:  # degenerate fit window (max_len == 32)
+                L1 = max(1, L2 // 2)
             self._decode_linear[key] = T.trace_linear(of_len, L1, L2)
         return self._decode_linear[key]
+
+    def _chunk_ops(self, chunk_tokens: int, capacity: int):
+        """Traced op stream of one chunked-prefill dispatch: a
+        ``chunk_tokens`` chunk attending a cached history view of the
+        full ``capacity`` (the real dispatch reads the whole buffer and
+        masks by ``hist_len``, so per-chunk cost is constant in the
+        history length — honest to the implementation, not a hand
+        model)."""
+        key = (chunk_tokens, capacity)
+        if key not in self._chunk_cache:
+            cfg = self.cfg
+            params = jax.eval_shape(
+                lambda k: MD.init_params(k, cfg), jax.random.PRNGKey(0))
+            batch = {"tokens": jax.ShapeDtypeStruct((1, chunk_tokens),
+                                                    jnp.int32)}
+            st = MD.cache_struct(cfg, 1, capacity)
+            kh = jax.ShapeDtypeStruct(*st["k"])
+            vh = jax.ShapeDtypeStruct(*st["v"])
+            hist = jax.ShapeDtypeStruct((), jnp.int32)
+            idx = jax.ShapeDtypeStruct((), jnp.int32)
+
+            def fn(p, b, k, v, h, i):
+                return MD.prefill_chunk(p, cfg, b, k, v, h, logit_index=i)
+
+            self._chunk_cache[key] = T.trace_ops(fn, params, batch, kh, vh,
+                                                 hist, idx)
+        return self._chunk_cache[key]
 
     # -- phases --------------------------------------------------------------
     def encode(self, batch: int, n_in: int) -> PhaseResult:
@@ -279,8 +309,8 @@ class LLMSimulator:
         return total
 
     def serve(self, n_ins, n_out: int, *, kv_cache: str = "contiguous",
-              kv_block_size: int = 16,
-              max_seq_len: int | None = None) -> dict:
+              kv_block_size: int = 16, max_seq_len: int | None = None,
+              scheduler: str = "blocking", chunk_tokens: int = 64) -> dict:
         """Continuous-batching cloud scenario (matches ``ServingEngine``):
         per-request prefill + one fully-ragged decode dispatch per step
         over the whole batch, each row's KV span growing from its own
@@ -293,21 +323,48 @@ class LLMSimulator:
         block-table decode graph and reports resident KV bytes from the
         blocks the workload actually touches, instead of the dense
         ``batch x max_seq_len`` charge (``max_seq_len`` defaults to the
-        workload's own ``max(n_in) + n_out`` capacity)."""
+        workload's own ``max(n_in) + n_out`` capacity).
+
+        ``scheduler`` mirrors ``EngineConfig.scheduler``. ``"chunked"``
+        charges the chunked-prefill schedule instead of the blocking
+        one: prompts stream in as ``chunk_tokens``-sized chunks
+        (shortest-remaining-first, as the engine schedules them), each
+        simulated step carrying one chunk dispatch plus one ragged
+        decode dispatch for the already-prefilled rows — so simulated
+        TTFT/TPOT reflect the head-of-line-blocking policy, not just
+        the op totals."""
         from repro.serving.kv_cache import (contiguous_kv_bytes,
                                             paged_resident_kv_bytes)
         batch = len(n_ins)
+        cap = max_seq_len or (max(int(n) for n in n_ins) + n_out)
+        if scheduler == "chunked":
+            if (self.cfg.family not in MD.TRANSFORMER_FAMILIES
+                    or self.cfg.sliding_window is not None):
+                # mirror make_scheduler: families chunked prefill cannot
+                # express fall back to the blocking schedule
+                import warnings
+                warnings.warn(
+                    f"chunked prefill unsupported for family="
+                    f"{self.cfg.family!r} sliding_window="
+                    f"{self.cfg.sliding_window}; simulating the blocking "
+                    "schedule", stacklevel=2)
+            else:
+                return self._serve_chunked(
+                    n_ins, n_out, kv_cache=kv_cache,
+                    kv_block_size=kv_block_size, cap=cap,
+                    chunk_tokens=chunk_tokens)
         enc = PhaseResult()
         t_cum = ttft_sum = 0.0
+        ttfts = []
         for n in n_ins:
             e = self.encode(1, int(n))
             enc.add(e)
             t_cum += e.seconds      # prefills run sequentially: request i
-            ttft_sum += t_cum       # waits for every earlier admit too
+            ttfts.append(t_cum)     # waits for every earlier admit too
+            ttft_sum += t_cum
         n_mean = sum(float(n) for n in n_ins) / batch
         dec = self.decode(batch, n_mean, n_out, ragged=True,
                           kv_cache=kv_cache, kv_block_size=kv_block_size)
-        cap = max_seq_len or (max(int(n) for n in n_ins) + n_out)
         contiguous_bytes = contiguous_kv_bytes(self.cfg, batch, cap)
         if kv_cache == "paged":
             # positions each request ever writes: its prompt plus all
@@ -321,11 +378,106 @@ class LLMSimulator:
             "encode": enc,
             "decode": dec,
             "ttft_s": ttft_sum / batch,
+            "ttft_per_req_s": ttfts,
             "tokens_per_s": batch * n_out / dec.seconds,
             "energy_per_token_j": dec.energy_j / (batch * n_out),
             "qps": batch / (enc.seconds + dec.seconds),
             "decode_dispatches": n_out,   # one per step, whole batch
             "kv_cache": kv_cache,
+            "scheduler": "blocking",
+            "prefill_chunks": batch,      # one monolithic chunk each
+            "resident_kv_bytes": resident,
+            "contiguous_kv_bytes": contiguous_bytes,
+        }
+
+    def _serve_chunked(self, n_ins, n_out: int, *, kv_cache: str,
+                       kv_block_size: int, cap: int,
+                       chunk_tokens: int) -> dict:
+        """Step-driven chunked-prefill schedule (mirrors
+        ``ChunkedScheduler``): every step runs at most one prefill
+        chunk (shortest-remaining-first) plus one ragged decode
+        dispatch over all already-prefilled rows. TTFT is the wall
+        clock at a request's final chunk; rows then decode ``n_out``
+        tokens (the same per-request token count :meth:`decode`
+        charges), retiring as they finish."""
+        from repro.serving.kv_cache import (contiguous_kv_bytes,
+                                            paged_resident_kv_bytes)
+        batch = len(n_ins)
+        chunk_step = PhaseResult()
+        for op in self._chunk_ops(chunk_tokens, cap):
+            chunk_step.add(_op_cost(op, self.hw, self.sim))
+        dec_ops = self._decode_ops_linear(batch, cap, ragged=True,
+                                          kv_cache=kv_cache,
+                                          kv_block_size=kv_block_size)
+
+        def decode_step_cost(l_mean: float) -> PhaseResult:
+            r = PhaseResult()
+            for lop in dec_ops:
+                r.add(_op_cost(lop.at(l_mean), self.hw, self.sim))
+            r.add(_host_transfer(batch * 4, self.hw, d2h=True))
+            r.add(_host_transfer(batch * 4, self.hw, d2h=False))
+            if self.sim.tp_degree > 1:
+                per_tok = (2 * self.cfg.n_layers * self.cfg.d_model * 2
+                           * (self.sim.tp_degree - 1) / self.sim.tp_degree)
+                r.add(_tp_collective(per_tok * batch, self.hw))
+            return r
+
+        # schedule state: remaining prefill positions / decoded tokens
+        remaining = [int(n) for n in n_ins]
+        decoded = [-1] * batch          # -1: still prefilling
+        ttfts = [0.0] * batch
+        enc = PhaseResult()
+        dec = PhaseResult()
+        t = 0.0
+        steps = total_chunks = decode_dispatches = 0
+        while (any(r > 0 for r in remaining)
+               or any(0 <= d < n_out for d in decoded)):
+            step_s = self.sim.orchestration_s
+            pending = [i for i in range(batch) if remaining[i] > 0]
+            if pending:  # one chunk, shortest-remaining-first
+                i = min(pending, key=lambda j: (remaining[j], j))
+                remaining[i] = max(0, remaining[i] - chunk_tokens)
+                enc.add(chunk_step)
+                step_s += chunk_step.seconds
+                total_chunks += 1
+                if remaining[i] == 0:
+                    decoded[i] = 0      # first token sampled this step
+                    ttfts[i] = t + step_s
+            live = [i for i in range(batch) if 0 <= decoded[i] < n_out]
+            if live:
+                l_mean = (sum(float(n_ins[i]) + decoded[i] for i in live)
+                          / len(live))
+                d = decode_step_cost(l_mean)
+                dec.add(d)
+                step_s += d.seconds
+                decode_dispatches += 1
+                for i in live:
+                    decoded[i] += 1
+            t += step_s
+            steps += 1
+        enc.add(_host_transfer(sum(int(n) for n in n_ins) * 4, self.hw,
+                               d2h=False))
+        contiguous_bytes = contiguous_kv_bytes(self.cfg, batch, cap)
+        if kv_cache == "paged":
+            resident = paged_resident_kv_bytes(
+                self.cfg, [min(int(n) + n_out - 1, cap) for n in n_ins],
+                kv_block_size)
+        else:
+            resident = contiguous_bytes
+        total_toks = batch * n_out
+        return {
+            "encode": enc,
+            "decode": dec,
+            "ttft_s": sum(ttfts) / batch,
+            "ttft_per_req_s": ttfts,
+            "tokens_per_s": total_toks / max(dec.seconds, 1e-12),
+            "energy_per_token_j": dec.energy_j / total_toks,
+            "qps": batch / max(t, 1e-12),
+            "decode_dispatches": decode_dispatches,
+            "kv_cache": kv_cache,
+            "scheduler": "chunked",
+            "prefill_chunks": total_chunks,
+            "steps": steps,
             "resident_kv_bytes": resident,
             "contiguous_kv_bytes": contiguous_bytes,
         }

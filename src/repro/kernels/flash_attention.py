@@ -84,6 +84,139 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
 
 
+def _hist_kernel(len_ref, q_ref, kh_ref, vh_ref, ks_ref, vs_ref, o_ref,
+                 m_ref, l_ref, acc_ref, *, scale, block_q, block_k,
+                 nk_hist):
+    """Chunked-prefill kernel body: one softmax over (cached history +
+    chunk self) KV. The innermost grid axis walks the history blocks
+    first, then the chunk's own blocks; the per-row ``hist_len`` scalar
+    (prefetched, like the split-KV decode kernel's length vector) masks
+    the unwritten history tail, while within-chunk masking is plain
+    causality in chunk-relative coordinates — independent of the
+    (dynamic) history length, so the block skip for the self region
+    stays static."""
+    qb = pl.program_id(1)
+    kb = pl.program_id(2)
+    nk = pl.num_programs(2)
+    hist_len = len_ref[pl.program_id(0)]
+
+    @pl.when(kb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    in_self = kb >= nk_hist
+    rel_q = qb * block_q + jax.lax.iota(jnp.int32, block_q)
+    rel_k = (kb - nk_hist) * block_k + jax.lax.iota(jnp.int32, block_k)
+    hist_pos = kb * block_k + jax.lax.iota(jnp.int32, block_k)
+    # history block: any position < hist_len; self block: causal reach
+    visible = jnp.where(in_self,
+                        (kb - nk_hist) * block_k <= qb * block_q
+                        + block_q - 1,
+                        kb * block_k < hist_len)
+
+    @pl.when(visible)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale            # (bq, dh)
+        k = jnp.where(in_self, ks_ref[0], kh_ref[0])        # (bk, dh)
+        v = jnp.where(in_self, vs_ref[0], vh_ref[0])
+        s = jax.lax.dot_general(
+            q, k.astype(jnp.float32), (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)             # (bq, bk)
+        ok = jnp.where(in_self,
+                       rel_k[None, :] <= rel_q[:, None],
+                       (hist_pos < hist_len)[None, :])
+        s = jnp.where(ok, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev[:, 0], jnp.max(s, axis=-1))[:, None]
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, -1, keepdims=True)
+        pv = jax.lax.dot_general(
+            p, v.astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)             # (bq, dh)
+        acc_ref[...] = acc_ref[...] * alpha + pv
+        m_ref[...] = m_new
+
+    @pl.when(kb == nk - 1)
+    def _emit():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_hist_bhsd(q, k_hist, v_hist, k_self, v_self, hist_len,
+                              *, block_q=128, block_k=128, interpret=True):
+    """Prefill-over-cache: q (BH, S, Dh) at absolute positions
+    ``hist_len + 0..S-1`` attends ``k_hist``/``v_hist`` (BH, C, Dh)
+    masked to the first ``hist_len`` rows (scalar or per-row (BH,)
+    int32) plus its own causal ``k_self``/``v_self`` (BH, S, Dh).
+    One online softmax spans both — the history side streams exactly
+    like the split-KV decode kernel (per-row length prefetch), the self
+    side like the training flash kernel."""
+    bh, sq, dh = q.shape
+    c = k_hist.shape[1]
+    block_q = min(block_q, max(8, sq))
+    block_k = min(block_k, max(8, min(c, sq)))
+    nq = math.ceil(sq / block_q)
+    nk_h = math.ceil(c / block_k)
+    nk_s = math.ceil(sq / block_k)
+    sq_p = nq * block_q
+    sk_hp = nk_h * block_k
+    sk_sp = nk_s * block_k
+    if sq_p != sq:
+        q = jnp.pad(q, ((0, 0), (0, sq_p - sq), (0, 0)))
+    if sk_hp != c:
+        k_hist = jnp.pad(k_hist, ((0, 0), (0, sk_hp - c), (0, 0)))
+        v_hist = jnp.pad(v_hist, ((0, 0), (0, sk_hp - c), (0, 0)))
+    if sk_sp != sq:
+        k_self = jnp.pad(k_self, ((0, 0), (0, sk_sp - sq), (0, 0)))
+        v_self = jnp.pad(v_self, ((0, 0), (0, sk_sp - sq), (0, 0)))
+
+    kernel = functools.partial(
+        _hist_kernel, scale=1.0 / math.sqrt(dh), block_q=block_q,
+        block_k=block_k, nk_hist=nk_h)
+    # Index maps clamp the "other phase" operand to a constant block
+    # (hist pins at nk_h-1 through the self phase, self pins at 0
+    # through the history phase), so the TPU pipeline re-DMAs the
+    # unused operand only at the single phase boundary, not per step.
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(bh, nq, nk_h + nk_s),
+        in_specs=[
+            pl.BlockSpec((1, block_q, dh),
+                         lambda b, i, j, *_: (b, i, 0)),
+            pl.BlockSpec((1, block_k, dh),
+                         lambda b, i, j, *_: (b, jnp.minimum(j, nk_h - 1),
+                                              0)),
+            pl.BlockSpec((1, block_k, dh),
+                         lambda b, i, j, *_: (b, jnp.minimum(j, nk_h - 1),
+                                              0)),
+            pl.BlockSpec((1, block_k, dh),
+                         lambda b, i, j, *_: (b, jnp.maximum(j - nk_h, 0),
+                                              0)),
+            pl.BlockSpec((1, block_k, dh),
+                         lambda b, i, j, *_: (b, jnp.maximum(j - nk_h, 0),
+                                              0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, dh),
+                               lambda b, i, j, *_: (b, i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, dh), jnp.float32),
+        ],
+    )
+    lens = jnp.broadcast_to(
+        jnp.asarray(hist_len, jnp.int32).reshape(-1), (bh,))
+    out = pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bh, sq_p, dh), q.dtype),
+        interpret=interpret,
+    )(lens, q, k_hist, v_hist, k_self, v_self)
+    return out[:, :sq]
+
+
 def flash_attention_bhsd(q, k, v, *, causal=True, window=None, q_offset=0,
                          block_q=128, block_k=128, interpret=True):
     """q (BH, Sq, Dh); k, v (BH, Skv, Dh) — heads pre-expanded/merged."""

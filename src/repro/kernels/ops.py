@@ -62,6 +62,35 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, block_s=512):
 
 
 @jax.jit
+def prefill_attention(q, k_hist, v_hist, hist_len, k_self, v_self):
+    """Chunked-prefill entry point: q (B,S,Hq,Dh) at absolute positions
+    ``hist_len..hist_len+S-1`` attends the cached history
+    ``k_hist``/``v_hist`` (B,C,Hkv,Dh), valid to ``hist_len`` (scalar
+    or per-row (B,)), plus its own causal ``k_self``/``v_self``
+    (B,S,Hkv,Dh). GQA is expanded to Hq and heads merged into the
+    leading dim, exactly like :func:`flash_attention`."""
+    b, sq, hq, dh = q.shape
+    hkv = k_hist.shape[2]
+    if hkv != hq:
+        rep = hq // hkv
+        k_hist = jnp.repeat(k_hist, rep, axis=2)
+        v_hist = jnp.repeat(v_hist, rep, axis=2)
+        k_self = jnp.repeat(k_self, rep, axis=2)
+        v_self = jnp.repeat(v_self, rep, axis=2)
+    qm = jnp.moveaxis(q, 2, 1).reshape(b * hq, sq, dh)
+    khm = jnp.moveaxis(k_hist, 2, 1).reshape(b * hq, -1, dh)
+    vhm = jnp.moveaxis(v_hist, 2, 1).reshape(b * hq, -1, dh)
+    ksm = jnp.moveaxis(k_self, 2, 1).reshape(b * hq, sq, dh)
+    vsm = jnp.moveaxis(v_self, 2, 1).reshape(b * hq, sq, dh)
+    lens = jnp.broadcast_to(
+        jnp.asarray(hist_len, jnp.int32).reshape(-1, 1), (b, hq)
+    ).reshape(b * hq)
+    o = _fa.flash_attention_hist_bhsd(qm, khm, vhm, ksm, vsm, lens,
+                                      interpret=_interpret())
+    return jnp.moveaxis(o.reshape(b, hq, sq, dh), 1, 2)
+
+
+@jax.jit
 def paged_decode_attention(q, k_pool, v_pool, block_tables, cache_len):
     """q (B,1,Hq,Dh); pools (NB,bs,Hkv,Dh); block_tables (B,W) int32.
     Split-KV GQA flash decode over a paged (block-table) KV cache — one

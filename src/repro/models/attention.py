@@ -175,6 +175,57 @@ def chunked_attention(q, k, v, *, causal=True, window=None, q_offset=0,
     return out[:, :sq]
 
 
+def prefill_over_cache(q, k_hist, v_hist, hist_len, k_self, v_self, *,
+                       impl="chunked"):
+    """Chunked-prefill attention: one prompt chunk against cached history.
+
+    q (B, S, Hq, Dh): the chunk's queries, RoPE already applied at their
+    absolute positions ``hist_len .. hist_len + S - 1``. ``k_hist`` /
+    ``v_hist`` (B, C, Hkv, Dh) are the slot's cached KV rows (a dense
+    contiguous view, or a block-table gather of a paged pool) of which
+    the first ``hist_len`` (traced scalar or per-row (B,) int32) are
+    valid — chunk *k* attends chunks ``0..k-1`` through the cache.
+    ``k_self``/``v_self`` (B, S, Hkv, Dh) are the chunk's own KV.
+
+    History slots past ``hist_len`` (unwritten capacity, pad KV from a
+    bucketed splice, clamped sentinel blocks of a paged gather) are
+    masked; within the chunk the mask is plain causality — right-pad
+    queries of a short final chunk sit *after* every real token, so
+    their keys are never visible to real queries and their own rows are
+    garbage the caller discards (exactly the bucketed-prefill
+    contract). One softmax spans history + self, so the math matches a
+    monolithic prefill up to summation order.
+
+    ``impl="pallas"`` dispatches to the split-KV Pallas entry point
+    (kernels/ops.py), which streams the history blocks like the decode
+    kernel instead of concatenating.
+    """
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        return kops.prefill_attention(q, k_hist, v_hist, hist_len,
+                                      k_self, v_self)
+    b, s, hq, dh = q.shape
+    c = k_hist.shape[1]
+    hkv = k_hist.shape[2]
+    k = jnp.concatenate([k_hist, k_self.astype(k_hist.dtype)], axis=1)
+    v = jnp.concatenate([v_hist, v_self.astype(v_hist.dtype)], axis=1)
+    qg = _expand_gqa(q, hkv)  # (b, s, hkv, g, dh)
+    scores = jnp.einsum(
+        "bqhgd,bkhd->bhgqk", qg, k, preferred_element_type=jnp.float32
+    ) / math.sqrt(dh)
+    clen = jnp.asarray(hist_len, jnp.int32)
+    clen_b = clen.reshape(-1, 1, 1) if clen.ndim else clen
+    slot = jnp.arange(c)
+    hist_ok = jnp.broadcast_to(slot[None, None, :] < clen_b, (b, s, c))
+    rel = jnp.arange(s)
+    self_ok = jnp.broadcast_to(rel[None, :] <= rel[:, None], (b, s, s))
+    ok = jnp.concatenate([hist_ok, self_ok], axis=-1)  # (b, s, c+s)
+    scores = jnp.where(ok[:, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v)
+    return out.reshape(b, s, hq, dh)
+
+
 def gather_kv_blocks(pool, block_tables):
     """Paged-cache gather: ``pool`` (NB, bs, Hkv, Dh) indexed by per-row
     block tables (B, W) -> dense view (B, W*bs, Hkv, Dh). Sentinel /

@@ -35,7 +35,8 @@ from repro.models import layers as L
 from repro.models import moe as M
 from repro.models import ssm as S
 from repro.models import xlstm as X
-from repro.models.attention import attention, decode_attention
+from repro.models.attention import (attention, decode_attention,
+                                    prefill_over_cache)
 from repro.distributed import hints
 
 TRANSFORMER_FAMILIES = ("dense", "moe", "vlm")
@@ -137,6 +138,23 @@ def attn_decode(p, cfg, x, k_cache, v_cache, cache_len, *, window=None,
     return jnp.einsum("bse,ed->bsd", o, p["wo"]), k1, v1
 
 
+def attn_chunk(p, cfg, x, k_hist, v_hist, hist_len, *, positions,
+               attn_impl="chunked"):
+    """Chunked-prefill attention: x (B,S,d) is one prompt chunk whose
+    first token sits at absolute position ``hist_len``; ``k_hist``/
+    ``v_hist`` (B,C,Hkv,Dh) are the slot's cached rows (valid to
+    ``hist_len``). Returns (out (B,S,d), (k, v)) — the chunk's own KV,
+    for the caller to splice at offset ``hist_len``."""
+    q, k, v = _proj_qkv(p, cfg, x)
+    if _use_rope(cfg):
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+    impl = "pallas" if attn_impl == "pallas" else "chunked"
+    o = prefill_over_cache(q, k_hist, v_hist, hist_len, k, v, impl=impl)
+    o = o.reshape(x.shape[0], x.shape[1], -1)
+    return jnp.einsum("bse,ed->bsd", o, p["wo"]), (k, v)
+
+
 # ---------------------------------------------------------------------------
 # transformer decoder layers (dense / moe / vlm + whisper enc/dec)
 # ---------------------------------------------------------------------------
@@ -184,6 +202,20 @@ def decoder_block(p, cfg, x, *, positions, attn_impl, causal=True,
     h = L.apply_norm(p["ln2"], cfg, x)
     x = x + _apply_ffn(p, cfg, h)
     return hints.hidden(x, cfg.act_shard), (k, v, xk, xv)
+
+
+def decoder_block_chunk(p, cfg, x, k_hist, v_hist, hist_len, *, positions,
+                        attn_impl="chunked"):
+    """Decoder block over one prompt chunk with a nonzero KV history.
+    Attention-family FFN (dense mlp or moe) — the chunked-prefill
+    analogue of :func:`decoder_block` / :func:`decoder_block_decode`."""
+    h = L.apply_norm(p["ln1"], cfg, x)
+    a, (k, v) = attn_chunk(p["attn"], cfg, h, k_hist, v_hist, hist_len,
+                           positions=positions, attn_impl=attn_impl)
+    x = hints.hidden(x + a, cfg.act_shard)
+    h = L.apply_norm(p["ln2"], cfg, x)
+    x = x + _apply_ffn(p, cfg, h)
+    return hints.hidden(x, cfg.act_shard), (k, v)
 
 
 def decoder_block_decode(p, cfg, x, k_cache, v_cache, cache_len, *,
@@ -633,6 +665,67 @@ def prefill(params, cfg, batch, capacity, *, attn_impl="chunked",
     x = L.apply_norm(params["final_norm"], cfg, x)
     head = params["embed"]["table"] if cfg.tie_embeddings else params["head"]
     return L.logits_from_hidden(head, x)[:, 0], cache
+
+
+def prefill_chunk(params, cfg, batch, k_hist, v_hist, hist_len, *,
+                  attn_impl="chunked", logit_index=None):
+    """Process one prompt chunk against cached history (chunked /
+    Sarathi-style prefill). Attention families only (dense/moe/vlm, no
+    rolling SWA) — recurrent state cannot resume from a KV view, those
+    families fall back to blocking prefill at the scheduler.
+
+    batch: ``{"tokens": (B, S)}`` — the chunk, right-padded to a static
+    length; the first chunk of a vlm prompt also carries ``"images"``
+    (the image-token prefix occupies positions ``0..n_img-1``).
+    ``k_hist``/``v_hist`` (L, B, C, Hkv, Dh): dense per-layer views of
+    the slot's cache (contiguous rows, or a block-table gather of a
+    paged pool), valid to ``hist_len`` (traced scalar) — chunk *k*
+    attends chunks ``0..k-1`` through them. Pad-position KV is garbage
+    downstream code masks by length, exactly like bucketed prefill.
+
+    Returns (logits (B, V) read at ``logit_index`` within the chunk,
+    ks, vs (L, B, S, Hkv, Dh)) — the chunk's KV rows, to be spliced at
+    offset ``hist_len``.
+    """
+    if cfg.family not in TRANSFORMER_FAMILIES:
+        raise ValueError(f"chunked prefill unsupported for family "
+                         f"{cfg.family!r}")
+    if cfg.sliding_window is not None:
+        raise ValueError("chunked prefill does not support rolling SWA "
+                         "caches")
+    x, _, _ = _embed_inputs(params, cfg, batch)
+    s = x.shape[1]
+    positions = jnp.asarray(hist_len, jnp.int32) + jnp.arange(s)
+    n_first = len(params.get("first_layers", []))
+    k_news, v_news = [], []
+    for i, lp in enumerate(params.get("first_layers", [])):
+        x, (k1, v1) = decoder_block_chunk(
+            lp, cfg, x, k_hist[i], v_hist[i], hist_len,
+            positions=positions, attn_impl=attn_impl)
+        k_news.append(k1)
+        v_news.append(v1)
+
+    def body(h, xs):
+        lp, kh, vh = xs
+        h, (k1, v1) = decoder_block_chunk(lp, cfg, h, kh, vh, hist_len,
+                                          positions=positions,
+                                          attn_impl=attn_impl)
+        return h, (k1, v1)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (params["layers"], k_hist[n_first:], v_hist[n_first:]))
+    if k_news:
+        ks = jnp.concatenate([jnp.stack(k_news), ks], axis=0)
+        vs = jnp.concatenate([jnp.stack(v_news), vs], axis=0)
+
+    if logit_index is None:
+        x = x[:, -1:]
+    else:
+        idx = jnp.asarray(logit_index, jnp.int32).reshape(-1, 1, 1)
+        x = jnp.take_along_axis(x, idx, axis=1)
+    x = L.apply_norm(params["final_norm"], cfg, x)
+    head = params["embed"]["table"] if cfg.tie_embeddings else params["head"]
+    return L.logits_from_hidden(head, x)[:, 0], ks, vs
 
 
 # ---------------------------------------------------------------------------

@@ -3,6 +3,13 @@ from repro.serving.engine import (  # noqa: F401
     Request,
     ServingEngine,
 )
+from repro.serving.scheduler import (  # noqa: F401
+    BlockingScheduler,
+    ChunkedScheduler,
+    PrefillState,
+    Scheduler,
+    make_scheduler,
+)
 from repro.serving.kv_cache import (  # noqa: F401
     BlockAllocator,
     ContiguousCache,

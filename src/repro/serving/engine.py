@@ -47,6 +47,21 @@ original length recorded on the request. Retirement is checked at admit
 time (a ``max_new_tokens<=1`` budget or an EOS prefill token never
 occupies a decode slot; ``max_new_tokens=0`` — an explicit zero, not an
 unset field — never even runs prefill) and after each decode step.
+
+*When* prefills run is a policy owned by the :mod:`~repro.serving.
+scheduler` subsystem: ``EngineConfig.scheduler`` selects
+``"blocking"`` (whole-prompt prefill at admission — the historical
+behavior) or ``"chunked"`` (Sarathi-style token-budgeted mixed steps:
+every iteration packs decode tokens for all live slots plus at most
+one ``chunk_tokens``-sized prefill chunk, chunk *k* attending chunks
+``0..k-1`` through the KV cache). The engine keeps the mechanism —
+``step`` consults the scheduler for admission, chunk selection, and
+retirement, then issues at most one prefill-chunk dispatch and exactly
+one ragged decode dispatch. Greedy outputs are bitwise identical
+across schedulers; only the *schedule* (TTFT, inter-token latency)
+changes. ``Request.ttft_s`` is always measured to the first *sampled*
+token — under chunking that is the end of the prompt's final chunk,
+and ``Request.prefill_chunks`` counts the chunks it took to get there.
 """
 from __future__ import annotations
 
@@ -61,6 +76,7 @@ import numpy as np
 
 from repro.models import model as MD
 from repro.serving.kv_cache import contiguous_kv_bytes, make_kv_cache
+from repro.serving.scheduler import PrefillState, make_scheduler
 
 
 @dataclass
@@ -81,6 +97,36 @@ class EngineConfig:
     kv_block_size: int = 16       # paged: positions per KV block
     kv_blocks: int = 0            # paged: pool size; 0 -> auto
                                   # (max_batch * max_seq_len / block_size)
+    scheduler: str = "blocking"   # "blocking" | "chunked" (see
+                                  # serving/scheduler.py)
+    chunk_tokens: int = 64        # chunked: prompt tokens per prefill
+                                  # chunk (one chunk dispatch per step)
+
+    def __post_init__(self):
+        """Reject nonsensical configs with clear errors instead of
+        downstream shape/compile failures."""
+        if self.max_batch < 1:
+            raise ValueError(
+                f"max_batch={self.max_batch} must be >= 1 (the engine "
+                "needs at least one decode slot)")
+        if self.max_seq_len < 2:
+            raise ValueError(
+                f"max_seq_len={self.max_seq_len} must be >= 2 (one "
+                "prompt position plus one decode position)")
+        if self.scheduler not in ("blocking", "chunked"):
+            raise ValueError(f"unknown scheduler {self.scheduler!r} "
+                             "(expected 'blocking' or 'chunked')")
+        if self.scheduler == "chunked":
+            if self.chunk_tokens < 1:
+                raise ValueError(
+                    f"chunk_tokens={self.chunk_tokens} must be >= 1")
+            if (self.prefill_bucket_min > 0
+                    and self.chunk_tokens % self.prefill_bucket_min):
+                raise ValueError(
+                    f"chunk_tokens={self.chunk_tokens} must be a "
+                    f"multiple of the prefill bucket quantum "
+                    f"(prefill_bucket_min={self.prefill_bucket_min}), "
+                    "so chunk shapes stay on the compiled bucket grid")
 
 
 @dataclass
@@ -95,14 +141,24 @@ class Request:
     t_first: float = 0.0
     t_done: float = 0.0
     truncated_from: int | None = None  # original prompt length, if clipped
+    prefill_chunks: int = 0            # prefill dispatches this request took
 
     @property
     def ttft_s(self) -> float:
+        """Time to the first *sampled* token. Under chunked prefill
+        that is the end of the prompt's final chunk — intermediate
+        chunks produce no token and must not count as "first token"."""
         return self.t_first - self.t_submit
 
     @property
     def latency_s(self) -> float:
         return self.t_done - self.t_submit
+
+    @property
+    def itl_s(self) -> float:
+        """Mean inter-token latency over the decode phase."""
+        n = len(self.output)
+        return (self.t_done - self.t_first) / (n - 1) if n > 1 else 0.0
 
 
 class ServingEngine:
@@ -122,10 +178,14 @@ class ServingEngine:
         self.waiting: deque[Request] = deque()
         self.finished: list[Request] = []
         self._next_rid = 0
+        # scheduling policy (admission / chunk selection / retirement)
+        self.scheduler = make_scheduler(cfg, ecfg)
+        self.prefilling: dict[int, PrefillState] = {}  # slot -> progress
         # dispatch accounting (the tentpole invariant: 1 per step)
         self.decode_dispatches = 0   # jitted decode calls issued
         self.decode_steps = 0        # engine steps that decoded anything
-        self.prefills = 0
+        self.prefills = 0            # whole-prompt (blocking) prefills
+        self.prefill_chunk_dispatches = 0
         # bucketed prefill only where right-padding is harmless: causal
         # attention masks pad KV per-row; recurrent state (ssm/hybrid)
         # would advance through pads, rolling SWA would roll them in.
@@ -146,8 +206,35 @@ class ServingEngine:
             new["len"] = cache["len"]  # positions tracked host-side
             return logits, new
 
+        def _chunk_contig(params, batch, cache_k, cache_v, slot, hist_len,
+                          logit_idx):
+            """One prefill-chunk dispatch over a contiguous cache: the
+            slot's dense history rows are sliced inside the jit (no
+            host-side copy per chunk)."""
+            kh = jax.lax.dynamic_slice_in_dim(cache_k, slot, 1, axis=1)
+            vh = jax.lax.dynamic_slice_in_dim(cache_v, slot, 1, axis=1)
+            return MD.prefill_chunk(params, cfg, batch, kh, vh, hist_len,
+                                    logit_index=logit_idx)
+
+        def _chunk_paged(params, batch, pool_k, pool_v, table, hist_len,
+                         logit_idx):
+            """Paged analogue: the slot's block-table row gathers its
+            pool blocks into the dense history view (PR 2's dense-view
+            gather), garbage blocks masked by ``hist_len``."""
+            nb, bs = pool_k.shape[1], pool_k.shape[2]
+            idx = jnp.clip(table, 0, nb - 1)  # (W,) sentinel -> clamped
+            l, w = pool_k.shape[0], idx.shape[0]
+            kh = pool_k[:, idx].reshape(l, 1, w * bs, *pool_k.shape[3:])
+            vh = pool_v[:, idx].reshape(l, 1, w * bs, *pool_v.shape[3:])
+            return MD.prefill_chunk(params, cfg, batch, kh, vh, hist_len,
+                                    logit_index=logit_idx)
+
         self._prefill_one = jax.jit(_prefill_one)  # one compile per bucket
         self._decode_ragged = jax.jit(_decode_ragged)  # one compile total
+        # chunked prefill: slot/hist_len/logit_idx traced -> one compile
+        # per chunk shape (two for vlm: first chunk carries the images)
+        self._chunk_fns = {"contiguous": jax.jit(_chunk_contig),
+                           "paged": jax.jit(_chunk_paged)}
         self._sample = jax.jit(self._make_sampler())
 
     def _make_sampler(self):
@@ -196,9 +283,17 @@ class ServingEngine:
         return self.finished
 
     def step(self):
-        """One engine iteration: admit -> single ragged decode -> retire."""
-        self._admit()
-        live = np.array([r is not None for r in self.slot_req])
+        """One engine iteration, orchestrated by the scheduling policy:
+        admit -> (at most one prefill-chunk dispatch) -> single ragged
+        decode dispatch -> retire. In steady-state decode that is
+        exactly one jitted dispatch per step, plus at most one chunk
+        dispatch while a prompt is streaming in."""
+        self.scheduler.admit(self)
+        chunk_slot = self.scheduler.select_chunk(self)
+        if chunk_slot is not None:
+            self._run_chunk(chunk_slot)
+        live = np.array([r is not None and i not in self.prefilling
+                         for i, r in enumerate(self.slot_req)])
         if live.any():
             cache = self.kv.decode_view(self.slot_pos, live)
             logits, new_cache = self._decode_ragged(
@@ -216,7 +311,7 @@ class ServingEngine:
                 self.slot_tok[i, 0] = int(new[i])
                 self.slot_len[i] += 1
                 self.slot_pos[i] += 1
-        self._retire()
+        self.scheduler.retire(self)
 
     # -- internals ---------------------------------------------------------
     def _budget(self, req: Request) -> int:
@@ -245,22 +340,11 @@ class ServingEngine:
             b *= 2
         return min(b, cap)
 
-    def _admit(self):
-        for slot in [i for i, r in enumerate(self.slot_req) if r is None]:
-            # a request that retires at admit (budget/EOS on its prefill
-            # token) frees the slot for the next waiting request *this*
-            # step, so insta-finished requests never cost batch capacity
-            while self.waiting and self.slot_req[slot] is None:
-                req = self.waiting.popleft()
-                if not self._admit_one(slot, req):
-                    # cache backend out of capacity: keep FIFO order and
-                    # retry after decode frees blocks at retirement
-                    self.waiting.appendleft(req)
-                    return
-
-    def _admit_one(self, slot: int, req: Request) -> bool:
-        """Admit ``req`` into ``slot``; False when the cache backend
-        cannot reserve capacity yet (request stays queued)."""
+    def _admit_prologue(self, slot: int, req: Request):
+        """Shared admission front half: zero-budget insta-finish,
+        truncation, cache capacity check. Returns ``(prompt, n_prompt,
+        budget)`` when the request should proceed, ``True`` when it was
+        consumed without touching the slot, ``False`` to defer it."""
         budget = self._budget(req)
         if budget <= 0:
             # explicit zero-token request: nothing to generate — never
@@ -275,14 +359,25 @@ class ServingEngine:
             warnings.warn(
                 f"request {req.rid}: prompt truncated from "
                 f"{req.truncated_from} to {cap} tokens "
-                f"(max_seq_len={self.ecfg.max_seq_len})", stacklevel=4)
+                f"(max_seq_len={self.ecfg.max_seq_len})", stacklevel=5)
             prompt = prompt[:cap]
-        n = int(prompt.shape[0])
-        n_prompt = n
+        n_prompt = int(prompt.shape[0])
         if self.cfg.family == "vlm" and self.cfg.n_image_tokens:
             n_prompt += self.cfg.n_image_tokens
         if not self.kv.can_admit(n_prompt, budget):
             return False
+        return prompt, n_prompt, budget
+
+    def _admit_one(self, slot: int, req: Request) -> bool:
+        """Blocking admission mechanism: run ``req``'s whole prefill in
+        one bucketed dispatch and bind it to ``slot``. False when the
+        cache backend cannot reserve capacity yet (request stays
+        queued)."""
+        pro = self._admit_prologue(slot, req)
+        if isinstance(pro, bool):
+            return pro
+        prompt, n_prompt, budget = pro
+        n = int(prompt.shape[0])
         nb = self._bucket_len(n)
         toks = np.zeros(nb, np.int32)
         toks[:n] = prompt   # right-pad to the bucket length
@@ -300,13 +395,9 @@ class ServingEngine:
         logits, rows = self._prefill_one(
             self.params, batch, jnp.asarray(n_prompt - 1, jnp.int32))
         self.prefills += 1
+        req.prefill_chunks = 1
         seed = req.seed if req.seed is not None else self.ecfg.seed
-        tok = int(np.asarray(self._sample(
-            logits, jnp.asarray([seed], jnp.int32),
-            jnp.asarray([req.rid], jnp.int32),
-            jnp.asarray([n_prompt - 1], jnp.int32)))[0])
-        req.t_first = time.time()
-        req.output.append(tok)
+        tok = self._sample_first(req, seed, logits, n_prompt)
         # admit-time retirement: the prefill token may already hit the
         # budget / EOS / capacity — never occupy a decode slot for it.
         if (budget <= 1 or tok == self.ecfg.eos_token
@@ -315,27 +406,110 @@ class ServingEngine:
             self.finished.append(req)
             return True
         self.kv.splice(rows, slot, n_prompt, budget)
+        self._bind_decode(slot, req, seed, tok, n_prompt)
+        return True
+
+    def _start_prefill(self, slot: int, req: Request) -> bool:
+        """Chunked admission mechanism: bind ``req`` to ``slot`` and
+        reserve its worst-case cache capacity — no dispatch happens
+        here; the scheduler streams the prompt in via ``_run_chunk``
+        over the following steps. False defers (backend out of
+        capacity), True means the request was consumed (bound, or
+        insta-finished on a zero budget)."""
+        pro = self._admit_prologue(slot, req)
+        if isinstance(pro, bool):
+            return pro
+        prompt, n_prompt, budget = pro
+        self.kv.reserve(slot, n_prompt, budget)
+        seed = req.seed if req.seed is not None else self.ecfg.seed
+        n_prefix = n_prompt - int(prompt.shape[0])
+        self.slot_req[slot] = req
+        self.prefilling[slot] = PrefillState(
+            prompt=np.asarray(prompt, np.int32), n_prefix=n_prefix,
+            n_prompt=n_prompt, budget=budget, seed=seed)
+        return True
+
+    def _run_chunk(self, slot: int):
+        """Run the next prefill chunk for ``slot``: one jitted dispatch
+        over (chunk tokens) x (cached history), splice the chunk's KV at
+        the running offset, and — on the final chunk — sample the first
+        token and hand the slot to the decode phase."""
+        st = self.prefilling[slot]
+        req = self.slot_req[slot]
+        ct = self.ecfg.chunk_tokens
+        first = st.done == 0
+        tok_start = max(0, st.done - st.n_prefix)
+        n_tok = min(ct, int(st.prompt.shape[0]) - tok_start)
+        toks = np.zeros(ct, np.int32)
+        toks[:n_tok] = st.prompt[tok_start:tok_start + n_tok]
+        batch = {"tokens": jnp.asarray(toks[None, :])}
+        if first and self.cfg.family == "vlm" and self.cfg.n_image_tokens:
+            batch["images"] = jnp.zeros(
+                (1, self.cfg.n_image_tokens, self.cfg.d_model),
+                jnp.bfloat16 if self.cfg.dtype == "bfloat16"
+                else jnp.float32)
+        n_valid = n_tok + (st.n_prefix if first else 0)
+        final = st.done + n_valid >= st.n_prompt
+        # logits are read at the prompt's true last position within this
+        # chunk — chunk-local index of global position p is p - st.done
+        # (only meaningful on the final chunk; 0 otherwise)
+        logit_idx = st.n_prompt - 1 - st.done if final else 0
+        view = self.kv.chunk_view(slot)
+        fn = self._chunk_fns[view["kind"]]
+        sel = (jnp.asarray(view["slot"], jnp.int32)
+               if view["kind"] == "contiguous" else view["table"])
+        logits, ks, vs = fn(
+            self.params, batch, view["k"], view["v"], sel,
+            jnp.asarray(st.done, jnp.int32),
+            jnp.asarray(logit_idx, jnp.int32))
+        self.kv.splice_partial(ks, vs, slot, st.done, n_valid)
+        self.prefill_chunk_dispatches += 1
+        req.prefill_chunks += 1
+        st.done += n_valid
+        if not final:
+            return
+        del self.prefilling[slot]
+        tok = self._sample_first(req, st.seed, logits, st.n_prompt)
+        if (st.budget <= 1 or tok == self.ecfg.eos_token
+                or st.n_prompt >= self.ecfg.max_seq_len - 1):
+            req.t_done = time.time()
+            self.finished.append(req)
+            self.slot_req[slot] = None
+            self.kv.free(slot)
+            return
+        self._bind_decode(slot, req, st.seed, tok, st.n_prompt)
+
+    def _sample_first(self, req: Request, seed: int, logits,
+                      n_prompt: int) -> int:
+        """Sample the prompt's first token from prefill logits; stamps
+        ``t_first`` — TTFT is measured to here, never to an
+        intermediate chunk."""
+        tok = int(np.asarray(self._sample(
+            logits, jnp.asarray([seed], jnp.int32),
+            jnp.asarray([req.rid], jnp.int32),
+            jnp.asarray([n_prompt - 1], jnp.int32)))[0])
+        req.t_first = time.time()
+        req.output.append(tok)
+        return tok
+
+    def _bind_decode(self, slot: int, req: Request, seed: int, tok: int,
+                     n_prompt: int):
+        """Hand a freshly-prefilled request to the decode phase."""
         self.slot_req[slot] = req
         self.slot_len[slot] = 1
         self.slot_pos[slot] = n_prompt
         self.slot_tok[slot, 0] = tok
         self.slot_rid[slot] = req.rid
         self.slot_seed[slot] = seed
-        return True
 
-    def _retire(self):
-        for i, req in enumerate(self.slot_req):
-            if req is None:
-                continue
-            done = (self.slot_len[i] >= self._budget(req)
-                    or req.output[-1] == self.ecfg.eos_token
-                    or self.slot_pos[i] >= self.ecfg.max_seq_len - 1)
-            if done:
-                req.t_done = time.time()
-                self.finished.append(req)
-                self.slot_req[i] = None
-                self.slot_len[i] = 0
-                self.kv.free(i)
+    def _retire_slot(self, i: int):
+        """Release slot ``i`` (scheduler-decided retirement)."""
+        req = self.slot_req[i]
+        req.t_done = time.time()
+        self.finished.append(req)
+        self.slot_req[i] = None
+        self.slot_len[i] = 0
+        self.kv.free(i)
 
     # -- metrics ---------------------------------------------------------------
     def summary(self) -> dict:
@@ -353,6 +527,15 @@ class ServingEngine:
             "qps": len(done) / wall if wall > 0 else float("inf"),
             "mean_latency_s": float(np.mean(lat)),
             "mean_ttft_s": float(np.mean(ttft)),
+            "ttft_p50_s": float(np.percentile(ttft, 50)),
+            "ttft_p99_s": float(np.percentile(ttft, 99)),
+            # ITL only over requests that actually decoded (>=2 tokens);
+            # admit-time retirements have no inter-token gap to average
+            "mean_itl_s": float(np.mean(
+                [r.itl_s for r in done if len(r.output) > 1] or [0.0])),
+            "scheduler": self.scheduler.name,
+            "prefill_chunks": sum(r.prefill_chunks for r in done),
+            "prefill_chunk_dispatches": self.prefill_chunk_dispatches,
             "decode_dispatches": self.decode_dispatches,
             "decode_steps": self.decode_steps,
             "dispatches_per_step": (self.decode_dispatches

@@ -100,6 +100,33 @@ class KVCacheManager(Protocol):
         """Write a batch-1 prefill cache into ``slot``."""
         ...
 
+    def reserve(self, slot: int, n_prompt: int, budget: int) -> None:
+        """Register the worst-case capacity of a request admitted for
+        *chunked* prefill into ``slot`` before any KV lands. Paged
+        backends hold the reservation so later admissions cannot eat
+        the blocks this request still needs (deadlock freedom); each
+        :meth:`splice_partial` / :meth:`decode_view` allocation then
+        pays the reservation down. No-op for contiguous."""
+        ...
+
+    def splice_partial(self, k_rows, v_rows, slot: int, offset: int,
+                       n_valid: int) -> None:
+        """Write one prefill chunk's KV rows (L, 1, S, H, Dh) into
+        ``slot`` at positions ``offset .. offset + n_valid - 1`` —
+        callable repeatedly at a running offset; rows past ``n_valid``
+        (the right-pad of a short final chunk) are dropped. Paged
+        backends allocate exactly the blocks the span touches."""
+        ...
+
+    def chunk_view(self, slot: int) -> dict:
+        """Device operands for one chunked-prefill dispatch over this
+        slot's cached history: ``{"kind": "contiguous", "k", "v",
+        "slot"}`` (dense per-layer rows, slot selected inside the jit)
+        or ``{"kind": "paged", "k", "v", "table"}`` (block pools plus
+        the slot's table row, gathered inside the jit). Valid length is
+        tracked by the caller and masks everything else."""
+        ...
+
     def decode_view(self, pos: np.ndarray, live: np.ndarray) -> dict:
         """Device cache pytree for one ragged decode dispatch (allocates
         any block the step is about to write, for paged backends)."""
@@ -199,6 +226,23 @@ class ContiguousCache:
 
         self._splice = jax.jit(_splice)  # slot is traced: one compile
 
+        def _splice_partial(ck, cv, rk, rv, slot, offset, n_valid):
+            # rk/rv (L, 1, S, H, Dh): chunk rows -> positions
+            # offset..offset+n_valid-1 of row ``slot``; the pad tail is
+            # scattered out of range and dropped (never clamped back
+            # onto real positions, unlike a dynamic_update_slice).
+            s, c = rk.shape[2], ck.shape[2]
+            pos = offset + jnp.arange(s)
+            pos = jnp.where(jnp.arange(s) < n_valid, pos, c)
+            ck = ck.at[:, slot, pos].set(rk[:, 0].astype(ck.dtype),
+                                         mode="drop")
+            cv = cv.at[:, slot, pos].set(rv[:, 0].astype(cv.dtype),
+                                         mode="drop")
+            return ck, cv
+
+        # slot/offset/n_valid traced: one compile per chunk shape
+        self._splice_partial = jax.jit(_splice_partial)
+
     def can_admit(self, n_prompt: int, budget: int) -> bool:
         return True  # every slot already owns full capacity
 
@@ -206,6 +250,20 @@ class ContiguousCache:
                budget: int) -> None:
         self._cache = self._splice(self._cache, rows,
                                    jnp.asarray(slot, jnp.int32))
+
+    def reserve(self, slot: int, n_prompt: int, budget: int) -> None:
+        pass  # capacity is pre-provisioned per slot
+
+    def splice_partial(self, k_rows, v_rows, slot: int, offset: int,
+                       n_valid: int) -> None:
+        self._cache["k"], self._cache["v"] = self._splice_partial(
+            self._cache["k"], self._cache["v"], k_rows, v_rows,
+            jnp.asarray(slot, jnp.int32), jnp.asarray(offset, jnp.int32),
+            jnp.asarray(n_valid, jnp.int32))
+
+    def chunk_view(self, slot: int) -> dict:
+        return {"kind": "contiguous", "k": self._cache["k"],
+                "v": self._cache["v"], "slot": slot}
 
     def decode_view(self, pos, live) -> dict:
         return self._cache
@@ -277,6 +335,20 @@ class PagedCache:
 
         self._splice = jax.jit(_splice)  # fixed W: one compile total
 
+        def _splice_pos(pool_k, pool_v, rows_k, rows_v, blk, off):
+            # per-position scatter for chunked prefill: position i of
+            # the chunk lands in pool block ``blk[i]`` at row ``off[i]``
+            # (sentinel blk entries — the pad tail — are dropped). No
+            # alignment requirement between chunk offsets and the block
+            # size: a vlm image prefix can shift every chunk boundary.
+            pk = pool_k.at[:, blk, off].set(
+                rows_k[:, 0].astype(pool_k.dtype), mode="drop")
+            pv = pool_v.at[:, blk, off].set(
+                rows_v[:, 0].astype(pool_v.dtype), mode="drop")
+            return pk, pv
+
+        self._splice_pos = jax.jit(_splice_pos)  # one compile per chunk shape
+
     # -- accounting -------------------------------------------------------
     def _need_blocks(self, n_prompt: int, budget: int) -> int:
         """Worst-case blocks a request ever touches: positions
@@ -307,6 +379,38 @@ class PagedCache:
         self._pool_k, self._pool_v = self._splice(
             self._pool_k, self._pool_v, rows["k"], rows["v"],
             jnp.asarray(vec))
+
+    def reserve(self, slot: int, n_prompt: int, budget: int) -> None:
+        """Chunked admission: hold the request's whole worst-case block
+        count before any chunk lands. Chunks then allocate lazily
+        (:meth:`splice_partial` charges only the blocks each chunk
+        actually touches, paying the reservation down) — resident bytes
+        grow per chunk, while the *reservation* keeps later admissions
+        from eating blocks this request still needs mid-prefill or
+        mid-decode (the same no-deadlock invariant as blocking
+        admission)."""
+        self._reserved[slot] = self._need_blocks(n_prompt, budget)
+
+    def splice_partial(self, k_rows, v_rows, slot: int, offset: int,
+                       n_valid: int) -> None:
+        bs = self.block_size
+        for b in range(offset // bs,
+                       math.ceil((offset + n_valid) / bs)):
+            if self.table[slot, b] == self.num_blocks:
+                self.table[slot, b] = self.allocator.alloc()
+                self._reserved[slot] = max(0, int(self._reserved[slot]) - 1)
+        s = int(k_rows.shape[2])
+        pos = offset + np.arange(s)
+        blk = np.full(s, self.num_blocks, np.int32)
+        valid = np.arange(s) < n_valid
+        blk[valid] = self.table[slot, pos[valid] // bs]
+        self._pool_k, self._pool_v = self._splice_pos(
+            self._pool_k, self._pool_v, k_rows, v_rows,
+            jnp.asarray(blk), jnp.asarray(pos % bs, np.int32))
+
+    def chunk_view(self, slot: int) -> dict:
+        return {"kind": "paged", "k": self._pool_k, "v": self._pool_v,
+                "table": jnp.asarray(self.table[slot])}
 
     def decode_view(self, pos, live) -> dict:
         for i in np.nonzero(live)[0]:

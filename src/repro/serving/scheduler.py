@@ -1,0 +1,168 @@
+"""Scheduling policy for the continuous-batching serving engine.
+
+PIM-AI's serving argument is a *phase-splitting* one: prefill is
+compute-bound, decode is memory-bound, and the architecture
+time-multiplexes the two so neither resource idles (paper §4; LP-Spec
+builds its mobile dataflow on the same asymmetry). The engine-side
+consequence is a scheduling decision, not a kernel: admitting a long
+prompt as one monolithic prefill stalls every live decode slot for the
+whole prefill — head-of-line blocking that grows linearly with prompt
+length.
+
+This module extracts that decision out of :class:`~repro.serving.
+engine.ServingEngine` behind a small policy seam. The engine keeps the
+*mechanism* (running prefills, chunks, the single ragged decode
+dispatch, retirement bookkeeping); a :class:`Scheduler` owns the
+*policy* — which waiting request enters which slot, which prefill work
+runs this step, and when a slot retires:
+
+- :class:`BlockingScheduler` — the historical behavior: a request's
+  whole prompt prefills at admission (one bucketed dispatch), decode
+  slots stall behind it. Works for every model family.
+- :class:`ChunkedScheduler` — Sarathi-style chunked prefill: prompts
+  are split into fixed ``chunk_tokens`` chunks and every engine step
+  packs (decode tokens for all live slots) + (at most one prefill
+  chunk), so long prompts stream in across iterations while decode
+  keeps flowing. Chunk *k* attends chunks ``0..k-1`` through the KV
+  cache (``model.prefill_chunk``). Chunk selection is
+  shortest-remaining-first among admitted slots — short prompts reach
+  their first token without waiting behind a long prompt's stream —
+  with FIFO admission, so a finite workload never starves (shorter
+  prefills complete monotonically and free the chunk budget).
+  Attention families only (dense/moe/vlm, no rolling SWA): recurrent
+  state cannot resume from a KV view, so those families fall back to
+  blocking with a warning.
+
+Both schedulers drive identical prefill/decode math for the tokens they
+produce: greedy outputs are bitwise identical across schedulers (and
+across cache backends), only *when* each token is produced changes.
+"""
+from __future__ import annotations
+
+import warnings
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.models import model as MD
+
+
+@dataclass
+class PrefillState:
+    """Host-side progress of one chunked prefill occupying a slot."""
+    prompt: np.ndarray   # token part, already truncated to capacity
+    n_prefix: int        # non-token prefix positions (vlm image tokens)
+    n_prompt: int        # total sequence positions incl. prefix
+    budget: int          # generation budget at admission
+    seed: int            # sampling seed resolved at admission
+    done: int = 0        # sequence positions already cached
+
+    @property
+    def remaining(self) -> int:
+        return self.n_prompt - self.done
+
+
+class Scheduler:
+    """Policy seam consulted once per :meth:`ServingEngine.step`.
+
+    The engine calls, in order: :meth:`admit` (move waiting requests
+    into free slots), :meth:`select_chunk` (which slot's prefill, if
+    any, gets this step's chunk budget), and — after the decode
+    dispatch — :meth:`retire` (which slots release). Policies only
+    *decide*; all device work and bookkeeping lives in the engine
+    helpers they call (``_admit_one``, ``_start_prefill``,
+    ``_retire_slot``).
+    """
+
+    name = "base"
+
+    def admit(self, eng) -> None:
+        """Shared admission loop: scan free slots, pop waiting requests
+        FIFO, hand each to the policy's :meth:`_admit_request` hook. A
+        request that finishes at admission (zero budget, or blocking's
+        budget/EOS-on-prefill retirement) leaves the slot free, so the
+        next waiting request gets it *this* step; a deferral (cache
+        backend out of capacity) pushes the request back and stops the
+        whole scan to preserve FIFO order."""
+        for slot in [i for i, r in enumerate(eng.slot_req) if r is None]:
+            while eng.waiting and eng.slot_req[slot] is None:
+                req = eng.waiting.popleft()
+                if not self._admit_request(eng, slot, req):
+                    eng.waiting.appendleft(req)
+                    return
+
+    def _admit_request(self, eng, slot: int, req) -> bool:
+        """Policy hook: admit ``req`` into ``slot``; False to defer."""
+        raise NotImplementedError
+
+    def select_chunk(self, eng) -> int | None:
+        """Slot whose prefill receives this step's chunk budget
+        (``None``: no prefill work pending)."""
+        return None
+
+    def retire(self, eng) -> None:
+        """Default retirement policy: a decode-phase slot releases when
+        its budget is spent, it sampled EOS, or it hit capacity.
+        Prefilling slots never retire here (no sampled token yet)."""
+        for i, req in enumerate(eng.slot_req):
+            if req is None or i in eng.prefilling:
+                continue
+            done = (eng.slot_len[i] >= eng._budget(req)
+                    or req.output[-1] == eng.ecfg.eos_token
+                    or eng.slot_pos[i] >= eng.ecfg.max_seq_len - 1)
+            if done:
+                eng._retire_slot(i)
+
+
+class BlockingScheduler(Scheduler):
+    """Today's policy, refactored behind the seam: each admission runs
+    the request's whole prefill in one bucketed dispatch. A request
+    that retires at admission (budget/EOS on its prefill token) frees
+    the slot for the next waiting request within the same step."""
+
+    name = "blocking"
+
+    def _admit_request(self, eng, slot: int, req) -> bool:
+        return eng._admit_one(slot, req)
+
+
+class ChunkedScheduler(Scheduler):
+    """Sarathi-style token-budgeted mixed steps: admission only *binds*
+    a request to a slot (no dispatch); every step then carries decode
+    tokens for all live slots plus at most one ``chunk_tokens``-sized
+    prefill chunk, selected shortest-remaining-first."""
+
+    name = "chunked"
+
+    def __init__(self, chunk_tokens: int):
+        self.chunk_tokens = int(chunk_tokens)
+
+    def _admit_request(self, eng, slot: int, req) -> bool:
+        return eng._start_prefill(slot, req)
+
+    def select_chunk(self, eng) -> int | None:
+        best = None
+        for slot, st in eng.prefilling.items():
+            key = (st.remaining, eng.slot_req[slot].rid)
+            if best is None or key < best[0]:
+                best = (key, slot)
+        return None if best is None else best[1]
+
+
+def make_scheduler(cfg, ecfg) -> Scheduler:
+    """Build the configured policy; families chunked prefill cannot
+    express (recurrent state, rolling SWA, cross-attention caches)
+    fall back to blocking."""
+    kind = getattr(ecfg, "scheduler", "blocking")
+    if kind == "blocking":
+        return BlockingScheduler()
+    if kind == "chunked":
+        if (cfg.family not in MD.TRANSFORMER_FAMILIES
+                or cfg.sliding_window is not None):
+            warnings.warn(
+                f"chunked prefill unsupported for family={cfg.family!r} "
+                f"sliding_window={cfg.sliding_window}; falling back to "
+                "blocking", stacklevel=2)
+            return BlockingScheduler()
+        return ChunkedScheduler(ecfg.chunk_tokens)
+    raise ValueError(f"unknown scheduler {kind!r}")

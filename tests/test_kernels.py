@@ -145,6 +145,49 @@ def test_paged_decode_attention_matches_dense_gather(dtype):
         **tol_for(dtype))
 
 
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("hist", [0, 7, 40, 96])
+def test_prefill_attention_over_cache_matches_reference(dtype, hist):
+    """The chunked-prefill entry point (one softmax over cached history
+    + causal self) must match the pure-JAX reference for every history
+    length including the empty-history first chunk."""
+    from repro.models.attention import prefill_over_cache
+    b, s, c, hq, hkv, dh = 2, 16, 96, 8, 4, 64
+    ks = jax.random.split(KEY, 5)
+    q = rand(ks[0], (b, s, hq, dh), dtype)
+    kh = rand(ks[1], (b, c, hkv, dh), dtype)
+    vh = rand(ks[2], (b, c, hkv, dh), dtype)
+    k_self = rand(ks[3], (b, s, hkv, dh), dtype)
+    v_self = rand(ks[4], (b, s, hkv, dh), dtype)
+    got = ops.prefill_attention(q, kh, vh, jnp.asarray(hist), k_self,
+                                v_self)
+    want = prefill_over_cache(q, kh, vh, jnp.asarray(hist), k_self, v_self)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        **tol_for(dtype))
+
+
+def test_prefill_attention_per_row_history_lengths():
+    """Per-row history lengths (ragged chunk batch) match per-row
+    scalar runs of the same kernel."""
+    b, s, c, hq, hkv, dh = 3, 8, 64, 4, 2, 32
+    ks = jax.random.split(KEY, 5)
+    q = rand(ks[0], (b, s, hq, dh), jnp.float32)
+    kh = rand(ks[1], (b, c, hkv, dh), jnp.float32)
+    vh = rand(ks[2], (b, c, hkv, dh), jnp.float32)
+    k_self = rand(ks[3], (b, s, hkv, dh), jnp.float32)
+    v_self = rand(ks[4], (b, s, hkv, dh), jnp.float32)
+    lens = jnp.asarray([0, 17, 64], jnp.int32)
+    got = ops.prefill_attention(q, kh, vh, lens, k_self, v_self)
+    for i, n in enumerate(np.asarray(lens)):
+        row = ops.prefill_attention(
+            q[i:i + 1], kh[i:i + 1], vh[i:i + 1], jnp.asarray(int(n)),
+            k_self[i:i + 1], v_self[i:i + 1])
+        np.testing.assert_allclose(
+            np.asarray(got[i], np.float32), np.asarray(row[0], np.float32),
+            **tol_for(jnp.float32))
+
+
 # ---------------------------------------------------------------------------
 # int4 quantized GEMV (W4A16 mobile mode)
 # ---------------------------------------------------------------------------

@@ -1,0 +1,214 @@
+"""Chunked-prefill scheduler: policy seam, blocking equivalence,
+liveness, and config validation."""
+from __future__ import annotations
+
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.models import model as MD
+from repro.serving import (BlockingScheduler, ChunkedScheduler,
+                           EngineConfig, ServingEngine)
+
+KEY = jax.random.PRNGKey(3)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = registry.get_smoke_config("qwen1.5-0.5b").replace(dtype="float32")
+    params = MD.init_params(KEY, cfg)
+    return cfg, params
+
+
+def _drive(params, cfg, prompts, *, scheduler, kv_cache="contiguous",
+           max_batch=3, max_seq_len=64, max_new_tokens=5, chunk_tokens=16,
+           **kw):
+    eng = ServingEngine(params, cfg, EngineConfig(
+        max_batch=max_batch, max_seq_len=max_seq_len,
+        max_new_tokens=max_new_tokens, scheduler=scheduler,
+        chunk_tokens=chunk_tokens, kv_cache=kv_cache, **kw))
+    for p in prompts:
+        eng.submit(p)
+    eng.run()
+    return eng
+
+
+# ---------------------------------------------------------------------------
+# chunked == blocking, bitwise, across families and cache backends
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["qwen1.5-0.5b",       # dense
+                                  "deepseek-moe-16b",   # moe (+first dense)
+                                  "internvl2-26b"])     # vlm (image prefix)
+@pytest.mark.parametrize("kv_cache", ["contiguous", "paged"])
+def test_chunked_matches_blocking_bitwise(arch, kv_cache):
+    """The tentpole invariant: splitting a prompt into chunks that
+    attend their history through the KV cache must not change greedy
+    outputs — per family, per cache backend."""
+    cfg = registry.get_smoke_config(arch).replace(dtype="float32")
+    params = MD.init_params(KEY, cfg)
+    rng = np.random.default_rng(0)
+    lens = [5, 16, 21, 40]  # straddles chunk, bucket, and block edges
+    prompts = [rng.integers(0, cfg.vocab_size, size=n) for n in lens]
+
+    outs = {}
+    for sched in ("blocking", "chunked"):
+        eng = _drive(params, cfg, prompts, scheduler=sched,
+                     kv_cache=kv_cache)
+        assert isinstance(
+            eng.scheduler,
+            ChunkedScheduler if sched == "chunked" else BlockingScheduler)
+        outs[sched] = {r.rid: r.output for r in eng.finished}
+        assert len(outs[sched]) == len(lens)
+        # steady-state decode stays one dispatch per step
+        assert eng.decode_dispatches == eng.decode_steps
+    assert outs["chunked"] == outs["blocking"]
+
+
+def test_chunk_count_and_streamed_prefill(setup):
+    """A long prompt streams in as ceil(n / chunk_tokens) chunk
+    dispatches, decode slots keep advancing meanwhile, and the request
+    still matches the blocking output."""
+    cfg, params = setup
+    rng = np.random.default_rng(1)
+    long_p = rng.integers(0, cfg.vocab_size, size=50)
+    short = rng.integers(0, cfg.vocab_size, size=6)
+
+    blocking = _drive(params, cfg, [long_p, short], scheduler="blocking")
+    want = {r.rid: r.output for r in blocking.finished}
+
+    eng = _drive(params, cfg, [long_p, short], scheduler="chunked",
+                 chunk_tokens=16)
+    got = {r.rid: r.output for r in eng.finished}
+    assert got == want
+    by_rid = {r.rid: r for r in eng.finished}
+    assert by_rid[0].prefill_chunks == math.ceil(50 / 16)
+    assert by_rid[1].prefill_chunks == 1
+    assert eng.prefill_chunk_dispatches == math.ceil(50 / 16) + 1
+    assert eng.summary()["prefill_chunks"] == math.ceil(50 / 16) + 1
+    # the long prompt's first token arrives only at its final chunk
+    assert by_rid[0].ttft_s > 0
+
+
+def test_ttft_measured_to_first_sampled_token(setup):
+    """Under chunking, t_first must stamp at the *final* chunk (first
+    sampled token), never at an intermediate chunk: the long prompt's
+    TTFT is strictly later than the short's even though its first chunk
+    dispatch runs earlier than the short's admission."""
+    cfg, params = setup
+    rng = np.random.default_rng(2)
+    long_p = rng.integers(0, cfg.vocab_size, size=50)
+    shorts = [rng.integers(0, cfg.vocab_size, size=6) for _ in range(2)]
+    eng = _drive(params, cfg, [long_p] + shorts, scheduler="chunked",
+                 chunk_tokens=16, max_batch=3)
+    by_rid = {r.rid: r for r in eng.finished}
+    for r in eng.finished:
+        assert r.t_first >= r.t_submit
+        assert r.t_done >= r.t_first
+    # shortest-remaining-first: both shorts sample before the long
+    assert by_rid[1].t_first < by_rid[0].t_first
+    assert by_rid[2].t_first < by_rid[0].t_first
+
+
+def test_unsupported_family_falls_back_to_blocking():
+    """Recurrent families cannot resume prefill from a KV view — the
+    scheduler must warn and fall back, and outputs must still match."""
+    cfg = registry.get_smoke_config("zamba2-2.7b").replace(dtype="float32")
+    params = MD.init_params(jax.random.PRNGKey(1), cfg)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n) for n in (5, 12)]
+    want = {r.rid: r.output
+            for r in _drive(params, cfg, prompts,
+                            scheduler="blocking", max_seq_len=48).finished}
+    with pytest.warns(UserWarning, match="falling back to blocking"):
+        eng = _drive(params, cfg, prompts, scheduler="chunked",
+                     max_seq_len=48)
+    assert isinstance(eng.scheduler, BlockingScheduler)
+    assert {r.rid: r.output for r in eng.finished} == want
+
+
+def test_chunked_respects_admit_time_retirement(setup):
+    """budget=1 / EOS-on-first-token semantics survive the chunked
+    path: the request finishes at its final chunk without ever holding
+    a decode slot."""
+    cfg, params = setup
+    rng = np.random.default_rng(4)
+    prompt = rng.integers(0, cfg.vocab_size, size=20)
+    eng = _drive(params, cfg, [], scheduler="chunked", chunk_tokens=16)
+    r1 = eng.submit(prompt, max_new_tokens=1)
+    r0 = eng.submit(rng.integers(0, cfg.vocab_size, size=8),
+                    max_new_tokens=0)
+    eng.run()
+    assert len(r1.output) == 1
+    assert r1.prefill_chunks == 2
+    assert r0.output == [] and r0.prefill_chunks == 0
+    assert eng.decode_dispatches == 0
+
+
+# ---------------------------------------------------------------------------
+# EngineConfig validation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kw,match", [
+    (dict(max_batch=0), "max_batch"),
+    (dict(max_batch=-3), "max_batch"),
+    (dict(max_seq_len=1), "max_seq_len"),
+    (dict(scheduler="sarathi"), "unknown scheduler"),
+    (dict(scheduler="chunked", chunk_tokens=0), "chunk_tokens"),
+    (dict(scheduler="chunked", chunk_tokens=-16), "chunk_tokens"),
+    (dict(scheduler="chunked", chunk_tokens=24, prefill_bucket_min=16),
+     "multiple of the prefill bucket quantum"),
+])
+def test_engine_config_validation(kw, match):
+    with pytest.raises(ValueError, match=match):
+        EngineConfig(**kw)
+
+
+def test_engine_config_valid_chunked_configs():
+    EngineConfig(scheduler="chunked", chunk_tokens=32)   # 2x quantum
+    EngineConfig(scheduler="chunked", chunk_tokens=7,
+                 prefill_bucket_min=0)                   # bucketing off
+    EngineConfig(scheduler="blocking", chunk_tokens=7)   # unused -> ok
+
+
+# ---------------------------------------------------------------------------
+# fairness / liveness (hypothesis)
+# ---------------------------------------------------------------------------
+
+def test_no_request_starves_random_mixed_workloads():
+    """Property: every submitted request eventually retires with its
+    full budget of tokens, under random mixed short/long workloads, for
+    both schedulers and both cache backends (the SJF chunk policy must
+    not starve long prompts, paged reservations must not deadlock)."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    cfg = registry.get_smoke_config("qwen1.5-0.5b").replace(dtype="float32")
+    params = MD.init_params(KEY, cfg)
+
+    @given(lens=st.lists(st.integers(1, 40), min_size=1, max_size=6),
+           budgets=st.lists(st.integers(0, 4), min_size=1, max_size=6),
+           scheduler=st.sampled_from(["blocking", "chunked"]),
+           kv_cache=st.sampled_from(["contiguous", "paged"]))
+    @settings(max_examples=8, deadline=None)
+    def prop(lens, budgets, scheduler, kv_cache):
+        eng = ServingEngine(params, cfg, EngineConfig(
+            max_batch=2, max_seq_len=64, max_new_tokens=3,
+            scheduler=scheduler, chunk_tokens=16, kv_cache=kv_cache))
+        reqs = [eng.submit(np.arange(n) % cfg.vocab_size,
+                           max_new_tokens=budgets[i % len(budgets)])
+                for i, n in enumerate(lens)]
+        eng.run(max_steps=500)
+        assert not eng.waiting and all(r is None for r in eng.slot_req)
+        assert len(eng.finished) == len(reqs)
+        for r in reqs:
+            budget = budgets[r.rid % len(budgets)]
+            if budget == 0:   # explicit zero: retires without a token
+                assert r.output == []
+            else:             # retired with 1..budget tokens, never more
+                assert 1 <= len(r.output) <= budget
+
+    prop()
