@@ -19,6 +19,12 @@ Invariants under test:
   requests on a mixed short/long workload drops strictly below
   blocking — the head-of-line-blocking win the paper's
   prefill/decode time-multiplexing argument (§4) predicts.
+- ``--scheduler speculative``: greedy outputs are bitwise identical to
+  blocking (hard-fail otherwise) on both cache backends, and on the
+  high-acceptance workload (full-depth self-draft — the draft *is* the
+  target) accepted-tokens/step must exceed 1.0 (hard-fail otherwise):
+  each target weight stream commits more than one token, the LP-Spec
+  energy/token win decode's memory-boundedness makes possible.
 
 Also cross-checks against the analytical simulator's continuous-batching
 path (``LLMSimulator.serve``) on Table-1 cloud profiles, which charges
@@ -60,6 +66,7 @@ MIXED_SEQ = 1024
 MIXED_LONG = 900
 MIXED_CHUNK = 64
 MIXED_SHORT_MAX = 14
+GAMMA = 4           # speculative: draft tokens per verify step
 
 
 def _workload(kind: str, rng):
@@ -76,10 +83,11 @@ def _workload(kind: str, rng):
 
 
 def _drive(params, cfg, lens, rng, kv_cache, scheduler="blocking",
-           max_seq=MAX_SEQ, chunk=CHUNK):
+           max_seq=MAX_SEQ, chunk=CHUNK, gamma=GAMMA, draft_layers=0):
     eng = ServingEngine(params, cfg, EngineConfig(
         max_batch=MAX_BATCH, max_seq_len=max_seq, max_new_tokens=N_NEW,
-        kv_cache=kv_cache, scheduler=scheduler, chunk_tokens=chunk))
+        kv_cache=kv_cache, scheduler=scheduler, chunk_tokens=chunk,
+        spec_gamma=gamma, spec_draft_layers=draft_layers))
     prompts = [rng.integers(0, cfg.vocab_size, size=int(n)) for n in lens]
     # warm every prefill bucket/chunk shape + the decode dispatch out of
     # the timing
@@ -89,6 +97,9 @@ def _drive(params, cfg, lens, rng, kv_cache, scheduler="blocking",
     eng.finished.clear()
     eng.decode_dispatches = eng.decode_steps = eng.prefills = 0
     eng.prefill_chunk_dispatches = 0
+    eng.draft_dispatches = eng.verify_dispatches = 0
+    eng.spec_row_steps = eng.spec_committed = 0
+    eng.spec_drafted = eng.spec_draft_accepted = 0
 
     t0 = time.time()
     for p in prompts:
@@ -119,6 +130,10 @@ def _drive(params, cfg, lens, rng, kv_cache, scheduler="blocking",
             [r.ttft_s for r in short], 99)) if short else 0.0,
         "resident_kv_bytes": s["resident_kv_bytes"],
         "contiguous_kv_bytes": s["contiguous_kv_bytes"],
+        "draft_dispatches": s["draft_dispatches"],
+        "verify_dispatches": s["verify_dispatches"],
+        "accepted_tokens_per_step": s["accepted_tokens_per_step"],
+        "acceptance_rate": s["acceptance_rate"],
         "outputs": outputs,
     }
 
@@ -129,7 +144,9 @@ def run(json_path: str | None = None, scheduler: str = "blocking"):
 
     results = {"model": MODEL, "max_batch": MAX_BATCH, "max_seq": MAX_SEQ,
                "n_new": N_NEW, "scheduler": scheduler, "chunk_tokens": CHUNK,
-               "engine": [], "analytical": [], "head_of_line": []}
+               "spec_gamma": GAMMA,
+               "engine": [], "analytical": [], "head_of_line": [],
+               "speculative": []}
     rows = []
     mismatched = []
     for kind in ("aligned", "ragged"):
@@ -205,11 +222,55 @@ def run(json_path: str | None = None, scheduler: str = "blocking"):
              "short p50 ms", "short p99 ms", "itl ms"],
             hol_rows)
 
+    if scheduler == "speculative":
+        # speculative decoding demonstration: (a) outputs must be
+        # bitwise identical to blocking on both backends at any
+        # acceptance; (b) on the high-acceptance workload (full-depth
+        # self-draft — the draft IS the target) each target weight
+        # stream must commit strictly more than one token.
+        spec_rows = []
+        lens = _workload("ragged", np.random.default_rng(4))
+        for kv in ("contiguous", "paged"):
+            base = _drive(params, cfg, lens, np.random.default_rng(5), kv,
+                          "blocking")
+            for label, draft_layers in (("half-depth", 0),
+                                        ("full-depth", 99)):
+                m = _drive(params, cfg, lens, np.random.default_rng(5),
+                           kv, "speculative", gamma=GAMMA,
+                           draft_layers=draft_layers)
+                spec_rows.append(
+                    [kv, label, m["verify_dispatches"],
+                     m["draft_dispatches"],
+                     r3(m["accepted_tokens_per_step"]),
+                     r3(m["acceptance_rate"]), r3(m["tok_s"])])
+                same = m["outputs"] == base["outputs"]
+                results["speculative"].append(
+                    {"kv_cache": kv, "draft": label,
+                     "spec_matches_blocking": same,
+                     **{k: v for k, v in m.items() if k != "outputs"}})
+                if not same:
+                    mismatched.append(
+                        f"speculative/{kv}/{label}: greedy outputs "
+                        "diverged from blocking")
+                if (label == "full-depth"
+                        and m["accepted_tokens_per_step"] <= 1.0):
+                    mismatched.append(
+                        f"speculative/{kv}/high-acceptance: "
+                        f"{m['accepted_tokens_per_step']:.2f} accepted "
+                        "tokens/step <= 1.0 — each weight stream must "
+                        "commit more than one token")
+        print_table(
+            f"speculative decoding (gamma={GAMMA}, ragged workload, "
+            "self-draft)",
+            ["kv_cache", "draft", "verifies", "draft disp", "acc/step",
+             "acc rate", "tok/s"],
+            spec_rows)
+
     # the same workloads on the paper's cloud hardware (analytical)
     full = registry.get_config(MODEL)
     sim_rows = []
-    sim_kinds = ("aligned", "ragged") if scheduler == "blocking" \
-        else ("aligned", "ragged", "mixed")
+    sim_kinds = ("aligned", "ragged", "mixed") if scheduler == "chunked" \
+        else ("aligned", "ragged")
     for kind in sim_kinds:
         lens = _workload(kind, np.random.default_rng(0))[:MAX_BATCH]
         cap = MIXED_SEQ if kind == "mixed" else MAX_SEQ
@@ -222,7 +283,8 @@ def run(json_path: str | None = None, scheduler: str = "blocking"):
                 # of what the workload touches
                 r = sim.serve(lens, N_NEW, kv_cache=kv,
                               max_seq_len=cap, scheduler=scheduler,
-                              chunk_tokens=chunk)
+                              chunk_tokens=chunk, gamma=GAMMA,
+                              acceptance=0.8)
                 sim_rows.append([kind, kv, hw.name, r3(r["tokens_per_s"]),
                                  r3(r["energy_per_token_j"] * 1e3),
                                  r["prefill_chunks"],
@@ -246,6 +308,14 @@ def run(json_path: str | None = None, scheduler: str = "blocking"):
                         mismatched.append(
                             f"sim schedule shape {kind}/{kv}/{hw.name}: "
                             f"{r['prefill_chunks']} chunks != {want}")
+                if scheduler == "speculative":
+                    # at 0.8 acceptance the analytical commit rate must
+                    # exceed one token per target weight stream
+                    if r["accepted_tokens_per_step"] <= 1.0:
+                        mismatched.append(
+                            f"sim speculative {kind}/{kv}/{hw.name}: "
+                            f"{r['accepted_tokens_per_step']:.2f} "
+                            "accepted tokens/step <= 1.0")
     print_table(
         f"analytical continuous batching (Table-1 profiles, "
         f"{scheduler} scheduler)",
@@ -270,8 +340,10 @@ if __name__ == "__main__":
     ap.add_argument("--json", default=None,
                     help="write machine-readable results to this path")
     ap.add_argument("--scheduler", default="blocking",
-                    choices=["blocking", "chunked"],
-                    help="prefill scheduling policy for the engine runs "
-                         "(chunked also runs the head-of-line comparison)")
+                    choices=["blocking", "chunked", "speculative"],
+                    help="scheduling policy for the engine runs (chunked "
+                         "also runs the head-of-line comparison; "
+                         "speculative also runs the draft/verify "
+                         "acceptance gate)")
     args = ap.parse_args()
     run(args.json, scheduler=args.scheduler)

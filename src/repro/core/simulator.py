@@ -161,6 +161,7 @@ class LLMSimulator:
         self._decode_linear = {}   # keyed (batch, max_len, ragged)
         self._prefill_cache = {}
         self._chunk_cache = {}     # keyed (chunk_tokens, capacity)
+        self._verify_linear = {}   # keyed (batch, max_len, gamma, kv)
 
     # -- traced op streams -------------------------------------------------
     def _prefill_ops(self, batch: int, n_in: int):
@@ -226,6 +227,43 @@ class LLMSimulator:
                 L1 = max(1, L2 // 2)
             self._decode_linear[key] = T.trace_linear(of_len, L1, L2)
         return self._decode_linear[key]
+
+    def _verify_ops_linear(self, batch: int, max_len: int, gamma: int, *,
+                           kv_cache: str = "contiguous",
+                           kv_block_size: int = 16):
+        """Linear-in-cache-length op stream of one speculative verify
+        dispatch: ``gamma + 1`` candidate tokens per row against the
+        row's cached history (``model.verify_tokens`` — the real
+        multi-token graph the engine jits, ragged per-row lengths +
+        live mask), traced at two cache lengths exactly like the decode
+        step so the cost model stays honest to the streamed-KV
+        growth."""
+        key = (batch, max_len, gamma, kv_cache, kv_block_size)
+        if key not in self._verify_linear:
+            params = jax.eval_shape(
+                lambda k: MD.init_params(k, self.cfg), jax.random.PRNGKey(0))
+
+            def of_len(L):
+                if kv_cache == "paged":
+                    cache = MD.paged_cache_spec(
+                        self.cfg, batch, L, kv_block_size, ragged=True)
+                else:
+                    cache = MD.cache_spec(self.cfg, batch, L)
+                cache["len"] = jax.ShapeDtypeStruct((batch,), jnp.int32)
+                tok = jax.ShapeDtypeStruct((batch, gamma + 1), jnp.int32)
+                live = jax.ShapeDtypeStruct((batch,), jnp.bool_)
+
+                def fn(p, t, c, lv):
+                    return MD.verify_tokens(p, self.cfg, t, c, live=lv)
+
+                return fn, (params, tok, cache, live)
+
+            L1 = max(32, max_len // 2)
+            L2 = max_len
+            if L1 == L2:
+                L1 = max(1, L2 // 2)
+            self._verify_linear[key] = T.trace_linear(of_len, L1, L2)
+        return self._verify_linear[key]
 
     def _chunk_ops(self, chunk_tokens: int, capacity: int):
         """Traced op stream of one chunked-prefill dispatch: a
@@ -310,7 +348,9 @@ class LLMSimulator:
 
     def serve(self, n_ins, n_out: int, *, kv_cache: str = "contiguous",
               kv_block_size: int = 16, max_seq_len: int | None = None,
-              scheduler: str = "blocking", chunk_tokens: int = 64) -> dict:
+              scheduler: str = "blocking", chunk_tokens: int = 64,
+              gamma: int = 4, acceptance: float = 0.8,
+              draft_layers: int = 0) -> dict:
         """Continuous-batching cloud scenario (matches ``ServingEngine``):
         per-request prefill + one fully-ragged decode dispatch per step
         over the whole batch, each row's KV span growing from its own
@@ -332,27 +372,42 @@ class LLMSimulator:
         simulated step carrying one chunk dispatch plus one ragged
         decode dispatch for the already-prefilled rows — so simulated
         TTFT/TPOT reflect the head-of-line-blocking policy, not just
-        the op totals."""
+        the op totals.
+
+        ``"speculative"`` charges the draft/verify schedule: ``gamma``
+        small-model dispatches plus one multi-token target verify per
+        round, with ``acceptance`` the per-candidate acceptance
+        probability (expected commits per round follow the greedy
+        longest-prefix law) and ``draft_layers`` the draft's depth
+        (0 -> n_layers // 2 self-draft). This is where the PIM
+        energy/token claim becomes measurable: decode is memory-bound,
+        so amortizing one target weight stream over the accepted
+        tokens cuts energy per token roughly by the commit rate."""
         from repro.serving.kv_cache import (contiguous_kv_bytes,
                                             paged_resident_kv_bytes)
         batch = len(n_ins)
         cap = max_seq_len or (max(int(n) for n in n_ins) + n_out)
-        if scheduler == "chunked":
+        if scheduler in ("chunked", "speculative"):
             if (self.cfg.family not in MD.TRANSFORMER_FAMILIES
                     or self.cfg.sliding_window is not None):
-                # mirror make_scheduler: families chunked prefill cannot
+                # mirror make_scheduler: families these policies cannot
                 # express fall back to the blocking schedule
                 import warnings
                 warnings.warn(
-                    f"chunked prefill unsupported for family="
+                    f"{scheduler} scheduling unsupported for family="
                     f"{self.cfg.family!r} sliding_window="
                     f"{self.cfg.sliding_window}; simulating the blocking "
                     "schedule", stacklevel=2)
-            else:
+            elif scheduler == "chunked":
                 return self._serve_chunked(
                     n_ins, n_out, kv_cache=kv_cache,
                     kv_block_size=kv_block_size, cap=cap,
                     chunk_tokens=chunk_tokens)
+            else:
+                return self._serve_speculative(
+                    n_ins, n_out, kv_cache=kv_cache,
+                    kv_block_size=kv_block_size, cap=cap, gamma=gamma,
+                    acceptance=acceptance, draft_layers=draft_layers)
         enc = PhaseResult()
         t_cum = ttft_sum = 0.0
         ttfts = []
@@ -374,7 +429,7 @@ class LLMSimulator:
                 kv_block_size)
         else:
             resident = contiguous_bytes
-        return {
+        out = {
             "encode": enc,
             "decode": dec,
             "ttft_s": ttft_sum / batch,
@@ -389,6 +444,14 @@ class LLMSimulator:
             "resident_kv_bytes": resident,
             "contiguous_kv_bytes": contiguous_bytes,
         }
+        if scheduler == "speculative":
+            # unsupported-family fallback: keep the documented
+            # speculative keys present (degenerate values) so callers
+            # reading them do not crash on ssm/hybrid/SWA configs
+            out.update(accepted_tokens_per_step=1.0, acceptance=0.0,
+                       spec_gamma=gamma, draft_dispatches=0,
+                       draft_kv_bytes=0)
+        return out
 
     def _serve_chunked(self, n_ins, n_out: int, *, kv_cache: str,
                        kv_block_size: int, cap: int,
@@ -478,6 +541,119 @@ class LLMSimulator:
             "scheduler": "chunked",
             "prefill_chunks": total_chunks,
             "steps": steps,
+            "resident_kv_bytes": resident,
+            "contiguous_kv_bytes": contiguous_bytes,
+        }
+
+    def _draft_cfg(self, draft_layers: int):
+        """Config of the self-draft model: the target's first k layers
+        (0 -> half depth), mirroring ``model.self_draft_params``'s
+        clamping exactly — an MoE target drafted at k <= its leading
+        dense layers really does run a dense-only draft, and the cost
+        model must charge that, not a deeper one."""
+        k = int(draft_layers) or max(1, self.cfg.n_layers // 2)
+        k = max(1, min(k, self.cfg.n_layers))
+        return self.cfg.replace(
+            n_layers=k,
+            first_dense_layers=min(self.cfg.first_dense_layers, k)
+            if self.cfg.is_moe else self.cfg.first_dense_layers)
+
+    def _serve_speculative(self, n_ins, n_out: int, *, kv_cache: str,
+                           kv_block_size: int, cap: int, gamma: int,
+                           acceptance: float, draft_layers: int) -> dict:
+        """Draft/verify schedule (mirrors ``SpeculativeScheduler``):
+        blocking admission prefills target *and* draft; every round
+        then charges ``gamma`` draft decode dispatches plus **one**
+        multi-token target verify dispatch (``model.verify_tokens``
+        traced for real, ragged + live-masked, over the configured
+        cache backend). With per-candidate acceptance probability
+        ``a``, the greedy longest-prefix law commits ``E = sum_{i=1..g}
+        a^i + 1`` tokens per round in expectation, so the run needs
+        ``n_out / E`` rounds — each streaming the target's weights
+        once. Decode being memory-bound, energy/token falls by ~E while
+        the draft's (small) passes add back a fraction — the LP-Spec
+        trade the paper's mobile scenario banks on."""
+        from repro.serving.kv_cache import (contiguous_kv_bytes,
+                                            paged_resident_kv_bytes)
+        batch = len(n_ins)
+        dsim = LLMSimulator(self._draft_cfg(draft_layers), self.hw,
+                            self.sim)
+        # blocking admission: sequential target + draft prefills
+        enc = PhaseResult()
+        t_cum = ttft_sum = 0.0
+        ttfts = []
+        for n in n_ins:
+            e = self.encode(1, int(n))
+            d = dsim.encode(1, int(n))
+            enc.add(e)
+            enc.add(d)
+            t_cum += e.seconds + d.seconds
+            ttfts.append(t_cum)
+            ttft_sum += t_cum
+        # expected commits per verify round (greedy longest prefix)
+        a = min(max(float(acceptance), 0.0), 1.0)
+        commits = 1.0 + sum(a ** i for i in range(1, gamma + 1))
+        rounds = max(1, math.ceil(n_out / commits))
+        n_mean = sum(float(n) for n in n_ins) / batch
+        max_len = int(math.ceil(n_mean)) + n_out
+        l_mean = n_mean + (n_out - 1) / 2.0
+        verify = PhaseResult()
+        for lop in self._verify_ops_linear(batch, max_len, gamma,
+                                           kv_cache=kv_cache,
+                                           kv_block_size=kv_block_size):
+            verify.add(_op_cost(lop.at(l_mean), self.hw, self.sim))
+        draft_step = PhaseResult()
+        for lop in dsim._decode_ops_linear(batch, max_len, ragged=True):
+            draft_step.add(_op_cost(lop.at(l_mean), self.hw, self.sim))
+        per_round = PhaseResult()
+        per_round.add(verify)
+        for f in ("seconds", "energy_j", "compute_s", "memory_s",
+                  "host_s", "ops", "mem_bytes", "host_bytes"):
+            setattr(per_round, f, getattr(per_round, f)
+                    + gamma * getattr(draft_step, f))
+        # per round: committed token ids D2H + next inputs H2D,
+        # orchestration once (draft chain is host-driven but tiny)
+        per_round.add(_host_transfer(batch * 4 * commits, self.hw,
+                                     d2h=True))
+        per_round.add(_host_transfer(batch * 4, self.hw, d2h=False))
+        if self.sim.tp_degree > 1:
+            per_tok = (2 * self.cfg.n_layers * self.cfg.d_model * 2
+                       * (self.sim.tp_degree - 1) / self.sim.tp_degree)
+            per_round.add(_tp_collective(per_tok * batch, self.hw))
+        per_round.seconds += self.sim.orchestration_s
+        per_round.host_s += self.sim.orchestration_s
+        dec = PhaseResult()
+        for f in ("seconds", "energy_j", "compute_s", "memory_s",
+                  "host_s", "ops", "mem_bytes", "host_bytes"):
+            setattr(dec, f, getattr(per_round, f) * rounds)
+        contiguous_bytes = contiguous_kv_bytes(self.cfg, batch, cap)
+        if kv_cache == "paged":
+            resident = paged_resident_kv_bytes(
+                self.cfg, [min(int(n) + n_out - 1, cap) for n in n_ins],
+                kv_block_size)
+        else:
+            resident = contiguous_bytes
+        # the draft's contiguous shadow cache is resident KV too
+        draft_bytes = contiguous_kv_bytes(dsim.cfg, batch, cap)
+        resident += draft_bytes
+        total_toks = batch * n_out
+        return {
+            "encode": enc,
+            "decode": dec,
+            "ttft_s": ttft_sum / batch,
+            "ttft_per_req_s": ttfts,
+            "tokens_per_s": total_toks / max(dec.seconds, 1e-12),
+            "energy_per_token_j": dec.energy_j / total_toks,
+            "qps": batch / max(enc.seconds + dec.seconds, 1e-12),
+            "draft_kv_bytes": draft_bytes,
+            "decode_dispatches": rounds,       # one target verify each
+            "draft_dispatches": rounds * gamma,
+            "accepted_tokens_per_step": commits,
+            "acceptance": a,
+            "spec_gamma": gamma,
+            "kv_cache": kv_cache,
+            "scheduler": "speculative",
+            "prefill_chunks": batch,
             "resident_kv_bytes": resident,
             "contiguous_kv_bytes": contiguous_bytes,
         }

@@ -153,11 +153,21 @@ def flash_attention_hist_bhsd(q, k_hist, v_hist, k_self, v_self, hist_len,
     int32) plus its own causal ``k_self``/``v_self`` (BH, S, Dh).
     One online softmax spans both — the history side streams exactly
     like the split-KV decode kernel (per-row length prefetch), the self
-    side like the training flash kernel."""
+    side like the training flash kernel.
+
+    Two callers share this kernel: chunked prefill (S ~ chunk_tokens,
+    per-row length optional) and the speculative **multi-token verify**
+    step (S = gamma + 1, a handful of candidate tokens per row, per-row
+    lengths mandatory — every serving slot verifies at its own
+    absolute position). The KV tile size therefore follows the larger
+    of the two streamed extents: clamping it to the tiny verify-side S
+    (the old ``min(c, sq)``) would shred a long history into 8-position
+    DMAs and make verify slower than the gamma single-token dispatches
+    it replaces."""
     bh, sq, dh = q.shape
     c = k_hist.shape[1]
     block_q = min(block_q, max(8, sq))
-    block_k = min(block_k, max(8, min(c, sq)))
+    block_k = min(block_k, max(8, c, sq))
     nq = math.ceil(sq / block_q)
     nk_h = math.ceil(c / block_k)
     nk_s = math.ceil(sq / block_k)

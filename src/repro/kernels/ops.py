@@ -90,6 +90,25 @@ def prefill_attention(q, k_hist, v_hist, hist_len, k_self, v_self):
     return jnp.moveaxis(o.reshape(b, hq, sq, dh), 1, 2)
 
 
+def verify_attention(q, k_hist, v_hist, hist_len, k_self, v_self):
+    """Speculative-verify entry point: q (B, S, Hq, Dh) holds each
+    row's ``S = gamma + 1`` candidate tokens at absolute positions
+    ``hist_len[b] .. hist_len[b] + S - 1``; ``hist_len`` is the
+    **per-row** (B,) valid-history length (scalar accepted and
+    broadcast), prefetched like the split-KV decode kernel's length
+    vector so one dispatch verifies a fully-ragged batch of candidate
+    windows. ``k_hist``/``v_hist`` (B, C, Hkv, Dh) are the rows'
+    cached KV, ``k_self``/``v_self`` (B, S, Hkv, Dh) the candidates'
+    own KV (causal within the window).
+
+    This is :func:`prefill_attention` generalized down to tiny S — the
+    same ``flash_attention_hist_bhsd`` kernel, whose KV tile size
+    follows the history extent rather than S — and ``S = 1``
+    degenerates to the split-KV decode kernel's semantics (one softmax
+    over history + the single always-visible self slot)."""
+    return prefill_attention(q, k_hist, v_hist, hist_len, k_self, v_self)
+
+
 @jax.jit
 def paged_decode_attention(q, k_pool, v_pool, block_tables, cache_len):
     """q (B,1,Hq,Dh); pools (NB,bs,Hkv,Dh); block_tables (B,W) int32.

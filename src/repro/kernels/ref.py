@@ -45,6 +45,34 @@ def decode_attention_ref(q, k_cache, v_cache, cache_len):
     return out.reshape(b, 1, hq, dh).astype(q.dtype)
 
 
+def verify_attention_ref(q, k_hist, v_hist, hist_len, k_self, v_self):
+    """Speculative multi-token verify oracle: q (B,S,Hq,Dh) — each
+    row's gamma+1 candidate tokens at absolute positions
+    ``hist_len[b] + 0..S-1`` — attends the row's cached history
+    (B,C,Hkv,Dh) masked to ``hist_len`` (scalar or per-row (B,)) plus
+    the causal prefix of its own window (B,S,Hkv,Dh). One softmax over
+    history + self; GQA grouped. fp32 math, q.dtype out."""
+    b, s, hq, dh = q.shape
+    c, hkv = k_hist.shape[1], k_hist.shape[2]
+    g = hq // hkv
+    k = jnp.concatenate([k_hist, k_self.astype(k_hist.dtype)], axis=1)
+    v = jnp.concatenate([v_hist, v_self.astype(v_hist.dtype)], axis=1)
+    qg = q.reshape(b, s, hkv, g, dh)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                        preferred_element_type=jnp.float32) / math.sqrt(dh)
+    clen = jnp.asarray(hist_len, jnp.int32).reshape(-1, 1, 1)   # (B|1,1,1)
+    hist_ok = jnp.broadcast_to(
+        jnp.arange(c)[None, None, :] < clen, (b, s, c))
+    rel = jnp.arange(s)
+    self_ok = jnp.broadcast_to(rel[None, :] <= rel[:, None], (b, s, s))
+    ok = jnp.concatenate([hist_ok, self_ok], axis=-1)           # (b,s,c+s)
+    scores = jnp.where(ok[:, None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, s, hq, dh).astype(q.dtype)
+
+
 def quant_gemv_ref(x, w_packed, scales, *, group: int = 128):
     """W4A16 GEMV. x (B,K) bf16; w_packed (K//2, N) uint8 (two 4-bit
     rows per byte: row 2k in low nibble, row 2k+1 in high); scales

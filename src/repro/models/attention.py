@@ -196,6 +196,14 @@ def prefill_over_cache(q, k_hist, v_hist, hist_len, k_self, v_self, *,
     contract). One softmax spans history + self, so the math matches a
     monolithic prefill up to summation order.
 
+    This op is also the **speculative-verify** attention
+    (:func:`~repro.models.model.verify_tokens`): with a per-row (B,)
+    ``hist_len``, each row's S queries are its ``gamma + 1`` candidate
+    tokens sitting at that row's own absolute offset — the whole ragged
+    batch of (slot, gamma+1) candidate positions verifies in one call,
+    and ``S = 1`` degenerates to single-token decode attention (same
+    masks, softmax over history + the one always-visible self slot).
+
     ``impl="pallas"`` dispatches to the split-KV Pallas entry point
     (kernels/ops.py), which streams the history blocks like the decode
     kernel instead of concatenating.

@@ -751,6 +751,26 @@ def _write_token_kv(cache_arr, kv, slot, live=None):
     return cache_arr.at[:, jnp.arange(b), slot].set(kv[:, :, 0], mode="drop")
 
 
+def _write_tokens_kv(cache_arr, kv, pos, live=None):
+    """Multi-token generalization of :func:`_write_token_kv` for the
+    speculative-verify dispatch: scatter ``kv`` (L|G, B, S, H, Dh) — the
+    KV of S candidate tokens per row — into ``cache_arr``
+    (L|G, B, C, H, Dh) at per-row positions ``pos[b] .. pos[b]+S-1``.
+    Rows where ``live`` is False, and positions past the capacity,
+    drop the write (rejected-candidate KV past the accepted prefix is
+    garbage the per-row length vector masks, exactly like bucketed-
+    prefill pad KV)."""
+    kv = kv.astype(cache_arr.dtype)
+    b, c = cache_arr.shape[1], cache_arr.shape[2]
+    s = kv.shape[2]
+    pos2 = (jnp.asarray(pos, jnp.int32).reshape(-1, 1)
+            + jnp.arange(s)[None, :])                       # (B, S)
+    if live is not None:
+        pos2 = jnp.where(live.reshape(-1, 1), pos2, c)  # dropped below
+    return cache_arr.at[:, jnp.arange(b)[:, None], pos2].set(
+        kv, mode="drop")
+
+
 def _write_token_kv_paged(pool, kv, block_tab, pos, live=None):
     """Paged analogue of :func:`_write_token_kv`: scatter one decoded
     token's KV ``kv`` (L, B, 1, H, Dh) into the shared block pool
@@ -766,6 +786,28 @@ def _write_token_kv_paged(pool, kv, block_tab, pos, live=None):
     if live is not None:
         blk = jnp.where(live, blk, nb)  # out-of-range rows are dropped
     return pool.at[:, blk, pos % bs].set(kv[:, :, 0], mode="drop")
+
+
+def _write_tokens_kv_paged(pool, kv, block_tab, pos, live=None):
+    """Paged analogue of :func:`_write_tokens_kv`: scatter S candidate
+    tokens' KV ``kv`` (L, B, S, H, Dh) into the shared block pool
+    (L, NB, bs, H, Dh) at each row's ``pos[b] + 0..S-1`` via its block
+    table (B, W). Rows that are not live, positions past the table's
+    capacity, and sentinel (never-allocated) table entries all drop the
+    write — a verify window is only backed by real blocks up to the
+    row's commit cap, everything beyond is rejected-candidate garbage."""
+    kv = kv.astype(pool.dtype)
+    nb, bs = pool.shape[1], pool.shape[2]
+    b, s = kv.shape[1], kv.shape[2]
+    w = block_tab.shape[1]
+    pos2 = (jnp.asarray(pos, jnp.int32).reshape(-1, 1)
+            + jnp.arange(s)[None, :])                       # (B, S)
+    w_idx = jnp.minimum(pos2 // bs, w - 1)
+    blk = jnp.take_along_axis(block_tab, w_idx, axis=1)     # (B, S)
+    blk = jnp.where(pos2 >= w * bs, nb, blk)  # past capacity: drop
+    if live is not None:
+        blk = jnp.where(live.reshape(-1, 1), blk, nb)
+    return pool.at[:, blk, pos2 % bs].set(kv, mode="drop")
 
 
 def _merge_rows(new, old, live, axis):
@@ -916,6 +958,126 @@ def decode_step(params, cfg, tokens, cache, *, live=None):
     x = L.apply_norm(params["final_norm"], cfg, x)
     head = params["embed"]["table"] if cfg.tie_embeddings else params["head"]
     return hints.logits(L.logits_from_hidden(head, x))[:, 0], cache
+
+
+# ---------------------------------------------------------------------------
+# speculative verify step
+# ---------------------------------------------------------------------------
+
+def verify_tokens(params, cfg, tokens, cache, *, live=None,
+                  attn_impl="chunked"):
+    """Verify ``S = gamma + 1`` candidate tokens per row in one dispatch
+    (speculative decoding, LP-Spec direction).
+
+    ``tokens`` (B, S) int32 is, per row, the pending token followed by
+    the draft's ``gamma`` proposals; ``cache['len']`` is the per-row
+    (B,) valid-history length (each serving slot verifies at its own
+    absolute position — the fully-ragged batch). Every candidate
+    attends the cached history (masked to the row's length) plus the
+    causal prefix of the candidate window itself — the multi-token
+    generalization of :func:`prefill_chunk`'s prefill-over-cache
+    attention, evaluated at per-row offsets. Returns (logits (B, S, V)
+    fp32 — position *i* holds the target's next-token distribution
+    after consuming candidate *i* — and the new cache).
+
+    All S candidate KVs are written at ``len .. len + S - 1`` (per-row,
+    live-masked, positions past capacity dropped); rejection is cheap
+    because rejected-position KV is exactly the garbage the per-row
+    length vector already masks — the host simply keeps the row's
+    length at the accepted prefix and the next dispatch overwrites.
+    Paged caches additionally drop writes to never-allocated sentinel
+    blocks, so the cache manager can bound allocation to each row's
+    commit cap and free over-allocated blocks on rejection.
+
+    ``gamma = 0`` (S = 1) degenerates to a single-token decode step —
+    same masks, same write — verified against :func:`decode_step` in
+    the test harness. Attention families only (no rolling SWA):
+    recurrent state cannot roll back by masking."""
+    if cfg.family not in TRANSFORMER_FAMILIES:
+        raise ValueError(f"speculative verify unsupported for family "
+                         f"{cfg.family!r}")
+    if cfg.sliding_window is not None:
+        raise ValueError("speculative verify does not support rolling "
+                         "SWA caches (rollback cannot un-roll a window)")
+    x = L.embed_tokens(params["embed"], tokens)             # (B, S, d)
+    s = x.shape[1]
+    n = jnp.asarray(cache["len"], jnp.int32).reshape(-1)    # (B,)
+    positions = n[:, None] + jnp.arange(s)                  # (B, S)
+    btab = cache.get("block_tab")
+
+    def hist_view(kc, vc):
+        if btab is None:
+            return kc, vc
+        from repro.models.attention import gather_kv_blocks
+        return gather_kv_blocks(kc, btab), gather_kv_blocks(vc, btab)
+
+    n_first = len(params.get("first_layers", []))
+    k_news, v_news = [], []
+    for i, lp in enumerate(params.get("first_layers", [])):
+        kh, vh = hist_view(cache["k"][i], cache["v"][i])
+        x, (k1, v1) = decoder_block_chunk(lp, cfg, x, kh, vh, n,
+                                          positions=positions,
+                                          attn_impl=attn_impl)
+        k_news.append(k1)
+        v_news.append(v1)
+
+    def body(h, xs):
+        lp, kc, vc = xs
+        kh, vh = hist_view(kc, vc)
+        h, (k1, v1) = decoder_block_chunk(lp, cfg, h, kh, vh, n,
+                                          positions=positions,
+                                          attn_impl=attn_impl)
+        return h, (k1, v1)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (params["layers"], cache["k"][n_first:],
+                  cache["v"][n_first:]))
+    if k_news:
+        ks = jnp.concatenate([jnp.stack(k_news), ks], axis=0)
+        vs = jnp.concatenate([jnp.stack(v_news), vs], axis=0)
+    if btab is None:
+        cache["k"] = _write_tokens_kv(cache["k"], ks, n, live)
+        cache["v"] = _write_tokens_kv(cache["v"], vs, n, live)
+    else:
+        cache["k"] = _write_tokens_kv_paged(cache["k"], ks, btab, n, live)
+        cache["v"] = _write_tokens_kv_paged(cache["v"], vs, btab, n, live)
+    cache["len"] = n + (s if live is None else s * live.astype(jnp.int32))
+    x = L.apply_norm(params["final_norm"], cfg, x)
+    head = params["embed"]["table"] if cfg.tie_embeddings else params["head"]
+    return hints.logits(L.logits_from_hidden(head, x)), cache
+
+
+def self_draft_params(params, cfg, n_draft_layers: int):
+    """Self-draft fallback for speculative decoding: a draft model that
+    reuses the target's embeddings, head, and **first k layers** — no
+    second checkpoint needed, and the draft's early-exit hidden state is
+    a decent proposal distribution for free (Medusa/early-exit
+    folklore; LP-Spec's small-drafter direction). Returns
+    ``(draft_params, draft_cfg)`` where every leaf aliases the target's
+    arrays (no copy — the stacked layer leaves are sliced views).
+
+    ``k`` is clamped to ``[1, n_layers]``; with ``k == n_layers`` the
+    draft *is* the target (acceptance -> 100%, the high-acceptance
+    workload the CI gate measures)."""
+    if cfg.family not in TRANSFORMER_FAMILIES:
+        raise ValueError(f"self-draft unsupported for family "
+                         f"{cfg.family!r}")
+    k = int(max(1, min(n_draft_layers, cfg.n_layers)))
+    dp = {"embed": params["embed"], "final_norm": params["final_norm"]}
+    if "head" in params:
+        dp["head"] = params["head"]
+    first = params.get("first_layers", [])
+    n_first = len(first)
+    if n_first:
+        dp["first_layers"] = first[:min(k, n_first)]
+    n_stack = max(0, k - n_first)
+    dp["layers"] = jax.tree_util.tree_map(lambda x: x[:n_stack],
+                                          params["layers"])
+    dcfg = cfg.replace(
+        n_layers=k,
+        first_dense_layers=min(cfg.first_dense_layers, k)
+        if cfg.is_moe else cfg.first_dense_layers)
+    return dp, dcfg
 
 
 # ---------------------------------------------------------------------------

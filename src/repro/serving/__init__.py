@@ -8,6 +8,7 @@ from repro.serving.scheduler import (  # noqa: F401
     ChunkedScheduler,
     PrefillState,
     Scheduler,
+    SpeculativeScheduler,
     make_scheduler,
 )
 from repro.serving.kv_cache import (  # noqa: F401

@@ -62,6 +62,31 @@ across schedulers; only the *schedule* (TTFT, inter-token latency)
 changes. ``Request.ttft_s`` is always measured to the first *sampled*
 token — under chunking that is the end of the prompt's final chunk,
 and ``Request.prefill_chunks`` counts the chunks it took to get there.
+
+``"speculative"`` (LP-Spec direction) replaces the one-token decode
+with a draft/verify loop: a small draft model — an
+``EngineConfig.draft`` registry pair sharing the target's vocabulary,
+or the ``"self"`` fallback reusing the target's first
+``spec_draft_layers`` layers — proposes ``spec_gamma`` tokens per live
+slot from its own contiguous shadow cache, and the target verifies the
+whole ragged batch of ``(slot, gamma+1)`` candidate windows in **one**
+jitted dispatch (``model.verify_tokens``, the multi-token
+generalization of the chunked prefill-over-cache attention). The
+longest accepted prefix plus one bonus token commit per row, capped by
+budget/EOS/capacity in stream order; rejection is rollback by
+bookkeeping — host-side lengths stay at the accepted prefix, the next
+dispatch overwrites, and paged backends free over-allocated blocks
+(``KVCacheManager.commit_n``). Decode is memory-bound (the paper's
+mobile argument, §1.2): each verify streams the target's weights once
+for up to ``gamma+1`` tokens, so accepted tokens per weight pass — and
+energy per token — improve with the acceptance rate. Greedy outputs
+remain bitwise identical to vanilla greedy decode (acceptance compares
+against the target argmax, so the committed stream *is* the vanilla
+stream; exact in float32 — under bf16, ulp noise between the verify
+and decode attention summation orders can flip a near-tie argmax);
+``Request.spec_accepted`` records per-round commit counts and
+``summary()`` reports draft dispatches separately — the
+one-target-dispatch-per-step invariant is unchanged.
 """
 from __future__ import annotations
 
@@ -75,7 +100,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import model as MD
-from repro.serving.kv_cache import contiguous_kv_bytes, make_kv_cache
+from repro.serving.kv_cache import (ContiguousCache, contiguous_kv_bytes,
+                                    make_kv_cache)
 from repro.serving.scheduler import PrefillState, make_scheduler
 
 
@@ -97,10 +123,18 @@ class EngineConfig:
     kv_block_size: int = 16       # paged: positions per KV block
     kv_blocks: int = 0            # paged: pool size; 0 -> auto
                                   # (max_batch * max_seq_len / block_size)
-    scheduler: str = "blocking"   # "blocking" | "chunked" (see
-                                  # serving/scheduler.py)
+    scheduler: str = "blocking"   # "blocking" | "chunked" |
+                                  # "speculative" (serving/scheduler.py)
     chunk_tokens: int = 64        # chunked: prompt tokens per prefill
                                   # chunk (one chunk dispatch per step)
+    spec_gamma: int = 4           # speculative: draft tokens proposed
+                                  # per verify step
+    draft: str = "self"           # speculative draft: "self" (reuse the
+                                  # target's first k layers) or a
+                                  # registry arch id sharing the vocab
+    spec_draft_layers: int = 0    # self-draft depth; 0 -> n_layers // 2
+                                  # (>= 1); == n_layers makes the draft
+                                  # the target (acceptance -> 100%)
 
     def __post_init__(self):
         """Reject nonsensical configs with clear errors instead of
@@ -113,9 +147,21 @@ class EngineConfig:
             raise ValueError(
                 f"max_seq_len={self.max_seq_len} must be >= 2 (one "
                 "prompt position plus one decode position)")
-        if self.scheduler not in ("blocking", "chunked"):
+        if self.scheduler not in ("blocking", "chunked", "speculative"):
             raise ValueError(f"unknown scheduler {self.scheduler!r} "
-                             "(expected 'blocking' or 'chunked')")
+                             "(expected 'blocking', 'chunked' or "
+                             "'speculative')")
+        if self.scheduler == "speculative":
+            if self.spec_gamma < 1:
+                raise ValueError(
+                    f"spec_gamma={self.spec_gamma} must be >= 1 (at "
+                    "least one draft token per verify step)")
+            if self.sample != "greedy":
+                raise ValueError(
+                    "speculative decoding requires sample='greedy': "
+                    "longest-accepted-prefix verification is exact only "
+                    "against the target argmax (stochastic acceptance "
+                    "would need rejection sampling)")
         if self.scheduler == "chunked":
             if self.chunk_tokens < 1:
                 raise ValueError(
@@ -142,6 +188,10 @@ class Request:
     t_done: float = 0.0
     truncated_from: int | None = None  # original prompt length, if clipped
     prefill_chunks: int = 0            # prefill dispatches this request took
+    spec_accepted: list = field(default_factory=list)
+    # per-verify-round committed token counts (accepted prefix + bonus,
+    # capped by budget/EOS/capacity) — sums to the request's
+    # decode-phase tokens, len(output) - 1
 
     @property
     def ttft_s(self) -> float:
@@ -162,7 +212,8 @@ class Request:
 
 
 class ServingEngine:
-    def __init__(self, params, cfg, ecfg: EngineConfig):
+    def __init__(self, params, cfg, ecfg: EngineConfig, *,
+                 draft_params=None, draft_cfg=None):
         self.params = params
         self.cfg = cfg
         self.ecfg = ecfg
@@ -175,6 +226,7 @@ class ServingEngine:
         self.slot_tok = np.zeros((B, 1), np.int32)
         self.slot_rid = np.zeros(B, np.int32)     # sampling stream ids
         self.slot_seed = np.zeros(B, np.int32)
+        self.slot_nprompt = np.zeros(B, np.int32)  # prompt len at bind
         self.waiting: deque[Request] = deque()
         self.finished: list[Request] = []
         self._next_rid = 0
@@ -182,10 +234,18 @@ class ServingEngine:
         self.scheduler = make_scheduler(cfg, ecfg)
         self.prefilling: dict[int, PrefillState] = {}  # slot -> progress
         # dispatch accounting (the tentpole invariant: 1 per step)
-        self.decode_dispatches = 0   # jitted decode calls issued
+        self.decode_dispatches = 0   # jitted target decode/verify calls
         self.decode_steps = 0        # engine steps that decoded anything
         self.prefills = 0            # whole-prompt (blocking) prefills
         self.prefill_chunk_dispatches = 0
+        # speculative accounting (draft dispatches reported separately —
+        # the target-model invariant above stays one dispatch per step)
+        self.draft_dispatches = 0    # draft prefill + decode dispatches
+        self.verify_dispatches = 0   # multi-token target verify calls
+        self.spec_row_steps = 0      # (live row, verify step) events
+        self.spec_drafted = 0        # candidate tokens actually proposed
+        self.spec_committed = 0      # tokens committed by verify steps
+        self.spec_draft_accepted = 0  # committed tokens drafted (not bonus)
         # bucketed prefill only where right-padding is harmless: causal
         # attention masks pad KV per-row; recurrent state (ssm/hybrid)
         # would advance through pads, rolling SWA would roll them in.
@@ -229,13 +289,86 @@ class ServingEngine:
             return MD.prefill_chunk(params, cfg, batch, kh, vh, hist_len,
                                     logit_index=logit_idx)
 
+        def _verify_ragged(params, toks, cache, pos, live):
+            """One multi-token verify dispatch: every live slot's
+            gamma+1 candidate window is checked at its own absolute
+            position; candidate KVs land live-masked at per-row
+            offsets, rejected positions stay masked by the host-side
+            length vector (rollback by bookkeeping, not by rewrite)."""
+            logits, new = MD.verify_tokens(params, cfg, toks,
+                                           dict(cache, len=pos), live=live)
+            new["len"] = cache["len"]  # positions tracked host-side
+            return logits, new
+
         self._prefill_one = jax.jit(_prefill_one)  # one compile per bucket
         self._decode_ragged = jax.jit(_decode_ragged)  # one compile total
+        self._verify_ragged = jax.jit(_verify_ragged)  # one compile total
         # chunked prefill: slot/hist_len/logit_idx traced -> one compile
         # per chunk shape (two for vlm: first chunk carries the images)
         self._chunk_fns = {"contiguous": jax.jit(_chunk_contig),
                            "paged": jax.jit(_chunk_paged)}
         self._sample = jax.jit(self._make_sampler())
+        # speculative draft: a second, smaller model with its own
+        # (always-contiguous) KV cache that shadows the committed
+        # sequence. Built only when the policy actually resolved to
+        # speculative (unsupported families fall back to blocking and
+        # never pay for a draft).
+        self.draft_params = self.draft_cfg = self.draft_kv = None
+        self.draft_pos = np.zeros(B, np.int32)  # draft-valid KV per slot
+        if self.scheduler.name == "speculative":
+            self._init_draft(draft_params, draft_cfg)
+
+    def _init_draft(self, draft_params, draft_cfg):
+        """Resolve the draft pair: explicit params, a registry arch id
+        (smoke-scale, sharing the target's vocab/family), or the
+        self-draft fallback reusing the target's first k layers."""
+        cfg, ecfg = self.cfg, self.ecfg
+        if draft_params is not None:
+            dcfg = draft_cfg or cfg
+        elif ecfg.draft == "self":
+            k = ecfg.spec_draft_layers or max(1, cfg.n_layers // 2)
+            draft_params, dcfg = MD.self_draft_params(self.params, cfg, k)
+        else:
+            from repro.configs import registry
+            dcfg = registry.get_smoke_config(ecfg.draft).replace(
+                dtype=cfg.dtype)
+            draft_params = MD.init_params(
+                jax.random.PRNGKey(ecfg.seed), dcfg)
+        if dcfg.vocab_size != cfg.vocab_size:
+            raise ValueError(
+                f"draft vocab {dcfg.vocab_size} != target vocab "
+                f"{cfg.vocab_size}: speculative acceptance compares "
+                "token ids, the models must share a tokenizer")
+        if dcfg.family != cfg.family:
+            raise ValueError(
+                f"draft family {dcfg.family!r} != target family "
+                f"{cfg.family!r}: prompt prefixes (e.g. vlm image "
+                "tokens) must occupy the same positions in both caches")
+        if cfg.family == "vlm" and (
+                dcfg.n_image_tokens != cfg.n_image_tokens
+                or dcfg.d_model != cfg.d_model):
+            raise ValueError(
+                f"vlm draft prefix mismatch (n_image_tokens "
+                f"{dcfg.n_image_tokens} vs {cfg.n_image_tokens}, "
+                f"d_model {dcfg.d_model} vs {cfg.d_model}): the image "
+                "prefix must occupy identical positions — and the "
+                "shared stub image batch identical feature width — in "
+                "both caches")
+        self.draft_params, self.draft_cfg = draft_params, dcfg
+        self.draft_kv = ContiguousCache(dcfg, ecfg)
+        C = ecfg.max_seq_len
+
+        def _draft_prefill(params, batch, last_idx):
+            return MD.prefill(params, dcfg, batch, C, logit_index=last_idx)
+
+        def _draft_decode(params, toks, cache, pos, live):
+            logits, new = MD.decode_step(params, dcfg, toks,
+                                         dict(cache, len=pos), live=live)
+            new["len"] = cache["len"]
+            return logits, new
+
+        self._draft_prefill = jax.jit(_draft_prefill)  # per bucket
+        self._draft_decode = jax.jit(_draft_decode)    # one compile total
 
     def _make_sampler(self):
         """Sampling head over returned logits — outside the model jits,
@@ -295,23 +428,162 @@ class ServingEngine:
         live = np.array([r is not None and i not in self.prefilling
                          for i, r in enumerate(self.slot_req)])
         if live.any():
-            cache = self.kv.decode_view(self.slot_pos, live)
-            logits, new_cache = self._decode_ragged(
-                self.params, jnp.asarray(self.slot_tok), cache,
-                jnp.asarray(self.slot_pos), jnp.asarray(live))
-            self.kv.commit(new_cache)
-            self.decode_dispatches += 1
-            self.decode_steps += 1
-            new = np.asarray(self._sample(
-                logits, jnp.asarray(self.slot_seed),
-                jnp.asarray(self.slot_rid), jnp.asarray(self.slot_pos)))
-            for i in np.nonzero(live)[0]:
-                req = self.slot_req[i]
-                req.output.append(int(new[i]))
-                self.slot_tok[i, 0] = int(new[i])
-                self.slot_len[i] += 1
-                self.slot_pos[i] += 1
+            if self.draft_kv is not None:
+                self._spec_step(live)
+            else:
+                self._decode_step(live)
         self.scheduler.retire(self)
+
+    def _decode_step(self, live):
+        """The vanilla one-token-per-slot ragged decode dispatch."""
+        cache = self.kv.decode_view(self.slot_pos, live)
+        logits, new_cache = self._decode_ragged(
+            self.params, jnp.asarray(self.slot_tok), cache,
+            jnp.asarray(self.slot_pos), jnp.asarray(live))
+        self.kv.commit(new_cache)
+        self.decode_dispatches += 1
+        self.decode_steps += 1
+        new = np.asarray(self._sample(
+            logits, jnp.asarray(self.slot_seed),
+            jnp.asarray(self.slot_rid), jnp.asarray(self.slot_pos)))
+        for i in np.nonzero(live)[0]:
+            req = self.slot_req[i]
+            req.output.append(int(new[i]))
+            self.slot_tok[i, 0] = int(new[i])
+            self.slot_len[i] += 1
+            self.slot_pos[i] += 1
+
+    def _spec_step(self, live):
+        """One speculative verify step: gamma draft proposals per live
+        slot (small-model dispatches), then **one** target dispatch
+        verifying every slot's gamma+1 candidate window at its own
+        position, then host-side longest-accepted-prefix commit with
+        rollback (cache lengths stay at the accepted prefix; paged
+        backends free over-allocated blocks).
+
+        Greedy equivalence: candidate i commits iff it equals the
+        target's argmax after candidate i-1 — exactly the token vanilla
+        greedy decode would have produced — and the first mismatch is
+        replaced by that argmax (the bonus token), so the committed
+        stream is the vanilla stream regardless of what the draft
+        proposed. Budget/EOS/capacity caps are applied to the committed
+        prefix in stream order, preserving retirement semantics."""
+        B, C = self.ecfg.max_batch, self.ecfg.max_seq_len
+        g = self.ecfg.spec_gamma
+        # per-row commit cap: budget / capacity bound what the verify
+        # could possibly commit, so candidate KV past it never needs a
+        # backing block (paged) and candidates past it never need
+        # drafting at all
+        n_write = np.minimum(
+            g + 1, np.maximum(
+                1, np.minimum(
+                    np.array([self._budget(r) if r is not None else 1
+                              for r in self.slot_req]) - self.slot_len,
+                    (C - 1) - self.slot_pos)))
+        # candidates past the batch-wide commit cap can never commit
+        # anywhere — don't draft them, and don't feed padding into the
+        # verify either: the window is dispatched at width chain + 1
+        # (one compile per distinct width, at most gamma + 1 of them).
+        # Padding tokens would be worse than wasted — MoE routing is
+        # capacity-based *across* the flattened window, so a column of
+        # identical pad tokens concentrates expert load and can evict
+        # real tokens from other rows (observed as a greedy divergence
+        # on the moe family before this was shape- instead of
+        # sentinel-based).
+        chain = min(g, int(n_write[live].max()) - 1)
+        cand = np.zeros((B, chain), np.int32)
+        if chain > 0:
+            # -- draft catch-up: a fully-accepted round leaves the
+            # draft one committed token behind (the last draft token's
+            # KV was never its own input); feed it through before
+            # proposing. (chain == 0 rounds retire every live row, so
+            # their stale draft state is released by retirement.)
+            catch = live & (self.draft_pos < self.slot_pos)
+            if catch.any():
+                toks = np.zeros((B, 1), np.int32)
+                for i in np.nonzero(catch)[0]:
+                    req = self.slot_req[i]
+                    toks[i, 0] = req.output[
+                        int(self.draft_pos[i]) - int(self.slot_nprompt[i])]
+                self._draft_dispatch(toks, catch)
+                # NOTE: rebind, never `+=` in place — the dispatch
+                # above is still in flight (its logits are discarded,
+                # so nothing forces it) and on CPU ``jnp.asarray`` may
+                # alias the host buffer zero-copy; an in-place bump
+                # would race the asynchronous read and corrupt the
+                # draft cache nondeterministically.
+                self.draft_pos = self.draft_pos + catch
+            # -- chained draft proposals over all live slots (ragged)
+            cur = self.slot_tok.copy()
+            for t in range(chain):
+                logits = self._draft_dispatch(cur, live)
+                nxt = np.asarray(self._sample(
+                    logits, jnp.asarray(self.slot_seed),
+                    jnp.asarray(self.slot_rid),
+                    jnp.asarray(self.draft_pos)))
+                cand[:, t] = nxt
+                cur = nxt[:, None].astype(np.int32)
+                self.draft_pos = self.draft_pos + live  # rebind (above)
+            self.spec_drafted += chain * int(live.sum())
+        self._spec_verify_commit(live, cand, n_write, chain)
+
+    def _spec_verify_commit(self, live, cand, n_write, chain):
+        """The verify half of a speculative step: one target dispatch
+        over every live row's (pending token + ``chain`` candidates)
+        window, then host-side longest-accepted-prefix commit and
+        rollback. ``chain == 0`` (budget/capacity tail) degenerates to
+        a width-1 verify of the pending token alone."""
+        # -- one target dispatch verifies the whole ragged batch
+        toks = np.concatenate([self.slot_tok, cand], axis=1)  # (B, chain+1)
+        cache = self.kv.verify_view(self.slot_pos, live,
+                                    np.minimum(n_write, chain + 1))
+        logits, new_cache = self._verify_ragged(
+            self.params, jnp.asarray(toks), cache,
+            jnp.asarray(self.slot_pos), jnp.asarray(live))
+        self.kv.commit(new_cache)
+        self.decode_dispatches += 1
+        self.decode_steps += 1
+        self.verify_dispatches += 1
+        self.spec_row_steps += int(live.sum())
+        greedy = np.asarray(self._sample(
+            logits, jnp.asarray(self.slot_seed),
+            jnp.asarray(self.slot_rid), jnp.asarray(self.slot_pos)))
+        # -- host acceptance + commit/rollback
+        for i in np.nonzero(live)[0]:
+            req = self.slot_req[i]
+            a = 0
+            while a < chain and cand[i, a] == greedy[i, a]:
+                a += 1
+            stream = list(cand[i, :a]) + [int(greedy[i, a])]
+            committed = []
+            for tok in stream[:int(n_write[i])]:
+                committed.append(int(tok))
+                if tok == self.ecfg.eos_token:
+                    break  # vanilla stops after emitting EOS
+            n = len(committed)
+            req.output.extend(committed)
+            req.spec_accepted.append(n)
+            self.spec_committed += n
+            self.spec_draft_accepted += min(n, a)
+            p = int(self.slot_pos[i])
+            self.slot_pos[i] = p + n
+            self.slot_len[i] += n
+            self.slot_tok[i, 0] = committed[-1]
+            # target KV valid through the accepted prefix; the draft is
+            # valid through the committed tokens it consumed as inputs
+            # (it consumed ``chain`` of them this round)
+            self.kv.commit_n(i, p + n)
+            self.draft_pos[i] = p + min(chain, n)
+
+    def _draft_dispatch(self, toks, live):
+        """One ragged draft-model decode dispatch (chain/catch-up)."""
+        cache = self.draft_kv.decode_view(self.draft_pos, live)
+        logits, new_cache = self._draft_decode(
+            self.draft_params, jnp.asarray(toks), cache,
+            jnp.asarray(self.draft_pos), jnp.asarray(live))
+        self.draft_kv.commit(new_cache)
+        self.draft_dispatches += 1
+        return logits
 
     # -- internals ---------------------------------------------------------
     def _budget(self, req: Request) -> int:
@@ -406,6 +678,16 @@ class ServingEngine:
             self.finished.append(req)
             return True
         self.kv.splice(rows, slot, n_prompt, budget)
+        if self.draft_kv is not None:
+            # speculative: the draft shadows the committed sequence —
+            # prefill its cache over the same (bucketed) batch so the
+            # chain can propose from position n_prompt immediately
+            _, drows = self._draft_prefill(
+                self.draft_params, batch,
+                jnp.asarray(n_prompt - 1, jnp.int32))
+            self.draft_kv.splice(drows, slot, n_prompt, budget)
+            self.draft_dispatches += 1
+            self.draft_pos[slot] = n_prompt
         self._bind_decode(slot, req, seed, tok, n_prompt)
         return True
 
@@ -501,6 +783,7 @@ class ServingEngine:
         self.slot_tok[slot, 0] = tok
         self.slot_rid[slot] = req.rid
         self.slot_seed[slot] = seed
+        self.slot_nprompt[slot] = n_prompt
 
     def _retire_slot(self, i: int):
         """Release slot ``i`` (scheduler-decided retirement)."""
@@ -510,6 +793,9 @@ class ServingEngine:
         self.slot_req[i] = None
         self.slot_len[i] = 0
         self.kv.free(i)
+        if self.draft_kv is not None:
+            self.draft_kv.free(i)
+            self.draft_pos[i] = 0
 
     # -- metrics ---------------------------------------------------------------
     def summary(self) -> dict:
@@ -540,12 +826,38 @@ class ServingEngine:
             "decode_steps": self.decode_steps,
             "dispatches_per_step": (self.decode_dispatches
                                     / max(1, self.decode_steps)),
+            # speculative accounting: verify counts above as the one
+            # target dispatch per step; the draft's dispatches (prefill
+            # + gamma chain steps + catch-ups) are reported separately
+            "draft_dispatches": self.draft_dispatches,
+            "verify_dispatches": self.verify_dispatches,
+            "spec_gamma": (self.ecfg.spec_gamma
+                           if self.draft_kv is not None else 0),
+            # per (live slot, verify step): vanilla decode is exactly
+            # 1.0 (reported as such for non-speculative engines),
+            # perfect acceptance is gamma + 1 — the tokens-per-
+            # weight-pass win the CI gate thresholds at > 1.0
+            "accepted_tokens_per_step": (
+                self.spec_committed / max(1, self.spec_row_steps)
+                if self.draft_kv is not None else 1.0),
+            # fraction of tokens the draft actually proposed that were
+            # committed (skip rounds propose nothing and do not count)
+            "acceptance_rate": (
+                self.spec_draft_accepted / max(1, self.spec_drafted)
+                if self.draft_kv is not None else 0.0),
             "prefills": self.prefills,
             "truncated": sum(r.truncated_from is not None for r in done),
             "kv_cache": self.kv.name,
             # peak bytes the cache backend actually held vs. what a
-            # dense max_batch x max_seq_len cache charges regardless
-            "resident_kv_bytes": self.kv.peak_resident_kv_bytes,
+            # dense max_batch x max_seq_len cache charges regardless;
+            # a speculative engine also holds the draft's contiguous
+            # shadow cache — report it, and charge it to the total
+            "draft_kv_bytes": (self.draft_kv.peak_resident_kv_bytes
+                               if self.draft_kv is not None else 0),
+            "resident_kv_bytes": (
+                self.kv.peak_resident_kv_bytes
+                + (self.draft_kv.peak_resident_kv_bytes
+                   if self.draft_kv is not None else 0)),
             "contiguous_kv_bytes": contiguous_kv_bytes(
                 self.cfg, self.ecfg.max_batch, self.ecfg.max_seq_len),
         }

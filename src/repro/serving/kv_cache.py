@@ -132,6 +132,29 @@ class KVCacheManager(Protocol):
         any block the step is about to write, for paged backends)."""
         ...
 
+    def verify_view(self, pos: np.ndarray, live: np.ndarray,
+                    n_tokens: np.ndarray) -> dict:
+        """Device cache pytree for one speculative **verify** dispatch:
+        like :meth:`decode_view`, but the step is about to write up to
+        ``n_tokens[i]`` candidate KVs at ``pos[i] .. pos[i] +
+        n_tokens[i] - 1`` per live row. Paged backends allocate every
+        block that window touches (paying the reservation down —
+        ``n_tokens`` is the row's *commit cap*, which the admission
+        reservation already covers); writes beyond it land on sentinel
+        table entries and are dropped in the dispatch."""
+        ...
+
+    def commit_n(self, slot: int, n_valid: int) -> None:
+        """Speculative rollback/commit: after host-side acceptance, the
+        slot's cache is valid only to position ``n_valid - 1`` —
+        everything the verify dispatch wrote past it is rejected-
+        candidate garbage. Contiguous backends need no action (the
+        per-row length vector masks it and the next dispatch
+        overwrites); paged backends free every allocated block wholly
+        past the new valid span and re-credit the reservation, so
+        resident bytes return to what the accepted prefix needs."""
+        ...
+
     def commit(self, new_cache: dict) -> None:
         """Store the cache pytree returned by the decode dispatch."""
         ...
@@ -267,6 +290,13 @@ class ContiguousCache:
 
     def decode_view(self, pos, live) -> dict:
         return self._cache
+
+    def verify_view(self, pos, live, n_tokens) -> dict:
+        return self._cache  # every slot already owns full capacity
+
+    def commit_n(self, slot: int, n_valid: int) -> None:
+        pass  # rejected-candidate KV is masked by the per-row length
+        # vector and overwritten in place by the next dispatch
 
     def commit(self, new_cache: dict) -> None:
         self._cache = new_cache
@@ -413,14 +443,48 @@ class PagedCache:
                 "table": jnp.asarray(self.table[slot])}
 
     def decode_view(self, pos, live) -> dict:
+        return self.verify_view(pos, live, np.ones(len(self.table),
+                                                   np.int32))
+
+    def verify_view(self, pos, live, n_tokens) -> dict:
+        """Allocate every block the verify window ``pos[i] .. pos[i] +
+        n_tokens[i] - 1`` touches (``n_tokens`` is the row's commit
+        cap — bounded by its generation budget, which the admission
+        reservation already covers, so these allocations pay the
+        reservation down and can never exhaust the pool). Candidate
+        positions past the cap have no block; the dispatch drops those
+        writes via the sentinel table entry."""
+        bs = self.block_size
         for i in np.nonzero(live)[0]:
-            b = int(pos[i]) // self.block_size
-            if self.table[i, b] == self.num_blocks:
-                self.table[i, b] = self.allocator.alloc()
-                self._reserved[i] = max(0, int(self._reserved[i]) - 1)
+            last = min(int(pos[i]) + max(int(n_tokens[i]), 1) - 1,
+                       self._max_seq_len - 2)
+            for b in range(int(pos[i]) // bs, last // bs + 1):
+                if self.table[i, b] == self.num_blocks:
+                    self.table[i, b] = self.allocator.alloc()
+                    self._reserved[i] = max(0, int(self._reserved[i]) - 1)
         return {"k": self._pool_k, "v": self._pool_v,
                 "block_tab": jnp.asarray(self.table),
                 "len": jnp.zeros((), jnp.int32)}
+
+    def commit_n(self, slot: int, n_valid: int) -> None:
+        """Speculative rollback: the slot's KV is valid only to
+        position ``n_valid - 1``; free every allocated block wholly
+        past it and put the capacity back on the reservation (those
+        positions may still be written later — the worst-case admission
+        bound must keep covering them or a later verify could deadlock
+        the pool)."""
+        keep = max(1, math.ceil(n_valid / self.block_size))
+        for b in range(keep, self.table_width):
+            blk = int(self.table[slot, b])
+            if blk == self.num_blocks:
+                # lazy allocation fills a slot's table as a contiguous
+                # prefix (splice from 0, decode/verify at the write
+                # head, commit_n frees a suffix), so the first sentinel
+                # ends the scan — O(freed) host work, not O(width)
+                break
+            self.allocator.free(blk)
+            self.table[slot, b] = self.num_blocks
+            self._reserved[slot] += 1
 
     def commit(self, new_cache: dict) -> None:
         self._pool_k = new_cache["k"]

@@ -33,9 +33,27 @@ runs this step, and when a slot retires:
   state cannot resume from a KV view, so those families fall back to
   blocking with a warning.
 
+- :class:`SpeculativeScheduler` — LP-Spec-direction speculative
+  decoding: admission is blocking (whole-prompt prefill, for target
+  *and* draft), and every subsequent step replaces the single-token
+  decode with a **verify step**: the draft proposes ``gamma`` tokens
+  per live slot (gamma cheap dispatches of the small model), then the
+  target verifies the whole ragged batch of ``(slot, gamma + 1)``
+  candidate windows in one jitted dispatch — packed exactly like the
+  chunked scheduler packs prefill chunks: one target dispatch per
+  step, covering every live slot at its own position. The longest
+  accepted prefix plus one bonus token commit; rejection rolls the
+  caches back (host-side lengths + paged block frees). Attention
+  families only (dense/moe/vlm, no rolling SWA): recurrent state
+  cannot roll back by masking, those families fall back to blocking
+  with a warning. Greedy only — acceptance compares the draft token
+  against the target's argmax, which is exact for greedy and would
+  bias any other sampling mode.
+
 Both schedulers drive identical prefill/decode math for the tokens they
 produce: greedy outputs are bitwise identical across schedulers (and
-across cache backends), only *when* each token is produced changes.
+across cache backends), only *when* — and, under speculation, *how
+many per step* — each token is produced changes.
 """
 from __future__ import annotations
 
@@ -149,20 +167,37 @@ class ChunkedScheduler(Scheduler):
         return None if best is None else best[1]
 
 
+class SpeculativeScheduler(BlockingScheduler):
+    """Speculative decoding policy: admission *is* blocking admission
+    (inherited; the engine additionally prefills the draft cache at
+    admit), then every step packs (gamma draft proposals) + (one
+    multi-token target verify over all live slots) the way chunked
+    packs prefill chunks — the target still dispatches exactly once
+    per step. Commit/rollback bookkeeping (longest accepted prefix +
+    bonus token, cache length rollback, paged block frees) lives in
+    ``ServingEngine._spec_step``; default retirement applies unchanged
+    because commits respect the same budget/EOS/capacity caps
+    one-token decode does."""
+
+    name = "speculative"
+
+
 def make_scheduler(cfg, ecfg) -> Scheduler:
-    """Build the configured policy; families chunked prefill cannot
-    express (recurrent state, rolling SWA, cross-attention caches)
-    fall back to blocking."""
+    """Build the configured policy; families chunked prefill /
+    speculative verify cannot express (recurrent state, rolling SWA,
+    cross-attention caches) fall back to blocking."""
     kind = getattr(ecfg, "scheduler", "blocking")
     if kind == "blocking":
         return BlockingScheduler()
-    if kind == "chunked":
+    if kind in ("chunked", "speculative"):
         if (cfg.family not in MD.TRANSFORMER_FAMILIES
                 or cfg.sliding_window is not None):
             warnings.warn(
-                f"chunked prefill unsupported for family={cfg.family!r} "
-                f"sliding_window={cfg.sliding_window}; falling back to "
-                "blocking", stacklevel=2)
+                f"{kind} scheduling unsupported for family="
+                f"{cfg.family!r} sliding_window={cfg.sliding_window}; "
+                "falling back to blocking", stacklevel=2)
             return BlockingScheduler()
-        return ChunkedScheduler(ecfg.chunk_tokens)
+        if kind == "chunked":
+            return ChunkedScheduler(ecfg.chunk_tokens)
+        return SpeculativeScheduler()  # gamma lives on EngineConfig
     raise ValueError(f"unknown scheduler {kind!r}")

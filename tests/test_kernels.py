@@ -189,6 +189,85 @@ def test_prefill_attention_per_row_history_lengths():
 
 
 # ---------------------------------------------------------------------------
+# multi-token verify attention (speculative decoding)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,s,c,hq,hkv,dh", [
+    (2, 5, 96, 8, 4, 64),      # gamma=4 verify window, GQA
+    (1, 3, 128, 4, 4, 32),     # MHA
+    (3, 8, 64, 8, 2, 64),      # wider window, deeper GQA
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_verify_attention_matches_ref(b, s, c, hq, hkv, dh, dtype):
+    """The speculative verify kernel (gamma+1 candidate tokens per row,
+    one softmax over cached history + causal window) vs the pure-jnp
+    oracle, scalar history length."""
+    ks = jax.random.split(KEY, 5)
+    q = rand(ks[0], (b, s, hq, dh), dtype)
+    kh = rand(ks[1], (b, c, hkv, dh), dtype)
+    vh = rand(ks[2], (b, c, hkv, dh), dtype)
+    k_self = rand(ks[3], (b, s, hkv, dh), dtype)
+    v_self = rand(ks[4], (b, s, hkv, dh), dtype)
+    got = ops.verify_attention(q, kh, vh, jnp.asarray(40), k_self, v_self)
+    want = ref.verify_attention_ref(q, kh, vh, jnp.asarray(40), k_self,
+                                    v_self)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        **tol_for(dtype))
+
+
+def test_verify_attention_ragged_per_row_history():
+    """Per-row history lengths — every serving slot verifies its
+    gamma+1 window at its own absolute position in one call — match
+    per-row scalar runs, including empty and full histories."""
+    b, s, c, hq, hkv, dh = 4, 4, 64, 4, 2, 32
+    ks = jax.random.split(KEY, 5)
+    q = rand(ks[0], (b, s, hq, dh), jnp.float32)
+    kh = rand(ks[1], (b, c, hkv, dh), jnp.float32)
+    vh = rand(ks[2], (b, c, hkv, dh), jnp.float32)
+    k_self = rand(ks[3], (b, s, hkv, dh), jnp.float32)
+    v_self = rand(ks[4], (b, s, hkv, dh), jnp.float32)
+    lens = jnp.asarray([0, 13, 37, 64], jnp.int32)
+    got = ops.verify_attention(q, kh, vh, lens, k_self, v_self)
+    want = ref.verify_attention_ref(q, kh, vh, lens, k_self, v_self)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+    for i, n in enumerate(np.asarray(lens)):
+        row = ops.verify_attention(
+            q[i:i + 1], kh[i:i + 1], vh[i:i + 1], jnp.asarray(int(n)),
+            k_self[i:i + 1], v_self[i:i + 1])
+        np.testing.assert_allclose(
+            np.asarray(got[i]), np.asarray(row[0]), atol=2e-5, rtol=2e-5)
+
+
+def test_verify_attention_gamma1_degenerates_to_decode_kernel():
+    """A 1-token verify window is a decode step: against a dense cache
+    holding the same self KV at each row's length, the split-KV decode
+    kernel must agree (ragged lengths included)."""
+    b, c, hq, hkv, dh = 3, 64, 8, 4, 64
+    ks = jax.random.split(KEY, 5)
+    q = rand(ks[0], (b, 1, hq, dh), jnp.float32)
+    kh = rand(ks[1], (b, c, hkv, dh), jnp.float32)
+    vh = rand(ks[2], (b, c, hkv, dh), jnp.float32)
+    k_self = rand(ks[3], (b, 1, hkv, dh), jnp.float32)
+    v_self = rand(ks[4], (b, 1, hkv, dh), jnp.float32)
+    lens = np.asarray([5, 22, 63], np.int32)
+    got = ops.verify_attention(q, kh, vh, jnp.asarray(lens), k_self,
+                               v_self)
+    # dense equivalent: self KV spliced at each row's own position
+    kc = np.asarray(kh).copy()
+    vc = np.asarray(vh).copy()
+    for i, n in enumerate(lens):
+        kc[i, n] = np.asarray(k_self)[i, 0]
+        vc[i, n] = np.asarray(v_self)[i, 0]
+    want = ops.decode_attention(jnp.asarray(np.asarray(q)),
+                                jnp.asarray(kc), jnp.asarray(vc),
+                                jnp.asarray(lens + 1), block_s=32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
 # int4 quantized GEMV (W4A16 mobile mode)
 # ---------------------------------------------------------------------------
 

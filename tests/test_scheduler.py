@@ -191,13 +191,15 @@ def test_no_request_starves_random_mixed_workloads():
 
     @given(lens=st.lists(st.integers(1, 40), min_size=1, max_size=6),
            budgets=st.lists(st.integers(0, 4), min_size=1, max_size=6),
-           scheduler=st.sampled_from(["blocking", "chunked"]),
+           scheduler=st.sampled_from(["blocking", "chunked",
+                                      "speculative"]),
            kv_cache=st.sampled_from(["contiguous", "paged"]))
     @settings(max_examples=8, deadline=None)
     def prop(lens, budgets, scheduler, kv_cache):
         eng = ServingEngine(params, cfg, EngineConfig(
             max_batch=2, max_seq_len=64, max_new_tokens=3,
-            scheduler=scheduler, chunk_tokens=16, kv_cache=kv_cache))
+            scheduler=scheduler, chunk_tokens=16, kv_cache=kv_cache,
+            spec_gamma=2, spec_draft_layers=1))
         reqs = [eng.submit(np.arange(n) % cfg.vocab_size,
                            max_new_tokens=budgets[i % len(budgets)])
                 for i, n in enumerate(lens)]
@@ -210,5 +212,51 @@ def test_no_request_starves_random_mixed_workloads():
                 assert r.output == []
             else:             # retired with 1..budget tokens, never more
                 assert 1 <= len(r.output) <= budget
+
+    prop()
+
+
+def test_speculative_streams_match_blocking_property():
+    """Property (the speculative liveness/equivalence contract): random
+    prompt/budget/gamma streams through ``SpeculativeScheduler`` never
+    deadlock (the run drains within the step bound), never starve FIFO
+    order (every request retires), and per-request outputs match
+    ``BlockingScheduler`` token-for-token — on both cache backends, so
+    paged verify-window reservations can never wedge admission."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    cfg = registry.get_smoke_config("qwen1.5-0.5b").replace(dtype="float32")
+    params = MD.init_params(KEY, cfg)
+
+    @given(lens=st.lists(st.integers(1, 40), min_size=1, max_size=5),
+           budgets=st.lists(st.integers(1, 6), min_size=1, max_size=5),
+           gamma=st.integers(1, 4),
+           kv_cache=st.sampled_from(["contiguous", "paged"]))
+    @settings(max_examples=6, deadline=None)
+    def prop(lens, budgets, gamma, kv_cache):
+        def drive(scheduler):
+            eng = ServingEngine(params, cfg, EngineConfig(
+                max_batch=2, max_seq_len=64, max_new_tokens=4,
+                scheduler=scheduler, kv_cache=kv_cache,
+                spec_gamma=gamma, spec_draft_layers=1))
+            reqs = [eng.submit(np.arange(n) % cfg.vocab_size,
+                               max_new_tokens=budgets[i % len(budgets)])
+                    for i, n in enumerate(lens)]
+            eng.run(max_steps=500)
+            # liveness: drained, no deadlock, FIFO never starved
+            assert not eng.waiting
+            assert all(r is None for r in eng.slot_req)
+            assert len(eng.finished) == len(reqs)
+            return eng, {r.rid: r.output for r in eng.finished}
+
+        spec_eng, spec_out = drive("speculative")
+        _, want = drive("blocking")
+        assert spec_out == want
+        # FIFO order of first tokens is preserved under speculation
+        order = sorted(spec_eng.finished, key=lambda r: r.t_first)
+        assert [r.rid for r in order] == sorted(r.rid for r in order)
+        if kv_cache == "paged":
+            assert spec_eng.kv.allocator.allocated_blocks == 0
 
     prop()

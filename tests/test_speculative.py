@@ -1,0 +1,335 @@
+"""Speculative decoding: bitwise greedy equivalence vs vanilla decode,
+acceptance bookkeeping, rollback block accounting, and the verify path.
+
+The backbone invariant: a speculative engine's greedy output must be
+**bitwise identical** to vanilla greedy decode — acceptance compares
+candidates against the target argmax, so the committed stream is the
+vanilla stream no matter what the draft proposes (even a garbage draft
+only costs acceptance rate, never correctness). That forces the verify
+kernel, the rollback path, and the scheduler to agree, which is why the
+matrix below sweeps families x cache backends x draft flavors.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.models import model as MD
+from repro.serving import (BlockingScheduler, EngineConfig, PagedCache,
+                           ServingEngine, SpeculativeScheduler)
+
+KEY = jax.random.PRNGKey(7)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = registry.get_smoke_config("qwen1.5-0.5b").replace(dtype="float32")
+    params = MD.init_params(KEY, cfg)
+    return cfg, params
+
+
+def _drive(params, cfg, prompts, *, scheduler, kv_cache="contiguous",
+           max_batch=3, max_seq_len=64, max_new_tokens=5, **kw):
+    eng = ServingEngine(params, cfg, EngineConfig(
+        max_batch=max_batch, max_seq_len=max_seq_len,
+        max_new_tokens=max_new_tokens, scheduler=scheduler,
+        kv_cache=kv_cache, **kw))
+    for p in prompts:
+        eng.submit(p)
+    eng.run()
+    return eng
+
+
+# ---------------------------------------------------------------------------
+# bitwise equivalence: spec == vanilla, families x backends
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["qwen1.5-0.5b",       # dense
+                                  "deepseek-moe-16b",   # moe (+first dense)
+                                  "internvl2-26b"])     # vlm (image prefix)
+@pytest.mark.parametrize("kv_cache", ["contiguous", "paged"])
+def test_speculative_matches_vanilla_greedy_bitwise(arch, kv_cache):
+    """The tentpole invariant: draft gamma tokens, verify the ragged
+    batch in one target dispatch, commit longest-accepted-prefix +
+    bonus — and the token streams must equal vanilla greedy decode,
+    per family, per cache backend."""
+    cfg = registry.get_smoke_config(arch).replace(dtype="float32")
+    params = MD.init_params(KEY, cfg)
+    rng = np.random.default_rng(0)
+    lens = [5, 16, 21, 40]  # straddles bucket, block, and gamma edges
+    prompts = [rng.integers(0, cfg.vocab_size, size=n) for n in lens]
+
+    want_eng = _drive(params, cfg, prompts, scheduler="blocking",
+                      kv_cache=kv_cache)
+    want = {r.rid: r.output for r in want_eng.finished}
+
+    eng = _drive(params, cfg, prompts, scheduler="speculative",
+                 kv_cache=kv_cache, spec_gamma=3, spec_draft_layers=1)
+    assert isinstance(eng.scheduler, SpeculativeScheduler)
+    got = {r.rid: r.output for r in eng.finished}
+    assert got == want
+    # the target still dispatches exactly once per verify step; the
+    # draft's dispatches are tracked separately
+    assert eng.decode_dispatches == eng.decode_steps
+    assert eng.verify_dispatches == eng.decode_dispatches
+    assert eng.draft_dispatches > 0
+    s = eng.summary()
+    assert s["dispatches_per_step"] == 1.0
+    assert s["accepted_tokens_per_step"] >= 1.0  # bonus token floor
+
+
+def test_garbage_draft_still_bitwise_correct(setup):
+    """A deterministic worst-case draft (all-zero params -> constant
+    proposals): acceptance collapses but outputs must stay vanilla —
+    rejection-path correctness with the rollback exercised every
+    round."""
+    cfg, params = setup
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n) for n in (6, 30)]
+    want = {r.rid: r.output
+            for r in _drive(params, cfg, prompts,
+                            scheduler="blocking").finished}
+    zero_draft = jax.tree_util.tree_map(jnp.zeros_like, params)
+    for kv in ("contiguous", "paged"):
+        eng = ServingEngine(params, cfg, EngineConfig(
+            max_batch=2, max_seq_len=64, max_new_tokens=5,
+            scheduler="speculative", spec_gamma=3, kv_cache=kv),
+            draft_params=zero_draft, draft_cfg=cfg)
+        for p in prompts:
+            eng.submit(p)
+        eng.run()
+        assert {r.rid: r.output for r in eng.finished} == want
+        # every committed token was the bonus (or a lucky constant hit)
+        assert eng.summary()["accepted_tokens_per_step"] <= 2.0
+
+
+# ---------------------------------------------------------------------------
+# acceptance bookkeeping
+# ---------------------------------------------------------------------------
+
+def test_spec_accepted_histogram_sums_to_generated_tokens(setup):
+    """``Request.spec_accepted`` records per-verify-round commit
+    counts; their sum is exactly the request's decode-phase tokens
+    (everything but the prefill-sampled first token)."""
+    cfg, params = setup
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n)
+               for n in (4, 9, 17, 25)]
+    eng = _drive(params, cfg, prompts, scheduler="speculative",
+                 max_new_tokens=7, spec_gamma=2, spec_draft_layers=1)
+    assert len(eng.finished) == len(prompts)
+    for r in eng.finished:
+        assert sum(r.spec_accepted) == len(r.output) - 1
+        assert all(1 <= n <= 3 for n in r.spec_accepted)  # gamma + 1 cap
+    s = eng.summary()
+    assert s["spec_gamma"] == 2
+    decode_tokens = sum(len(r.output) - 1 for r in eng.finished)
+    assert eng.spec_committed == decode_tokens
+
+
+def test_full_depth_self_draft_reaches_full_acceptance(setup):
+    """``spec_draft_layers == n_layers`` makes the draft the target:
+    every candidate matches the target argmax, so each verify commits
+    gamma + 1 tokens (modulo budget tails) and acceptance_rate ~ 1 —
+    the high-acceptance workload the CI gate thresholds."""
+    cfg, params = setup
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n) for n in (8, 14)]
+    eng = _drive(params, cfg, prompts, scheduler="speculative",
+                 max_new_tokens=9, spec_gamma=3,
+                 spec_draft_layers=cfg.n_layers)
+    want = {r.rid: r.output
+            for r in _drive(params, cfg, prompts,
+                            scheduler="blocking",
+                            max_new_tokens=9).finished}
+    assert {r.rid: r.output for r in eng.finished} == want
+    s = eng.summary()
+    assert s["accepted_tokens_per_step"] > 1.0
+    assert s["acceptance_rate"] > 0.9
+
+
+# ---------------------------------------------------------------------------
+# paged block accounting across verify/rollback
+# ---------------------------------------------------------------------------
+
+def test_paged_rollback_frees_over_allocated_blocks(setup):
+    """Full rejection: verify_view allocates the candidate window's
+    blocks; commit_n at the bonus-only position must free them and
+    return resident bytes to the pre-verify level."""
+    cfg, _ = setup
+    ecfg = EngineConfig(max_batch=2, max_seq_len=64, kv_cache="paged",
+                        kv_block_size=16, max_new_tokens=32)
+    cache = PagedCache(cfg, ecfg)
+    st = MD.cache_struct(cfg, 1, 64)
+    rows = {k: jnp.zeros(*st[k]) for k in ("k", "v")}
+    cache.splice(rows, 0, n_prompt=10, budget=32)   # block 0 only
+    r0 = cache.resident_kv_bytes()
+    free0 = cache.allocator.free_blocks
+    # verify window 10..17 crosses into block 1 -> allocates it
+    cache.verify_view(np.array([10, 0]), np.array([True, False]),
+                      np.array([8, 1]))
+    assert cache.resident_kv_bytes() > r0
+    # full rejection: only the bonus commits -> valid length 11
+    cache.commit_n(0, 11)
+    assert cache.resident_kv_bytes() == r0
+    assert cache.allocator.free_blocks == free0
+    # reservation accounting survives the round trip: the freed block
+    # can be re-allocated by a later verify without deadlock
+    cache.verify_view(np.array([10, 0]), np.array([True, False]),
+                      np.array([8, 1]))
+    cache.commit_n(0, 18)  # accept across the boundary: block 1 stays
+    assert cache.resident_kv_bytes() > r0
+    cache.free(0)
+    assert cache.allocator.allocated_blocks == 0
+
+
+def test_paged_engine_resident_bytes_track_rollback(setup):
+    """Engine-level: a garbage draft (rejection every round) must not
+    leak blocks — after the run every block is back in the pool."""
+    cfg, params = setup
+    rng = np.random.default_rng(4)
+    zero_draft = jax.tree_util.tree_map(jnp.zeros_like, params)
+    eng = ServingEngine(params, cfg, EngineConfig(
+        max_batch=2, max_seq_len=64, max_new_tokens=6,
+        scheduler="speculative", spec_gamma=3, kv_cache="paged"),
+        draft_params=zero_draft, draft_cfg=cfg)
+    for n in (5, 12, 20):
+        eng.submit(rng.integers(0, cfg.vocab_size, size=n))
+    eng.run()
+    assert len(eng.finished) == 3
+    assert eng.kv.allocator.allocated_blocks == 0
+    assert eng.kv.resident_kv_bytes() == 0
+
+
+# ---------------------------------------------------------------------------
+# the verify path itself
+# ---------------------------------------------------------------------------
+
+def test_verify_tokens_gamma_zero_matches_decode_step(setup):
+    """S = 1 verify degenerates to the single-token decode step: same
+    argmax, same KV write, ragged positions and live mask included."""
+    cfg, params = setup
+    B, C = 3, 64
+    rng = np.random.default_rng(5)
+    cache = MD.init_cache(cfg, B, C)
+    # distinct per-row histories
+    pos = jnp.asarray([3, 17, 40], jnp.int32)
+    live = jnp.asarray([True, False, True])
+    kshape = cache["k"].shape
+    cache["k"] = jnp.asarray(rng.normal(size=kshape) * 0.1, jnp.float32)
+    cache["v"] = jnp.asarray(rng.normal(size=kshape) * 0.1, jnp.float32)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, 1)), jnp.int32)
+
+    dlog, dcache = MD.decode_step(params, cfg, toks,
+                                  dict(cache, len=pos), live=live)
+    vlog, vcache = MD.verify_tokens(params, cfg, toks,
+                                    dict(cache, len=pos), live=live)
+    assert vlog.shape == (B, 1, cfg.vocab_size)
+    np.testing.assert_allclose(np.asarray(vlog[:, 0]), np.asarray(dlog),
+                               atol=2e-5, rtol=2e-5)
+    assert (jnp.argmax(vlog[:, 0], -1) == jnp.argmax(dlog, -1)).all()
+    np.testing.assert_allclose(np.asarray(vcache["k"]),
+                               np.asarray(dcache["k"]), atol=2e-6,
+                               rtol=2e-6)
+    # non-live rows kept their cache exactly
+    assert (np.asarray(vcache["k"][:, 1]) == np.asarray(cache["k"][:, 1])).all()
+
+
+def test_verify_rejected_positions_do_not_perturb_future_steps(setup):
+    """Rollback by bookkeeping: garbage KV the verify wrote past the
+    accepted prefix must be invisible to a later dispatch at the rolled
+    back length (the per-row length mask is the rollback)."""
+    cfg, params = setup
+    B, C, S = 1, 64, 4
+    rng = np.random.default_rng(6)
+    cache = MD.init_cache(cfg, B, C)
+    pos = jnp.asarray([10], jnp.int32)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    live = jnp.asarray([True])
+    _, vcache = MD.verify_tokens(params, cfg, toks,
+                                 dict(cache, len=pos), live=live)
+    # decode at the rolled-back position (accept 1 of 4): logits must
+    # equal a decode over a cache that never saw positions 11..13
+    _, ccache = MD.verify_tokens(params, cfg, toks[:, :1],
+                                 dict(cache, len=pos), live=live)
+    nxt = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, 1)), jnp.int32)
+    la, _ = MD.decode_step(params, cfg, nxt,
+                           dict(vcache, len=jnp.asarray([11], jnp.int32)),
+                           live=live)
+    lb, _ = MD.decode_step(params, cfg, nxt,
+                           dict(ccache, len=jnp.asarray([11], jnp.int32)),
+                           live=live)
+    assert (jnp.argmax(la, -1) == jnp.argmax(lb, -1)).all()
+    np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                               atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# draft flavors, fallbacks, config validation
+# ---------------------------------------------------------------------------
+
+def test_registry_pair_draft_matches_vanilla():
+    """A registry draft (qwen drafting phi3, shared smoke vocab):
+    acceptance is whatever it is, outputs must still be vanilla."""
+    cfg = registry.get_smoke_config("phi3-mini-3.8b").replace(
+        dtype="float32")
+    params = MD.init_params(jax.random.PRNGKey(1), cfg)
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n) for n in (6, 18)]
+    want = {r.rid: r.output
+            for r in _drive(params, cfg, prompts, scheduler="blocking",
+                            max_batch=2).finished}
+    eng = _drive(params, cfg, prompts, scheduler="speculative",
+                 max_batch=2, spec_gamma=2, draft="qwen1.5-0.5b")
+    assert {r.rid: r.output for r in eng.finished} == want
+
+
+def test_self_draft_params_share_leaves(setup):
+    """Self-draft slices the target's stacks — leaves alias, no copy,
+    and k clamps into [1, n_layers]."""
+    cfg, params = setup
+    dp, dcfg = MD.self_draft_params(params, cfg, 1)
+    assert dcfg.n_layers == 1
+    assert dp["embed"] is params["embed"]
+    assert dp["layers"]["attn"]["wq"].shape[0] == 1
+    dp_full, dcfg_full = MD.self_draft_params(params, cfg, 99)
+    assert dcfg_full.n_layers == cfg.n_layers
+
+
+def test_unsupported_family_falls_back_to_blocking():
+    cfg = registry.get_smoke_config("zamba2-2.7b").replace(dtype="float32")
+    params = MD.init_params(jax.random.PRNGKey(2), cfg)
+    rng = np.random.default_rng(8)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n) for n in (5, 11)]
+    want = {r.rid: r.output
+            for r in _drive(params, cfg, prompts, scheduler="blocking",
+                            max_seq_len=48).finished}
+    with pytest.warns(UserWarning, match="falling back to blocking"):
+        eng = _drive(params, cfg, prompts, scheduler="speculative",
+                     max_seq_len=48)
+    assert isinstance(eng.scheduler, BlockingScheduler)
+    assert eng.draft_kv is None and eng.draft_dispatches == 0
+    assert {r.rid: r.output for r in eng.finished} == want
+
+
+@pytest.mark.parametrize("kw,match", [
+    (dict(scheduler="speculative", spec_gamma=0), "spec_gamma"),
+    (dict(scheduler="speculative", spec_gamma=-2), "spec_gamma"),
+    (dict(scheduler="speculative", sample="temperature"),
+     "requires sample='greedy'"),
+])
+def test_engine_config_validation(kw, match):
+    with pytest.raises(ValueError, match=match):
+        EngineConfig(**kw)
+
+
+def test_mismatched_draft_vocab_rejected(setup):
+    cfg, params = setup
+    bad_cfg = cfg.replace(vocab_size=cfg.vocab_size * 2)
+    with pytest.raises(ValueError, match="vocab"):
+        ServingEngine(params, cfg, EngineConfig(
+            max_batch=2, max_seq_len=64, scheduler="speculative"),
+            draft_params=params, draft_cfg=bad_cfg)
