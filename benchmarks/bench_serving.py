@@ -25,6 +25,17 @@ Invariants under test:
   target) accepted-tokens/step must exceed 1.0 (hard-fail otherwise):
   each target weight stream commits more than one token, the LP-Spec
   energy/token win decode's memory-boundedness makes possible.
+- ``--cluster``: the disaggregated ``ClusterEngine`` (1 prefill + 2
+  decode workers over ``jax.devices()``; CI forces an 8-device CPU
+  world via ``XLA_FLAGS=--xla_force_host_platform_device_count=8``)
+  emits bitwise-identical greedy streams to the single blocking engine
+  on both cache backends (hard-fail otherwise) — including a
+  fault-injection run that kills a decode worker mid-stream, which
+  must record at least one slot migration (hard-fail otherwise).
+  TTFT/ITL/throughput and KV-handoff bytes are reported next to the
+  single-engine baseline, and the analytical mirror
+  (``LLMSimulator.serve(cluster=...)`` + the heterogeneous
+  ``run_cloud_disaggregated`` TCO-per-QPS scenario) lands in the JSON.
 
 Also cross-checks against the analytical simulator's continuous-batching
 path (``LLMSimulator.serve``) on Table-1 cloud profiles, which charges
@@ -50,7 +61,8 @@ from repro.configs import registry
 from repro.core import profiles as HW
 from repro.core.simulator import LLMSimulator, SimConfig
 from repro.models import model as MD
-from repro.serving import EngineConfig, ServingEngine
+from repro.serving import (ClusterConfig, ClusterEngine, EngineConfig,
+                           ServingEngine)
 
 MODEL = "qwen1.5-0.5b"
 MAX_BATCH = 4
@@ -67,6 +79,8 @@ MIXED_LONG = 900
 MIXED_CHUNK = 64
 MIXED_SHORT_MAX = 14
 GAMMA = 4           # speculative: draft tokens per verify step
+N_PREFILL, N_DECODE = 1, 2   # --cluster topology
+KILL_STEP = 3       # fault injection: kill a decode worker here
 
 
 def _workload(kind: str, rng):
@@ -138,7 +152,162 @@ def _drive(params, cfg, lens, rng, kv_cache, scheduler="blocking",
     }
 
 
-def run(json_path: str | None = None, scheduler: str = "blocking"):
+def _drive_cluster(params, cfg, lens, rng, kv_cache, kill_step=None):
+    """Drive the disaggregated cluster over one workload; optionally
+    kill a decode worker mid-stream (fault injection). Returns the same
+    metric dict shape as :func:`_drive` plus cluster accounting."""
+    clu = ClusterEngine(
+        params, cfg,
+        EngineConfig(max_batch=MAX_BATCH, max_seq_len=MAX_SEQ,
+                     max_new_tokens=N_NEW, kv_cache=kv_cache),
+        ClusterConfig(n_prefill=N_PREFILL, n_decode=N_DECODE))
+    prompts = [rng.integers(0, cfg.vocab_size, size=int(n)) for n in lens]
+    # warm every worker's prefill bucket + decode dispatch compiles
+    for p in prompts:
+        clu.submit(p, max_new_tokens=2)
+    clu.run()
+    clu.finished.clear()
+    clu.handoffs = clu.migrations = 0
+    clu.kv_transfer_bytes = clu.migration_bytes = 0
+    for w in clu.prefill_workers + clu.decode_workers:
+        w.eng.decode_dispatches = w.eng.decode_steps = w.eng.prefills = 0
+
+    t0 = time.time()
+    for p in prompts:
+        clu.submit(p)
+    if kill_step is not None:
+        steps = 0
+        while clu.waiting or clu.pending or clu._any_live():
+            clu.step()
+            steps += 1
+            if steps == kill_step:
+                clu.kill_worker(0)  # preempt mid-stream: live slots
+                # migrate to the surviving worker
+    done = clu.run()
+    wall = time.time() - t0
+    s = clu.summary()
+    return {
+        "kv_cache": kv_cache,
+        "scheduler": "cluster",
+        "requests": s["requests"],
+        "tokens": s["tokens"],
+        "tok_s": s["tokens"] / wall if wall > 0 else float("inf"),
+        "dispatches": s["decode_dispatches"],
+        "steps": s["decode_steps"],
+        "disp_per_step": s["dispatches_per_step"],
+        "ttft_p50_s": s["ttft_p50_s"],
+        "ttft_p99_s": s["ttft_p99_s"],
+        "mean_itl_s": s["mean_itl_s"],
+        "handoffs": s["handoffs"],
+        "migrations": s["migrations"],
+        "kv_transfer_bytes": s["kv_transfer_bytes"],
+        "workers_alive": s["workers_alive"],
+        "resident_kv_bytes": s["resident_kv_bytes"],
+        "outputs": {r.rid: r.output for r in done},
+    }
+
+
+def _run_cluster_section(params, cfg, results, mismatched):
+    """The --cluster benchmark: engine-level bitwise + fault-injection
+    gates, then the analytical disaggregated mirror."""
+    import jax as _jax
+
+    from repro.core.scenarios import run_cloud_disaggregated
+
+    results["cluster"] = {"devices": [str(d) for d in _jax.devices()],
+                          "n_prefill": N_PREFILL, "n_decode": N_DECODE,
+                          "engine": [], "analytical": []}
+    rows = []
+    lens = _workload("ragged", np.random.default_rng(6))
+    for kv in ("contiguous", "paged"):
+        base = _drive(params, cfg, lens, np.random.default_rng(7), kv,
+                      "blocking")
+        rows.append([kv, "single", base["requests"],
+                     r3(base["ttft_p50_s"] * 1e3),
+                     r3(base["mean_itl_s"] * 1e3), r3(base["tok_s"]),
+                     0, 0, "0K"])
+        runs = {
+            "cluster": _drive_cluster(params, cfg, lens,
+                                      np.random.default_rng(7), kv),
+            "cluster+kill": _drive_cluster(params, cfg, lens,
+                                           np.random.default_rng(7), kv,
+                                           kill_step=KILL_STEP),
+        }
+        for label, m in runs.items():
+            rows.append([kv, label, m["requests"],
+                         r3(m["ttft_p50_s"] * 1e3),
+                         r3(m["mean_itl_s"] * 1e3), r3(m["tok_s"]),
+                         m["handoffs"], m["migrations"],
+                         f"{m['kv_transfer_bytes'] / 1024:.0f}K"])
+            same = m["outputs"] == base["outputs"]
+            results["cluster"]["engine"].append(
+                {"run": label, "kv_cache": kv,
+                 "matches_single_engine": same,
+                 **{k: v for k, v in m.items() if k != "outputs"}})
+            if not same:
+                mismatched.append(
+                    f"cluster/{kv}/{label}: greedy outputs diverged "
+                    "from the single blocking engine")
+            if label == "cluster+kill" and m["migrations"] < 1:
+                mismatched.append(
+                    f"cluster/{kv}/fault-injection: no slot migration "
+                    "recorded — the kill must preempt live slots")
+    print_table(
+        f"disaggregated cluster ({N_PREFILL} prefill + {N_DECODE} decode "
+        f"workers over {len(_jax.devices())} devices; kill at step "
+        f"{KILL_STEP})",
+        ["kv_cache", "run", "reqs", "ttft p50 ms", "itl ms", "tok/s",
+         "handoffs", "migrations", "KV moved"],
+        rows)
+
+    # analytical mirror on the paper's hardware + the heterogeneous
+    # xPU-prefill/PIM-decode TCO scenario
+    full = registry.get_config(MODEL)
+    sim_rows = []
+    lens4 = _workload("ragged", np.random.default_rng(6))[:MAX_BATCH]
+    for kv in ("contiguous", "paged"):
+        for hw in (HW.PIM_AI_CHIP, HW.DGX_H100):
+            sim = LLMSimulator(full, hw, SimConfig())
+            r = sim.serve(lens4, N_NEW, kv_cache=kv, max_seq_len=MAX_SEQ,
+                          cluster=(N_PREFILL, N_DECODE))
+            sim_rows.append(
+                [kv, hw.name, r3(r["tokens_per_s"]),
+                 r3(r["energy_per_token_j"] * 1e3),
+                 f"{r['kv_transfer_bytes'] / 1024:.0f}K",
+                 r3(r["kv_transfer_s"] * 1e3)])
+            results["cluster"]["analytical"].append(
+                {"kv_cache": kv, "profile": hw.name,
+                 "tokens_per_s": r["tokens_per_s"],
+                 "energy_per_token_j": r["energy_per_token_j"],
+                 "kv_transfer_bytes": r["kv_transfer_bytes"],
+                 "kv_transfer_s": r["kv_transfer_s"],
+                 "ttft_s": r["ttft_s"]})
+    print_table(
+        f"analytical cluster serve (Table-1 profiles, "
+        f"{N_PREFILL}p+{N_DECODE}d)",
+        ["kv_cache", "profile", "tok/s", "mJ/token", "KV moved",
+         "xfer ms"], sim_rows)
+
+    het = run_cloud_disaggregated("llama2-70b", "gqa")
+    results["cluster"]["disaggregated_tco"] = {
+        "model": het["model"], "attn": het["attn"],
+        "engines_per_xpu": het["engines_per_xpu"],
+        "kv_transfer": het["kv_transfer"],
+        "tco_per_qps": {k: v["tco_per_qps"]
+                        for k, v in het["tco"].items()},
+        "ratios": het["ratios"],
+    }
+    print_table(
+        "heterogeneous xPU-prefill + PIM-decode (llama2-70b/gqa, "
+        "1000 in / 100 out)",
+        ["system", "tco $/qps"],
+        [[k, r3(v["tco_per_qps"])] for k, v in het["tco"].items()]
+        + [["engines/xpu", r3(het["engines_per_xpu"])],
+           ["KV moved/batch", f"{het['kv_transfer']['bytes']/2**30:.1f}G"]])
+
+
+def run(json_path: str | None = None, scheduler: str = "blocking",
+        cluster: bool = False):
     cfg = registry.get_smoke_config(MODEL).replace(dtype="float32")
     params = MD.init_params(jax.random.PRNGKey(0), cfg)
 
@@ -149,6 +318,18 @@ def run(json_path: str | None = None, scheduler: str = "blocking"):
                "speculative": []}
     rows = []
     mismatched = []
+    if cluster:
+        # the --cluster flavor is its own CI step: run only the
+        # disaggregated section (the single-engine baselines it needs
+        # are driven inside it)
+        _run_cluster_section(params, cfg, results, mismatched)
+        if json_path:
+            with open(json_path, "w") as f:
+                json.dump(results, f, indent=2, default=float)
+            print(f"\n[wrote {json_path}]")
+        if mismatched:
+            raise SystemExit(f"serving invariants violated: {mismatched}")
+        return results
     for kind in ("aligned", "ragged"):
         lens = _workload(kind, np.random.default_rng(0))
         per_backend = {}
@@ -345,5 +526,10 @@ if __name__ == "__main__":
                          "also runs the head-of-line comparison; "
                          "speculative also runs the draft/verify "
                          "acceptance gate)")
+    ap.add_argument("--cluster", action="store_true",
+                    help="run the disaggregated prefill/decode cluster "
+                         "benchmark instead: bitwise + fault-injection "
+                         "migration gates, plus the analytical "
+                         "heterogeneous xPU+PIM TCO scenario")
     args = ap.parse_args()
-    run(args.json, scheduler=args.scheduler)
+    run(args.json, scheduler=args.scheduler, cluster=args.cluster)

@@ -47,8 +47,12 @@ for name in archs:
         assert all(len(r.output) == 3 for r in done), f"{name}: serve output"
         mode = ("chunked" if isinstance(eng.scheduler, ChunkedScheduler)
                 else "blocking-fallback")
+        # recurrent families now bucket prefill too (length-masked
+        # scan), so no family pays per-distinct-prompt-length compiles
+        bucketed = "bucketed" if eng._bucketed else "exact-len"
         print(f"OK   {name:20s} loss={float(loss):.3f} params={n_params} "
-              f"serve={mode}/{eng.summary()['prefill_chunks']}ch")
+              f"serve={mode}/{eng.summary()['prefill_chunks']}ch "
+              f"prefill={bucketed}")
     except Exception as e:  # noqa: BLE001
         print(f"FAIL {name:20s} {type(e).__name__}: {e}")
         import traceback; traceback.print_exc()

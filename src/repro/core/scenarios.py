@@ -98,6 +98,97 @@ def run_cloud(model: str = "llama2-70b", attn: str = "gqa",
     }
 
 
+def run_cloud_disaggregated(model: str = "llama2-70b", attn: str = "gqa",
+                            n_in: int = N_IN_DEFAULT,
+                            n_out: int = N_OUT_DEFAULT) -> dict:
+    """Heterogeneous xPU+PIM disaggregation: prefill (compute-bound) on
+    the DGX-H100 profile, decode (memory-bound) on PIM-AI engines, with
+    each request's KV handed off once over the PIM server's DDR ingest
+    interface — the HPIM-style phase split the paper's cloud thesis
+    implies, with the Sangam-style KV-movement cost made explicit.
+
+    Pipeline model: the xPU emits one prefilled batch every
+    ``t_prefill + t_transfer`` seconds; one PIM engine takes
+    ``t_decode`` seconds per batch, so ``k = t_decode / (t_prefill +
+    t_transfer)`` engines (fractional — this is an analytical model)
+    keep pace with one xPU and the steady-state system throughput is
+    one batch per ``t_prefill + t_transfer``. TCO charges the xPU plus
+    ``k`` engines' share of PIM-server capex.
+
+    Returns QueryMetrics + TCO-per-QPS for the disaggregated system
+    against *both* homogeneous baselines (all-H100 and all-PIM, from
+    :func:`run_cloud`)."""
+    from repro.serving.kv_cache import kv_bytes_per_token
+
+    cfg = registry.get_config(model)
+    if attn == "mha":
+        cfg = mha_variant(cfg)
+    base = run_cloud(model, attn, n_in, n_out)
+    _, b = CLOUD_BATCH[(model, attn)]  # handoff unit: the PIM-side batch
+
+    h100 = LLMSimulator(
+        cfg, HW.DGX_H100,
+        SimConfig(orchestration_s=CLOUD_ORCHESTRATION_S, tp_degree=8))
+    pim = LLMSimulator(
+        cfg, HW.pim_engine(),
+        SimConfig(orchestration_s=CLOUD_ORCHESTRATION_S,
+                  tp_degree=HW.DIMMS_PER_ENGINE * HW.CHIPS_PER_DIMM))
+    enc = h100.encode(b, n_in)
+    dec = pim.decode(b, n_in, n_out)
+
+    # per-batch KV handoff over the DDR ingest path (Table-1 PIM-server
+    # host->device row): every prompt position's KV crosses once
+    kv_bytes = b * n_in * kv_bytes_per_token(cfg)
+    t_xfer = kv_bytes / (HW.PIM_AI_SERVER.h2d_bw_gbs * 1e9)
+    e_xfer = kv_bytes * 8 * HW.PIM_AI_SERVER.h2d_pj_per_bit * 1e-12
+
+    t_stage = enc.seconds + t_xfer          # xPU stage period
+    k_engines = dec.seconds / t_stage       # engines fed by one xPU
+    qps = b / t_stage                       # steady-state, pipelined
+    engine_capex = (HW.PIM_AI_SERVER.cost_usd * HW.SERVERS_PER_8U
+                    / HW.ENGINES_PER_8U)
+    capex = HW.DGX_H100.cost_usd + k_engines * engine_capex
+    m = QueryMetrics(
+        ttft_s=enc.seconds,                 # first token samples on the xPU
+        tokens_per_s=b * n_out / t_stage,   # decode tier keeps pace
+        energy_per_token_j=dec.energy_j / (b * n_out),
+        qps=qps,
+        energy_per_query_j=(enc.energy_j + e_xfer + dec.energy_j) / b,
+    )
+    tco = tco_3yr(capex, m.qps, m.energy_per_query_j)
+    tco_h100 = base["tco"]["dgx-h100"]
+    tco_pim = base["tco"]["pim-ai-4srv"]
+    return {
+        "model": model, "attn": attn, "n_in": n_in, "n_out": n_out,
+        "batch": b,
+        "prefill": {"profile": HW.DGX_H100.name, "seconds": enc.seconds,
+                    "energy_j": enc.energy_j},
+        "decode": {"profile": pim.hw.name, "seconds": dec.seconds,
+                   "energy_j": dec.energy_j},
+        "kv_transfer": {"bytes": kv_bytes, "seconds": t_xfer,
+                        "energy_j": e_xfer,
+                        "interface_gbs": HW.PIM_AI_SERVER.h2d_bw_gbs},
+        "engines_per_xpu": k_engines,
+        "disaggregated": m,
+        "dgx-h100": base["dgx-h100"],
+        "pim-ai-4srv": base["pim-ai-4srv"],
+        "tco": {"disaggregated": tco, "dgx-h100": tco_h100,
+                "pim-ai-4srv": tco_pim},
+        "ratios": {
+            # > 1: disaggregation buys cheaper sustained QPS
+            "tco_per_qps_vs_h100": (tco_h100["tco_per_qps"]
+                                    / tco["tco_per_qps"]),
+            "tco_per_qps_vs_pim": (tco_pim["tco_per_qps"]
+                                   / tco["tco_per_qps"]),
+            "energy_per_query_vs_h100": (
+                base["dgx-h100"].energy_per_query_j / m.energy_per_query_j),
+            "energy_per_query_vs_pim": (
+                base["pim-ai-4srv"].energy_per_query_j
+                / m.energy_per_query_j),
+        },
+    }
+
+
 MOBILE_PROFILES = (HW.PIM_AI_MOBILE, HW.A17_PRO, HW.SNAPDRAGON_8_GEN3,
                    HW.DIMENSITY_9300)
 

@@ -350,7 +350,8 @@ class LLMSimulator:
               kv_block_size: int = 16, max_seq_len: int | None = None,
               scheduler: str = "blocking", chunk_tokens: int = 64,
               gamma: int = 4, acceptance: float = 0.8,
-              draft_layers: int = 0) -> dict:
+              draft_layers: int = 0,
+              cluster: tuple | None = None) -> dict:
         """Continuous-batching cloud scenario (matches ``ServingEngine``):
         per-request prefill + one fully-ragged decode dispatch per step
         over the whole batch, each row's KV span growing from its own
@@ -382,11 +383,28 @@ class LLMSimulator:
         (0 -> n_layers // 2 self-draft). This is where the PIM
         energy/token claim becomes measurable: decode is memory-bound,
         so amortizing one target weight stream over the accepted
-        tokens cuts energy per token roughly by the commit rate."""
+        tokens cuts energy per token roughly by the commit rate.
+
+        ``cluster=(n_prefill, n_decode)`` mirrors
+        ``serving.cluster.ClusterEngine``: prefills round-robin over
+        ``n_prefill`` workers (sequential per worker), each request's KV
+        is handed off once over the device interconnect (charged bytes
+        + energy), and the decode batch splits across ``n_decode``
+        workers stepping in parallel. Blocking scheduler only — exactly
+        the restriction the engine enforces."""
         from repro.serving.kv_cache import (contiguous_kv_bytes,
                                             paged_resident_kv_bytes)
         batch = len(n_ins)
         cap = max_seq_len or (max(int(n) for n in n_ins) + n_out)
+        if cluster is not None:
+            if scheduler != "blocking":
+                raise ValueError(
+                    f"cluster serving requires scheduler='blocking', got "
+                    f"{scheduler!r} (mirrors ClusterEngine)")
+            return self._serve_cluster(
+                n_ins, n_out, kv_cache=kv_cache,
+                kv_block_size=kv_block_size, cap=cap,
+                n_prefill=int(cluster[0]), n_decode=int(cluster[1]))
         if scheduler in ("chunked", "speculative"):
             if (self.cfg.family not in MD.TRANSFORMER_FAMILIES
                     or self.cfg.sliding_window is not None):
@@ -541,6 +559,92 @@ class LLMSimulator:
             "scheduler": "chunked",
             "prefill_chunks": total_chunks,
             "steps": steps,
+            "resident_kv_bytes": resident,
+            "contiguous_kv_bytes": contiguous_bytes,
+        }
+
+    def _serve_cluster(self, n_ins, n_out: int, *, kv_cache: str,
+                       kv_block_size: int, cap: int, n_prefill: int,
+                       n_decode: int) -> dict:
+        """Disaggregated prefill/decode schedule (mirrors
+        ``ClusterEngine``): prompts prefill round-robin across
+        ``n_prefill`` workers (sequential per worker — one prefill
+        dispatch at a time each, like the engine), every request's KV
+        crosses the device boundary once (prompt positions times
+        bytes/token, charged at the interconnect parameters — the
+        Sangam-style KV-movement constraint), and the decode batch
+        splits evenly across ``n_decode`` workers whose ragged decode
+        steps run in parallel — wall-clock decode is the slowest
+        worker's, energy is the sum."""
+        from repro.serving.kv_cache import (contiguous_kv_bytes,
+                                            kv_bytes_per_token,
+                                            paged_resident_kv_bytes)
+        if n_prefill < 1 or n_decode < 1:
+            raise ValueError(f"cluster needs >= 1 worker per phase, got "
+                             f"({n_prefill}, {n_decode})")
+        batch = len(n_ins)
+        # prefill tier + per-request KV handoff
+        bpt = kv_bytes_per_token(self.cfg) * (self.sim.act_bits / 16.0)
+        bw = (self.hw.interconnect_bw_gbs or self.hw.h2d_bw_gbs) * 1e9
+        pj = (self.hw.interconnect_pj_per_bit
+              if self.hw.interconnect_bw_gbs else self.hw.h2d_pj_per_bit)
+        enc = PhaseResult()
+        xfer = PhaseResult()
+        busy = [0.0] * n_prefill
+        ttfts = []
+        for i, n in enumerate(n_ins):
+            e = self.encode(1, int(n))
+            enc.add(e)
+            w = i % n_prefill
+            busy[w] += e.seconds
+            # TTFT is to the first sampled token — the prefill worker
+            # samples it before the handoff, exactly like the engine
+            ttfts.append(busy[w])
+            tb = int(n) * bpt
+            ts = tb / bw
+            xfer.seconds += ts
+            xfer.host_s += ts
+            xfer.host_bytes += tb
+            xfer.energy_j += tb * 8 * pj * 1e-12
+        # decode tier: batch split evenly, workers step in parallel
+        n_mean = sum(float(n) for n in n_ins) / batch
+        sizes = [batch // n_decode + (1 if i < batch % n_decode else 0)
+                 for i in range(n_decode)]
+        sizes = [s for s in sizes if s > 0]
+        dec = PhaseResult()
+        wall = 0.0
+        for sb in sizes:
+            d = self.decode(sb, n_mean, n_out, ragged=True,
+                            kv_cache=kv_cache, kv_block_size=kv_block_size)
+            dec.add(d)              # energy / ops / bytes sum over workers
+            wall = max(wall, d.seconds)
+        dec.seconds = wall          # ... but the workers run in parallel
+        contiguous_bytes = contiguous_kv_bytes(self.cfg, batch, cap)
+        if kv_cache == "paged":
+            resident = paged_resident_kv_bytes(
+                self.cfg, [min(int(n) + n_out - 1, cap) for n in n_ins],
+                kv_block_size)
+        else:
+            resident = contiguous_bytes
+        total_toks = batch * n_out
+        makespan = max(busy) + xfer.seconds + wall
+        return {
+            "encode": enc,
+            "decode": dec,
+            "kv_transfer": xfer,
+            "kv_transfer_bytes": xfer.host_bytes,
+            "kv_transfer_s": xfer.seconds,
+            "kv_transfer_energy_j": xfer.energy_j,
+            "cluster": (n_prefill, n_decode),
+            "ttft_s": sum(ttfts) / batch,
+            "ttft_per_req_s": ttfts,
+            "tokens_per_s": total_toks / max(wall, 1e-12),
+            "energy_per_token_j": dec.energy_j / total_toks,
+            "qps": batch / max(makespan, 1e-12),
+            "decode_dispatches": n_out * len(sizes),  # one per worker step
+            "kv_cache": kv_cache,
+            "scheduler": "blocking",
+            "prefill_chunks": batch,
             "resident_kv_bytes": resident,
             "contiguous_kv_bytes": contiguous_bytes,
         }

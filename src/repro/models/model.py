@@ -40,6 +40,8 @@ from repro.models.attention import (attention, decode_attention,
 from repro.distributed import hints
 
 TRANSFORMER_FAMILIES = ("dense", "moe", "vlm")
+RECURRENT_FAMILIES = ("ssm", "hybrid")  # state-based decode; prefill
+                                        # buckets via length-masked scan
 
 
 def _remat(cfg, fn):
@@ -547,7 +549,7 @@ def _write_kv(cache_arr, kv, start):
 
 
 def prefill(params, cfg, batch, capacity, *, attn_impl="chunked",
-            logit_index=None):
+            logit_index=None, length=None):
     """Process the prompt, fill the cache. Returns (last logits (B,V),
     cache).
 
@@ -556,6 +558,15 @@ def prefill(params, cfg, batch, capacity, *, attn_impl="chunked",
     prompts where the true last token sits at ``n_prompt - 1``. Causal
     attention guarantees pad positions never influence earlier rows;
     their garbage KV is masked at decode by per-row cache lengths.
+
+    ``length`` (traced scalar int32): the prompt's true length when the
+    batch is right-padded and the family is recurrent (ssm/hybrid) —
+    recurrent state would otherwise advance through the pads. The scan
+    is length-masked (pad steps get decay 1 and zero input, the same
+    values the SSD engine's internal chunk padding uses), so the final
+    state — and hence every decoded token — is bitwise that of the
+    exact-length prompt. Ignored for attention families, whose causal
+    mask already makes right-padding harmless.
     """
     x, positions, _ = _embed_inputs(params, cfg, batch)
     s = x.shape[1]
@@ -615,14 +626,17 @@ def prefill(params, cfg, batch, capacity, *, attn_impl="chunked",
         cache["cross_v"] = xvs.astype(cache["cross_v"].dtype)
 
     elif fam == "ssm":
+        lmask = (None if length is None
+                 else jnp.arange(s) < jnp.asarray(length, jnp.int32))
+
         def super_body(h, lps):
             def m_body(hh, lp):
-                hh, st = X.apply_mlstm(lp, cfg, hh)
+                hh, st = X.apply_mlstm(lp, cfg, hh, mask=lmask)
                 return hh, st
             h, m_states = jax.lax.scan(_remat(cfg, m_body), h, lps["m"])
             s_state = None
             if "s" in lps:
-                h, s_state = X.apply_slstm(lps["s"], cfg, h)
+                h, s_state = X.apply_slstm(lps["s"], cfg, h, mask=lmask)
             return h, (m_states, s_state)
 
         xs = {"m": params["mlstm"]}
@@ -639,7 +653,8 @@ def prefill(params, cfg, batch, capacity, *, attn_impl="chunked",
         def group_body(h, lps):
             def m_body(hh, lp):
                 y, (st, cv) = S.apply_mamba2(
-                    lp["mamba"], cfg, L.apply_norm(lp["ln"], cfg, hh))
+                    lp["mamba"], cfg, L.apply_norm(lp["ln"], cfg, hh),
+                    n_valid=length)
                 return hh + y, (st, cv)
             h, (sts, cvs) = jax.lax.scan(_remat(cfg, m_body), h, lps)
             h, (k, v, _, _) = decoder_block(shared, cfg, h,

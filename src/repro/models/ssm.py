@@ -133,20 +133,39 @@ def _split_proj(cfg, zxbcdt):
     return z, x, b, c, dt
 
 
-def _causal_conv(x, w, state=None):
-    """x: (B,S,C); w: (k,C) depthwise. Returns (y, new_state (B,k-1,C))."""
+def _causal_conv(x, w, state=None, n_valid=None):
+    """x: (B,S,C); w: (k,C) depthwise. Returns (y, new_state (B,k-1,C)).
+
+    ``n_valid`` (traced scalar): with a right-padded input, the rolling
+    state handed to decode must be the last ``k-1`` *valid* positions —
+    ``xp[:, n_valid : n_valid+k-1]`` — not the pad tail. ``None`` keeps
+    the static last-``k-1`` slice (exact-length prefill, decode)."""
     k = w.shape[0]
     if state is None:
         state = jnp.zeros((x.shape[0], k - 1, x.shape[-1]), x.dtype)
     xp = jnp.concatenate([state, x], axis=1)
     # depthwise causal conv via stacked shifts (k is tiny, 4)
     y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k))
-    new_state = xp[:, -(k - 1):] if k > 1 else state
+    if k <= 1:
+        new_state = state
+    elif n_valid is None:
+        new_state = xp[:, -(k - 1):]
+    else:
+        new_state = jax.lax.dynamic_slice_in_dim(
+            xp, jnp.asarray(n_valid, jnp.int32), k - 1, axis=1)
     return y, new_state
 
 
-def apply_mamba2(p, cfg, u, state=None, conv_state=None):
-    """u: (B, S, d). state: (B,H,P,N) or None. Returns y, (state, conv)."""
+def apply_mamba2(p, cfg, u, state=None, conv_state=None, n_valid=None):
+    """u: (B, S, d). state: (B,H,P,N) or None. Returns y, (state, conv).
+
+    ``n_valid`` (traced scalar) enables length-masked prefill over a
+    right-padded input: pad positions get decay 1 (``log_a = 0``) and a
+    zero input — exactly the values :func:`ssd_chunked` uses for its own
+    internal chunk padding — so the recurrent and conv states coming out
+    are bitwise those of the exact-length prompt, and pad-position
+    outputs are garbage nobody reads (same contract as bucketed
+    attention prefill)."""
     B, S, d = u.shape
     d_in = cfg.ssm_expand * d
     P = cfg.ssm_head_dim
@@ -154,7 +173,8 @@ def apply_mamba2(p, cfg, u, state=None, conv_state=None):
     zxbcdt = jnp.einsum("bsd,dz->bsz", u, p["in_proj"])
     z, x, b, c, dt = _split_proj(cfg, zxbcdt)
     xbc = jnp.concatenate([x, b, c], axis=-1)
-    xbc, new_conv = _causal_conv(xbc, p["conv_w"], conv_state)
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], conv_state,
+                                 n_valid=n_valid)
     xbc = jax.nn.silu(xbc)
     x = xbc[..., :d_in].reshape(B, S, H, P)
     bmat = xbc[..., d_in:d_in + cfg.ssm_state]
@@ -165,6 +185,10 @@ def apply_mamba2(p, cfg, u, state=None, conv_state=None):
     a = -jnp.exp(p["A_log"])  # (H,) negative
     log_a = dt * a  # (B,S,H) <= 0
     x_bar = x.astype(jnp.float32) * dt[..., None]
+    if n_valid is not None:
+        mask = jnp.arange(S) < jnp.asarray(n_valid, jnp.int32)  # (S,)
+        log_a = jnp.where(mask[None, :, None], log_a, 0.0)
+        x_bar = jnp.where(mask[None, :, None, None], x_bar, 0.0)
     y, h_final = ssd_chunked(x_bar, log_a, bmat, cmat, cfg.chunk_len,
                              h0=state)
     y = y + x.astype(jnp.float32) * p["D"][None, None, :, None]

@@ -65,8 +65,14 @@ def _mlstm_heads(p, cfg, u):
     return q, k, v, log_f, i_gate
 
 
-def apply_mlstm(p, cfg, x, state=None):
-    """x: (B,S,d). state: (B,H,P+1,N) or None. Returns (y, new_state)."""
+def apply_mlstm(p, cfg, x, state=None, mask=None):
+    """x: (B,S,d). state: (B,H,P+1,N) or None. Returns (y, new_state).
+
+    ``mask`` ((S,) bool): length mask for right-padded (bucketed)
+    prefill — pad positions get ``log_f = 0`` (forget gate 1) and a zero
+    augmented value, the same values :func:`~repro.models.ssm.
+    ssd_chunked` uses for its internal chunk padding, so the final state
+    is bitwise that of the exact-length prompt."""
     b, s, d = x.shape
     xin = L.rmsnorm(x, p["norm"]["w"])
     u = jnp.einsum("bsd,de->bse", xin, p["w_up"])
@@ -75,6 +81,10 @@ def apply_mlstm(p, cfg, x, state=None):
     # augment v with the normalizer channel (carried through the SSD state)
     ones = jnp.ones(v.shape[:-1] + (1,), v.dtype)
     v_aug = jnp.concatenate([v, ones], axis=-1) * i_gate[..., None].astype(v.dtype)
+    if mask is not None:
+        log_f = jnp.where(mask[None, :, None], log_f, 0.0)
+        v_aug = jnp.where(mask[None, :, None, None], v_aug,
+                          jnp.zeros((), v_aug.dtype))
     y_aug, h_final = ssd_chunked(v_aug, log_f, k, q, cfg.chunk_len, h0=state)
     y = y_aug[..., :-1]
     denom = y_aug[..., -1:]
@@ -160,8 +170,13 @@ def _slstm_cell(p, cfg, xt, carry):
     return y, (c, n, hnew)
 
 
-def apply_slstm(p, cfg, x, state=None):
-    """x: (B,S,d). state: (c,n,h) each (B,H,ph) fp32. Sequential scan."""
+def apply_slstm(p, cfg, x, state=None, mask=None):
+    """x: (B,S,d). state: (c,n,h) each (B,H,ph) fp32. Sequential scan.
+
+    ``mask`` ((S,) bool): length mask for right-padded prefill — the
+    carry is frozen at pad steps, so the final state is that of the
+    exact-length prompt (pad-position outputs are garbage nobody
+    reads)."""
     b, s, d = x.shape
     h = cfg.n_heads
     ph = d // h
@@ -171,11 +186,22 @@ def apply_slstm(p, cfg, x, state=None):
         z = jnp.zeros((b, h, ph), jnp.float32)
         state = (z, z, z)
 
-    def body(carry, xt):
-        y, carry = _slstm_cell(p, cfg, xt, carry)
-        return carry, y
+    if mask is None:
+        def body(carry, xt):
+            y, carry = _slstm_cell(p, cfg, xt, carry)
+            return carry, y
 
-    state, ys = jax.lax.scan(body, state, jnp.moveaxis(xproj, 1, 0))
+        xs = jnp.moveaxis(xproj, 1, 0)
+    else:
+        def body(carry, inp):
+            xt, m = inp
+            y, new = _slstm_cell(p, cfg, xt, carry)
+            carry = jax.tree.map(lambda a, o: jnp.where(m, a, o), new, carry)
+            return carry, y
+
+        xs = (jnp.moveaxis(xproj, 1, 0), mask)
+
+    state, ys = jax.lax.scan(body, state, xs)
     y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)  # (B,S,d)
     x = x + y
     # small FF (GeLU)

@@ -3,6 +3,11 @@ from repro.serving.engine import (  # noqa: F401
     Request,
     ServingEngine,
 )
+from repro.serving.cluster import (  # noqa: F401
+    ClusterConfig,
+    ClusterEngine,
+    SlotPacket,
+)
 from repro.serving.scheduler import (  # noqa: F401
     BlockingScheduler,
     ChunkedScheduler,

@@ -1,0 +1,409 @@
+"""Disaggregated prefill/decode cluster serving.
+
+PIM-AI's cloud thesis is heterogeneous (§1.2, §3.4): prefill is
+compute-bound and belongs on an xPU, decode is memory-bound and belongs
+on PIM DIMMs — the TCO-per-QPS wins assume the two phases run on
+*different hardware*, with the KV cache crossing the device boundary
+exactly once per request. HPIM (arXiv:2509.12993) makes this
+prefill/decode phase split the core of its heterogeneous PIM scheduler,
+and Sangam (arXiv:2511.12286) shows the KV movement between
+chiplet/CXL-attached PIM devices is the binding constraint.
+
+This module is the framework-side realization: a :class:`ClusterEngine`
+that routes requests across ``n_prefill`` prefill workers and
+``n_decode`` decode workers — each a full
+:class:`~repro.serving.engine.ServingEngine` pinned to its own device
+from ``jax.devices()`` (multi-device in CI via
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``) — with:
+
+- **KV handoff** at the prefill→decode boundary:
+  :meth:`~repro.serving.kv_cache.KVCacheManager.export_slot` packs a
+  slot's live cache state (dense KV rows plus any recurrent/cross
+  state) into a backend-portable host packet, and ``import_slot``
+  re-lands it on the importing worker — paged backends re-run the
+  worst-case reservation math there, so a migrated request keeps the
+  no-mid-decode-deadlock guarantee of local admission. Transferred
+  bytes are accounted (``kv_transfer_bytes``) — the cost the
+  heterogeneous simulator charges over the DDR interface.
+- **A load-balancing router**: each packet goes to the least-loaded
+  alive decode worker whose in-flight budget and cache capacity accept
+  it; packets that fit nowhere wait (backpressure throttles prefill
+  admission through the same budget).
+- **Fault-tolerant slot migration**: :meth:`drain_worker` /
+  :meth:`kill_worker` export every live slot of a decode worker
+  mid-stream and re-import them elsewhere — no token is lost and the
+  streams stay bitwise-identical, because decode rows are
+  batch-composition-independent (the live-mask invariant every PR since
+  ragged batching enforces). A
+  :class:`~repro.distributed.fault_tolerance.StragglerMonitor` watches
+  every decode worker's step latency; ``auto_drain_stragglers`` turns
+  deadline breaches into automatic drains (detection + re-scheduling is
+  the host-level mitigation — inside one jitted step there is no
+  per-device abort).
+
+Greedy outputs are bitwise-identical to a single blocking
+``ServingEngine`` across dense/moe/vlm x contiguous/paged (and the
+recurrent/audio families on the contiguous backend), including runs
+with forced mid-stream migrations: per-row decode math never depends on
+which other rows share the dispatch, and sampling streams are keyed by
+(seed, rid, position), not by worker or slot.
+"""
+from __future__ import annotations
+
+import time
+import warnings
+from collections import deque
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+
+from repro.distributed.fault_tolerance import StragglerMonitor
+from repro.serving.engine import EngineConfig, Request, ServingEngine
+
+
+@dataclass
+class ClusterConfig:
+    """Shape of the disaggregated cluster."""
+    n_prefill: int = 1
+    n_decode: int = 2
+    devices: tuple = ()           # explicit device list; () -> jax.devices()
+    in_flight: int = 0            # per-decode-worker live-request budget;
+                                  # 0 -> the worker's max_batch slots
+    straggler_factor: float = 3.0  # StragglerMonitor deadline multiplier
+    auto_drain_stragglers: bool = False
+
+    def __post_init__(self):
+        if self.n_prefill < 1 or self.n_decode < 1:
+            raise ValueError(
+                f"cluster needs >= 1 prefill and >= 1 decode worker, got "
+                f"n_prefill={self.n_prefill} n_decode={self.n_decode}")
+
+
+@dataclass
+class SlotPacket:
+    """One request's live state in flight between workers."""
+    req: Request
+    seed: int
+    tok: int          # last sampled token (next dispatch's input)
+    pos: int          # absolute position; KV valid to pos - 1
+    gen_len: int      # tokens generated so far
+    n_prompt: int     # sequence positions the prompt occupies
+    budget: int       # total generation budget (admission-time value)
+    kv: dict          # host-side cache packet (export_slot)
+    hops: int = 0     # migrations this request has survived
+
+
+class Worker:
+    """One ServingEngine pinned to a device."""
+
+    def __init__(self, role: str, idx: int, device, params, cfg,
+                 ecfg: EngineConfig, straggler_factor: float):
+        self.role = role
+        self.idx = idx
+        self.device = device
+        self.alive = True
+        self.draining = False
+        self.steps = 0
+        self.monitor = StragglerMonitor(factor=straggler_factor)
+        with jax.default_device(device):
+            self.params = jax.device_put(params, device)
+            self.eng = ServingEngine(self.params, cfg, ecfg)
+
+    def live_slots(self) -> list[int]:
+        return [i for i, r in enumerate(self.eng.slot_req) if r is not None]
+
+    def free_slot(self) -> int | None:
+        for i, r in enumerate(self.eng.slot_req):
+            if r is None:
+                return i
+        return None
+
+
+class ClusterEngine:
+    """Route requests across prefill workers and decode workers with KV
+    handoff at the phase boundary. API mirrors ``ServingEngine``:
+    :meth:`submit`, :meth:`step`, :meth:`run`, :meth:`summary`,
+    ``finished``."""
+
+    def __init__(self, params, cfg, ecfg: EngineConfig,
+                 ccfg: ClusterConfig | None = None):
+        self.cfg = cfg
+        self.ecfg = ecfg
+        self.ccfg = ccfg = ccfg or ClusterConfig()
+        if ecfg.scheduler != "blocking":
+            raise ValueError(
+                f"ClusterEngine requires scheduler='blocking', got "
+                f"{ecfg.scheduler!r}: the prefill→decode handoff boundary "
+                "is the end of a whole-prompt prefill (chunked prefill "
+                "would hand off mid-stream state the importing worker "
+                "cannot resume; a speculative draft's shadow cache would "
+                "have to migrate too)")
+        devices = list(ccfg.devices) or list(jax.devices())
+        n = ccfg.n_prefill + ccfg.n_decode
+        if len(devices) < n:
+            warnings.warn(
+                f"cluster wants {n} devices but only {len(devices)} "
+                "available; workers share devices round-robin (no "
+                "hardware parallelism, placement still exercised)",
+                stacklevel=2)
+        self.prefill_workers = [
+            Worker("prefill", i, devices[i % len(devices)], params, cfg,
+                   ecfg, ccfg.straggler_factor)
+            for i in range(ccfg.n_prefill)]
+        self.decode_workers = [
+            Worker("decode", i, devices[(ccfg.n_prefill + i) % len(devices)],
+                   params, cfg, ecfg, ccfg.straggler_factor)
+            for i in range(ccfg.n_decode)]
+        self.waiting: deque[Request] = deque()
+        self.pending: deque[SlotPacket] = deque()  # awaiting a decode slot
+        self.finished: list[Request] = []
+        self._next_rid = 0
+        self._pf_rr = 0  # prefill round-robin cursor
+        self._req_hops: dict[int, int] = {}  # rid -> migrations survived
+        # transfer / migration accounting
+        self.handoffs = 0
+        self.migrations = 0
+        self.kv_transfer_bytes = 0
+        self.migration_bytes = 0
+
+    # -- public API --------------------------------------------------------
+    def submit(self, prompt, max_new_tokens: int | None = None,
+               seed: int | None = None) -> Request:
+        req = Request(self._next_rid, np.asarray(prompt, np.int32),
+                      max_new_tokens, seed=seed, t_submit=time.time())
+        self._next_rid += 1
+        self.waiting.append(req)
+        return req
+
+    def run(self, max_steps: int = 10_000) -> list[Request]:
+        """Drive until every submitted request finishes."""
+        steps = 0
+        while (self.waiting or self.pending or self._any_live()) \
+                and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.finished
+
+    def step(self):
+        """One cluster iteration: admit waiting requests into prefill
+        workers (whole-prompt prefill + KV export), place pending
+        handoff packets on decode workers (least-loaded router), then
+        run one engine step on every decode worker that holds live
+        slots."""
+        self._admit_prefills()
+        self._place_pending()
+        for w in self.decode_workers:
+            if not w.alive or not w.live_slots():
+                continue
+            t0 = time.time()
+            with jax.default_device(w.device):
+                w.eng.step()
+            breached = w.monitor.observe(w.steps, time.time() - t0)
+            w.steps += 1
+            self._collect(w.eng)
+            if breached and self.ccfg.auto_drain_stragglers \
+                    and not w.draining:
+                self.drain_worker(w.idx)
+
+    # -- fault tolerance ---------------------------------------------------
+    def drain_worker(self, idx: int):
+        """Stop routing to decode worker ``idx`` and migrate its live
+        slots elsewhere (planned maintenance / straggler mitigation).
+        The worker stays alive and can be re-enabled via
+        ``decode_workers[idx].draining = False``. Draining needs
+        somewhere to put the slots: the last routable worker refuses
+        (warn + no-op) rather than stranding the whole cluster — this
+        also keeps ``auto_drain_stragglers`` from aborting a healthy
+        single-decode-worker run on one noisy step."""
+        w = self.decode_workers[idx]
+        others = [o for o in self.decode_workers
+                  if o is not w and o.alive and not o.draining]
+        if not others:
+            warnings.warn(
+                f"refusing to drain decode worker {idx}: it is the last "
+                "routable decode worker (its slots would have nowhere to "
+                "migrate)", stacklevel=2)
+            return
+        w.draining = True
+        self._migrate_all(w)
+
+    def kill_worker(self, idx: int):
+        """Preempt decode worker ``idx``: migrate its live slots and
+        remove it from the cluster permanently (fail-stop posture —
+        the host-level preempt-and-reschedule mitigation)."""
+        w = self.decode_workers[idx]
+        self._migrate_all(w)
+        w.alive = False
+        w.draining = True
+
+    def _migrate_all(self, w: Worker):
+        for slot in w.live_slots():
+            self._export_slot(w, slot, migration=True)
+
+    # -- internals ---------------------------------------------------------
+    def _any_live(self) -> bool:
+        return any(w.alive and w.live_slots() for w in self.decode_workers)
+
+    def _budget_slots(self, w: Worker) -> int:
+        cap = self.ecfg.max_batch
+        return min(self.ccfg.in_flight, cap) if self.ccfg.in_flight else cap
+
+    def _decode_headroom(self) -> int:
+        """Free in-flight capacity across routable decode workers, less
+        the packets already queued for placement — the admission budget
+        that throttles prefill (a prefilled prompt with nowhere to
+        decode would just sit in host memory as a packet)."""
+        cap = 0
+        for w in self.decode_workers:
+            if w.alive and not w.draining:
+                cap += max(0, self._budget_slots(w) - len(w.live_slots()))
+        return cap - len(self.pending)
+
+    def _check_routable(self):
+        if not any(w.alive and not w.draining for w in self.decode_workers):
+            raise RuntimeError(
+                "no routable decode worker (all killed or draining) but "
+                "work remains — un-drain a surviving worker "
+                "(decode_workers[i].draining = False) or add capacity; "
+                "killed workers are gone for good (fail-stop)")
+
+    def _collect(self, eng: ServingEngine):
+        if eng.finished:
+            self.finished.extend(eng.finished)
+            eng.finished.clear()
+
+    def _admit_prefills(self):
+        head = self._decode_headroom()
+        if not self.waiting:
+            return
+        self._check_routable()
+        pws = [w for w in self.prefill_workers if w.alive]
+        while self.waiting and head > 0:
+            w = pws[self._pf_rr % len(pws)]
+            self._pf_rr += 1
+            req = self.waiting.popleft()
+            with jax.default_device(w.device):
+                w.eng.waiting.append(req)
+                w.eng.scheduler.admit(w.eng)
+            self._collect(w.eng)  # admit-time retirements finish here
+            if w.eng.waiting:
+                # deferred by the worker's cache backend: push back and
+                # stop — FIFO order is preserved, capacity frees later
+                self.waiting.appendleft(w.eng.waiting.popleft())
+                break
+            for slot in w.live_slots():
+                self._export_slot(w, slot)
+                head -= 1
+
+    def _export_slot(self, w: Worker, slot: int, *, migration=False):
+        """Pack one live slot into a SlotPacket and release it."""
+        eng = w.eng
+        req = eng.slot_req[slot]
+        with jax.default_device(w.device):
+            kv = eng.kv.export_slot(slot, int(eng.slot_pos[slot]))
+        hops = self._req_hops.get(req.rid, 0) + (1 if migration else 0)
+        self._req_hops[req.rid] = hops
+        pkt = SlotPacket(
+            req=req, seed=int(eng.slot_seed[slot]),
+            tok=int(eng.slot_tok[slot, 0]), pos=int(eng.slot_pos[slot]),
+            gen_len=int(eng.slot_len[slot]),
+            n_prompt=int(eng.slot_nprompt[slot]), budget=eng._budget(req),
+            kv=kv, hops=hops)
+        eng.slot_req[slot] = None
+        eng.slot_len[slot] = 0
+        eng.kv.free(slot)
+        self.kv_transfer_bytes += kv["kv_bytes"]
+        if migration:
+            self.migrations += 1
+            self.migration_bytes += kv["kv_bytes"]
+        else:
+            self.handoffs += 1
+        self.pending.append(pkt)
+
+    def _route(self, pkt: SlotPacket) -> Worker | None:
+        """Least-loaded routable decode worker that can take ``pkt``."""
+        best = None
+        for w in self.decode_workers:
+            if not w.alive or w.draining:
+                continue
+            live = len(w.live_slots())
+            if live >= self._budget_slots(w) or w.free_slot() is None:
+                continue
+            if not w.eng.kv.can_admit(pkt.n_prompt, pkt.budget):
+                continue
+            if best is None or live < len(best.live_slots()):
+                best = w
+        return best
+
+    def _place_pending(self):
+        if self.pending:
+            self._check_routable()
+        still: deque[SlotPacket] = deque()
+        while self.pending:
+            pkt = self.pending.popleft()
+            w = self._route(pkt)
+            if w is None:
+                still.append(pkt)  # transient: capacity frees as slots
+                continue           # retire; budget throttles admission
+            slot = w.free_slot()
+            eng = w.eng
+            with jax.default_device(w.device):
+                eng.kv.import_slot(pkt.kv, slot, pkt.n_prompt, pkt.budget)
+            eng.slot_req[slot] = pkt.req
+            eng.slot_len[slot] = pkt.gen_len
+            eng.slot_pos[slot] = pkt.pos
+            eng.slot_tok[slot, 0] = pkt.tok
+            eng.slot_rid[slot] = pkt.req.rid
+            eng.slot_seed[slot] = pkt.seed
+            eng.slot_nprompt[slot] = pkt.n_prompt
+        self.pending = still
+
+    # -- metrics -----------------------------------------------------------
+    def summary(self) -> dict:
+        done = self.finished
+        if not done:
+            return {"requests": 0}
+        lat = [r.latency_s for r in done]
+        ttft = [r.ttft_s for r in done]
+        toks = sum(len(r.output) for r in done)
+        wall = max(r.t_done for r in done) - min(r.t_submit for r in done)
+        dws = self.decode_workers
+        return {
+            "requests": len(done),
+            "tokens": toks,
+            "tokens_per_s": toks / wall if wall > 0 else float("inf"),
+            "qps": len(done) / wall if wall > 0 else float("inf"),
+            "mean_latency_s": float(np.mean(lat)),
+            "mean_ttft_s": float(np.mean(ttft)),
+            "ttft_p50_s": float(np.percentile(ttft, 50)),
+            "ttft_p99_s": float(np.percentile(ttft, 99)),
+            "mean_itl_s": float(np.mean(
+                [r.itl_s for r in done if len(r.output) > 1] or [0.0])),
+            "n_prefill": len(self.prefill_workers),
+            "n_decode": len(dws),
+            "handoffs": self.handoffs,
+            "migrations": self.migrations,
+            "max_migration_hops": max(self._req_hops.values(), default=0),
+            "kv_transfer_bytes": self.kv_transfer_bytes,
+            "migration_bytes": self.migration_bytes,
+            "prefills": sum(w.eng.prefills for w in self.prefill_workers),
+            "decode_dispatches": sum(w.eng.decode_dispatches for w in dws),
+            "decode_steps": sum(w.eng.decode_steps for w in dws),
+            # the single-dispatch invariant holds per worker
+            "dispatches_per_step": (
+                sum(w.eng.decode_dispatches for w in dws)
+                / max(1, sum(w.eng.decode_steps for w in dws))),
+            "straggler_events": sum(len(w.monitor.events) for w in dws),
+            "workers_alive": sum(w.alive for w in dws),
+            "kv_cache": dws[0].eng.kv.name,
+            # decode-tier KV residency (prefill workers release at export)
+            "resident_kv_bytes": sum(
+                w.eng.kv.peak_resident_kv_bytes for w in dws),
+            "per_worker": [
+                {"role": w.role, "idx": w.idx, "device": str(w.device),
+                 "alive": w.alive, "draining": w.draining, "steps": w.steps,
+                 "decode_dispatches": w.eng.decode_dispatches,
+                 "straggler_events": len(w.monitor.events)}
+                for w in self.prefill_workers + dws],
+        }

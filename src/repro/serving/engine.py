@@ -246,16 +246,23 @@ class ServingEngine:
         self.spec_drafted = 0        # candidate tokens actually proposed
         self.spec_committed = 0      # tokens committed by verify steps
         self.spec_draft_accepted = 0  # committed tokens drafted (not bonus)
-        # bucketed prefill only where right-padding is harmless: causal
-        # attention masks pad KV per-row; recurrent state (ssm/hybrid)
-        # would advance through pads, rolling SWA would roll them in.
+        # bucketed prefill where right-padding is harmless: causal
+        # attention masks pad KV per-row, and recurrent families
+        # (ssm/hybrid) run a length-masked scan — pad steps get decay 1
+        # and zero input, so the state handed to decode is bitwise the
+        # exact-length one. Rolling SWA stays exact-length: its cache
+        # would roll the pads in.
         self._bucketed = (ecfg.prefill_bucket_min > 0
                           and cfg.family in MD.TRANSFORMER_FAMILIES
-                          + ("audio",)
+                          + ("audio",) + MD.RECURRENT_FAMILIES
                           and cfg.sliding_window is None)
+        # only recurrent families need the mask; attention families keep
+        # their exact pre-mask graph (bitwise-stability across PRs)
+        masked = cfg.family in MD.RECURRENT_FAMILIES
 
-        def _prefill_one(params, batch, last_idx):
-            return MD.prefill(params, cfg, batch, C, logit_index=last_idx)
+        def _prefill_one(params, batch, last_idx, n_valid):
+            return MD.prefill(params, cfg, batch, C, logit_index=last_idx,
+                              length=n_valid if masked else None)
 
         def _decode_ragged(params, toks, cache, pos, live):
             """One fully-ragged dispatch: every live slot advances at
@@ -665,7 +672,8 @@ class ServingEngine:
                 jnp.bfloat16 if self.cfg.dtype == "bfloat16"
                 else jnp.float32)
         logits, rows = self._prefill_one(
-            self.params, batch, jnp.asarray(n_prompt - 1, jnp.int32))
+            self.params, batch, jnp.asarray(n_prompt - 1, jnp.int32),
+            jnp.asarray(n_prompt, jnp.int32))
         self.prefills += 1
         req.prefill_chunks = 1
         seed = req.seed if req.seed is not None else self.ecfg.seed

@@ -163,6 +163,30 @@ class KVCacheManager(Protocol):
         """Release slot state at retirement."""
         ...
 
+    def export_slot(self, slot: int, n_valid: int) -> dict:
+        """Pack slot ``slot``'s live cache state — KV positions
+        ``0 .. n_valid - 1`` plus any recurrent/cross state — into a
+        host-side packet for handoff to another worker's cache
+        (disaggregated prefill→decode, or mid-stream slot migration).
+        The packet is backend-portable: KV travels as dense per-layer
+        rows, so a paged exporter can hand off to a contiguous importer
+        and vice versa. ``packet["kv_bytes"]`` is the number of bytes
+        that crossed the device boundary (what the cluster charges as
+        transfer cost)."""
+        ...
+
+    def import_slot(self, packet: dict, slot: int, n_prompt: int,
+                    budget: int) -> None:
+        """Unpack a :meth:`export_slot` packet into ``slot`` on this
+        (importing) cache. ``n_prompt``/``budget`` are the request's
+        original admission parameters: paged backends re-run the
+        worst-case reservation math against them — allocate the blocks
+        the packet's positions need now, hold the rest as a reservation
+        — so a migrated request can no more deadlock the pool than a
+        locally admitted one. Callers must gate on :meth:`can_admit`
+        with the same arguments first."""
+        ...
+
     def resident_kv_bytes(self) -> int:
         """Bytes of KV state currently resident."""
         ...
@@ -217,6 +241,16 @@ class BlockAllocator:
             raise ValueError(f"double free or foreign block: {blk}")
         self._allocated.remove(blk)
         self._free.append(blk)
+
+
+EXPORT_QUANTUM = 16   # exported KV spans round up to this many positions
+                      # (bounded set of handoff shapes -> bounded compiles)
+
+
+def _export_span(n_valid: int) -> int:
+    """Positions an exported KV row carries for ``n_valid`` valid ones."""
+    n = max(int(n_valid), 1)
+    return math.ceil(n / EXPORT_QUANTUM) * EXPORT_QUANTUM
 
 
 # ---------------------------------------------------------------------------
@@ -304,6 +338,50 @@ class ContiguousCache:
     def free(self, slot: int) -> None:
         pass  # rows are overwritten by the next admit
 
+    def export_slot(self, slot: int, n_valid: int) -> dict:
+        """Pack the slot's row of every batched leaf. KV leaves are
+        position-sliced to ``n_valid`` rounded up to the export quantum
+        (bounded set of import-splice shapes); recurrent / cross-
+        attention leaves travel whole — they are O(1) in the sequence
+        length."""
+        axes = MD.cache_batch_axes(self._cache)
+        packet = {"n_valid": int(n_valid)}
+        nbytes = 0
+        for name, arr in self._cache.items():
+            ax = axes[name]
+            if ax is None:
+                continue
+            row = jax.lax.dynamic_slice_in_dim(arr, slot, 1, axis=ax)
+            if name in ("k", "v"):
+                p = min(_export_span(n_valid), arr.shape[2])
+                row = jax.lax.slice_in_dim(row, 0, p, axis=2)
+            host = np.asarray(jax.device_get(row))
+            packet[name] = host
+            nbytes += host.nbytes
+        packet["kv_bytes"] = nbytes
+        return packet
+
+    def import_slot(self, packet: dict, slot: int, n_prompt: int,
+                    budget: int) -> None:
+        axes = MD.cache_batch_axes(self._cache)
+        rows = {}
+        for name, arr in self._cache.items():
+            ax = axes[name]
+            if ax is None:
+                continue
+            row = packet[name]
+            if name in ("k", "v") and row.shape[2] != arr.shape[2]:
+                # zero-pad the exported span back to full capacity so
+                # the admission splice (one compiled shape) can land it;
+                # pad positions are garbage the per-row length masks,
+                # and decode overwrites them as the stream advances.
+                pad = [(0, 0)] * row.ndim
+                pad[2] = (0, arr.shape[2] - row.shape[2])
+                row = np.pad(row, pad)
+            rows[name] = jnp.asarray(row)
+        self._cache = self._splice(self._cache, rows,
+                                   jnp.asarray(slot, jnp.int32))
+
     def resident_kv_bytes(self) -> int:
         return self._footprint
 
@@ -378,6 +456,21 @@ class PagedCache:
             return pk, pv
 
         self._splice_pos = jax.jit(_splice_pos)  # one compile per chunk shape
+
+        def _import_blocks(pool_k, pool_v, rows_k, rows_v, blocks):
+            # handoff import: dense rows (L, 1, nblk*bs, H, Dh) -> the
+            # freshly allocated blocks of an imported slot. All entries
+            # of ``blocks`` are real (the importer allocates exactly the
+            # packet's span), so no sentinel handling is needed.
+            L, _, _, H, Dh = rows_k.shape
+            nblk = blocks.shape[0]
+            rk = rows_k[:, 0].reshape(L, nblk, bs, H, Dh)
+            rv = rows_v[:, 0].reshape(L, nblk, bs, H, Dh)
+            pool_k = pool_k.at[:, blocks].set(rk.astype(pool_k.dtype))
+            pool_v = pool_v.at[:, blocks].set(rv.astype(pool_v.dtype))
+            return pool_k, pool_v
+
+        self._import_blocks = jax.jit(_import_blocks)  # one per block count
 
     # -- accounting -------------------------------------------------------
     def _need_blocks(self, n_prompt: int, budget: int) -> int:
@@ -496,6 +589,51 @@ class PagedCache:
                 self.allocator.free(int(blk))
         self.table[slot] = self.num_blocks
         self._reserved[slot] = 0
+
+    def export_slot(self, slot: int, n_valid: int) -> dict:
+        """Block-table-aware pack: gather the slot's allocated blocks
+        (lazy allocation fills them as a contiguous prefix, so the
+        first ``ceil(n_valid / bs)`` table entries are all real) into
+        dense per-layer rows — the backend-portable handoff format."""
+        bs = self.block_size
+        nblk = max(1, math.ceil(max(int(n_valid), 1) / bs))
+        idx = jnp.asarray(self.table[slot, :nblk], jnp.int32)
+        l = self._pool_k.shape[0]
+        tail = self._pool_k.shape[3:]
+        k = self._pool_k[:, idx].reshape(l, 1, nblk * bs, *tail)
+        v = self._pool_v[:, idx].reshape(l, 1, nblk * bs, *tail)
+        packet = {"n_valid": int(n_valid),
+                  "k": np.asarray(jax.device_get(k)),
+                  "v": np.asarray(jax.device_get(v))}
+        packet["kv_bytes"] = packet["k"].nbytes + packet["v"].nbytes
+        return packet
+
+    def import_slot(self, packet: dict, slot: int, n_prompt: int,
+                    budget: int) -> None:
+        """Unpack into freshly allocated blocks and re-run the
+        reservation math: the request's worst case (``n_prompt`` +
+        ``budget``, the same bound blocking admission charges) minus
+        the blocks allocated now stays reserved, so the migrated
+        request keeps the no-mid-decode-deadlock guarantee on the
+        importing pool. Callers gate on :meth:`can_admit` first."""
+        bs = self.block_size
+        n_valid = int(packet["n_valid"])
+        now = max(1, math.ceil(max(n_valid, 1) / bs))
+        need = self._need_blocks(n_prompt, budget)
+        blocks = [self.allocator.alloc() for _ in range(now)]
+        self.table[slot, :now] = blocks
+        self._reserved[slot] = max(0, need - now)
+        span = now * bs
+        rows_k, rows_v = packet["k"], packet["v"]
+        if rows_k.shape[2] < span:  # cross-backend: re-quantize the span
+            pad = [(0, 0)] * rows_k.ndim
+            pad[2] = (0, span - rows_k.shape[2])
+            rows_k = np.pad(rows_k, pad)
+            rows_v = np.pad(rows_v, pad)
+        self._pool_k, self._pool_v = self._import_blocks(
+            self._pool_k, self._pool_v,
+            jnp.asarray(rows_k[:, :, :span]), jnp.asarray(rows_v[:, :, :span]),
+            jnp.asarray(blocks, jnp.int32))
 
     def resident_kv_bytes(self) -> int:
         return (self.allocator.allocated_blocks * self.block_size

@@ -1,0 +1,397 @@
+"""Disaggregated prefill/decode cluster serving: KV handoff packets,
+the least-loaded router, fault-tolerant slot migration, and the
+analytical mirror (simulator cluster mode + the heterogeneous
+xPU-prefill/PIM-decode TCO scenario)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.models import model as MD
+from repro.serving import (ClusterConfig, ClusterEngine, EngineConfig,
+                           ServingEngine)
+
+KEY = jax.random.PRNGKey(5)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = registry.get_smoke_config("qwen1.5-0.5b").replace(dtype="float32")
+    params = MD.init_params(KEY, cfg)
+    return cfg, params
+
+
+def _prompts(cfg, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, size=int(n)) for n in lens]
+
+
+def _single_outputs(params, cfg, prompts, kv_cache, **ecfg_kw):
+    eng = ServingEngine(params, cfg, EngineConfig(kv_cache=kv_cache,
+                                                  **ecfg_kw))
+    for p in prompts:
+        eng.submit(p)
+    eng.run()
+    return {r.rid: r.output for r in eng.finished}
+
+
+# ---------------------------------------------------------------------------
+# export/import round trips (the KV handoff primitive)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kv_cache", ["contiguous", "paged"])
+def test_export_import_roundtrip_preserves_stream(setup, kv_cache):
+    """Prefill on one engine, export the slot, import it into a *fresh*
+    engine at a different slot index, decode there: the continued
+    stream must be bitwise the single-engine stream."""
+    cfg, params = setup
+    [prompt] = _prompts(cfg, [11])
+    kw = dict(max_batch=2, max_seq_len=64, max_new_tokens=6)
+    want = _single_outputs(params, cfg, [prompt], kv_cache, **kw)[0]
+
+    src = ServingEngine(params, cfg, EngineConfig(kv_cache=kv_cache, **kw))
+    req = src.submit(prompt)
+    src.scheduler.admit(src)     # prefill + bind, no decode yet
+    slot = next(i for i, r in enumerate(src.slot_req) if r is not None)
+    pkt = src.kv.export_slot(slot, int(src.slot_pos[slot]))
+    assert pkt["kv_bytes"] > 0 and pkt["n_valid"] == int(src.slot_pos[slot])
+
+    dst = ServingEngine(params, cfg, EngineConfig(kv_cache=kv_cache, **kw))
+    n_prompt = int(src.slot_nprompt[slot])
+    assert dst.kv.can_admit(n_prompt, 6)
+    dst.kv.import_slot(pkt, 1, n_prompt, 6)
+    dst.slot_req[1] = req
+    dst.slot_len[1] = int(src.slot_len[slot])
+    dst.slot_pos[1] = int(src.slot_pos[slot])
+    dst.slot_tok[1, 0] = int(src.slot_tok[slot, 0])
+    dst.slot_rid[1] = req.rid
+    dst.slot_seed[1] = int(src.slot_seed[slot])
+    dst.slot_nprompt[1] = n_prompt
+    dst.run()
+    assert dst.finished[0].output == want
+
+
+def test_paged_import_reallocates_blocks_and_recredits_reservation(setup):
+    """The paged importer must re-run the worst-case reservation math:
+    blocks for the packet's positions allocate now, the rest of the
+    request's admission bound stays reserved — and retirement returns
+    the pool to empty (no leak, no stranded reservation)."""
+    cfg, params = setup
+    kw = dict(max_batch=2, max_seq_len=64, max_new_tokens=8,
+              kv_block_size=16)
+    budget = 8
+    [prompt] = _prompts(cfg, [21])
+    src = ServingEngine(params, cfg, EngineConfig(kv_cache="paged", **kw))
+    req = src.submit(prompt)
+    src.scheduler.admit(src)
+    slot = next(i for i, r in enumerate(src.slot_req) if r is not None)
+    n_prompt = int(src.slot_nprompt[slot])
+    n_valid = int(src.slot_pos[slot])
+    pkt = src.kv.export_slot(slot, n_valid)
+
+    dst = ServingEngine(params, cfg, EngineConfig(kv_cache="paged", **kw))
+    dst.kv.import_slot(pkt, 0, n_prompt, budget)
+    bs = dst.kv.block_size
+    now = math.ceil(n_valid / bs)
+    need = dst.kv._need_blocks(n_prompt, budget)
+    assert dst.kv.allocator.allocated_blocks == now
+    assert int(dst.kv._reserved[0]) == need - now
+    # the import is exactly as deadlock-safe as local admission: a
+    # second request sees free - outstanding, not just free
+    assert dst.kv.can_admit(n_prompt, budget)
+    dst.kv.free(0)
+    assert dst.kv.allocator.allocated_blocks == 0
+    assert int(dst.kv._reserved[0]) == 0
+
+
+def test_export_packet_is_backend_portable(setup):
+    """A paged export must land on a contiguous importer (and vice
+    versa) — the packet format is dense rows, not block tables."""
+    cfg, params = setup
+    kw = dict(max_batch=2, max_seq_len=64, max_new_tokens=5)
+    [prompt] = _prompts(cfg, [13])
+    want = _single_outputs(params, cfg, [prompt], "contiguous", **kw)[0]
+    for src_kv, dst_kv in (("paged", "contiguous"), ("contiguous", "paged")):
+        src = ServingEngine(params, cfg,
+                            EngineConfig(kv_cache=src_kv, **kw))
+        req = src.submit(prompt)
+        src.scheduler.admit(src)
+        slot = next(i for i, r in enumerate(src.slot_req) if r is not None)
+        pkt = src.kv.export_slot(slot, int(src.slot_pos[slot]))
+        dst = ServingEngine(params, cfg,
+                            EngineConfig(kv_cache=dst_kv, **kw))
+        n_prompt = int(src.slot_nprompt[slot])
+        dst.kv.import_slot(pkt, 0, n_prompt, 5)
+        dst.slot_req[0] = req
+        dst.slot_len[0] = int(src.slot_len[slot])
+        dst.slot_pos[0] = int(src.slot_pos[slot])
+        dst.slot_tok[0, 0] = int(src.slot_tok[slot, 0])
+        dst.slot_rid[0] = req.rid
+        dst.slot_seed[0] = int(src.slot_seed[slot])
+        dst.slot_nprompt[0] = n_prompt
+        dst.run()
+        assert dst.finished[0].output == want, (src_kv, dst_kv)
+
+
+# ---------------------------------------------------------------------------
+# cluster == single engine (the tentpole equivalence)
+# ---------------------------------------------------------------------------
+
+CLUSTER_ARCHS = ["qwen1.5-0.5b",        # dense
+                 "deepseek-moe-16b",    # moe
+                 "internvl2-26b"]       # vlm (image-prefix positions)
+
+
+@pytest.mark.parametrize("arch", CLUSTER_ARCHS)
+@pytest.mark.parametrize("kv_cache", ["contiguous", "paged"])
+def test_cluster_matches_single_engine(arch, kv_cache):
+    """Greedy streams through 1 prefill + 2 decode workers (KV handoff
+    at the phase boundary, least-loaded routing) are bitwise the single
+    blocking engine's — including one forced mid-stream migration."""
+    cfg = registry.get_smoke_config(arch).replace(dtype="float32")
+    params = MD.init_params(KEY, cfg)
+    prompts = _prompts(cfg, [7, 12, 19, 9, 15, 6], seed=1)
+    kw = dict(max_batch=2, max_seq_len=64, max_new_tokens=5)
+    want = _single_outputs(params, cfg, prompts, kv_cache, **kw)
+
+    clu = ClusterEngine(params, cfg,
+                        EngineConfig(kv_cache=kv_cache, **kw),
+                        ClusterConfig(n_prefill=1, n_decode=2))
+    for p in prompts:
+        clu.submit(p)
+    for _ in range(2):
+        clu.step()
+    clu.kill_worker(0)          # forced mid-stream slot migration
+    clu.run()
+    got = {r.rid: r.output for r in clu.finished}
+    assert got == want
+    s = clu.summary()
+    assert s["migrations"] >= 1
+    assert s["workers_alive"] == 1
+    assert s["kv_transfer_bytes"] > 0
+    # the single-dispatch invariant survives per worker
+    assert s["dispatches_per_step"] == 1.0
+
+
+def test_cluster_recurrent_family_contiguous():
+    """Recurrent state (hybrid: mamba state + conv + attention KV)
+    travels in the handoff packet; drain migration keeps streams
+    bitwise."""
+    cfg = registry.get_smoke_config("zamba2-2.7b").replace(dtype="float32")
+    params = MD.init_params(KEY, cfg)
+    prompts = _prompts(cfg, [8, 13, 6, 10], seed=2)
+    kw = dict(max_batch=2, max_seq_len=64, max_new_tokens=4)
+    want = _single_outputs(params, cfg, prompts, "contiguous", **kw)
+    clu = ClusterEngine(params, cfg, EngineConfig(**kw),
+                        ClusterConfig(n_prefill=1, n_decode=2))
+    for p in prompts:
+        clu.submit(p)
+    for _ in range(2):
+        clu.step()
+    clu.drain_worker(0)
+    clu.run()
+    assert {r.rid: r.output for r in clu.finished} == want
+    assert clu.summary()["migrations"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# router / admission policy
+# ---------------------------------------------------------------------------
+
+def test_router_balances_decode_workers(setup):
+    """Least-loaded routing spreads a slot-filling wave across both
+    decode workers instead of stacking one."""
+    cfg, params = setup
+    clu = ClusterEngine(params, cfg, EngineConfig(
+        max_batch=4, max_seq_len=64, max_new_tokens=8),
+        ClusterConfig(n_prefill=1, n_decode=2))
+    for p in _prompts(cfg, [8, 9, 10, 11], seed=3):
+        clu.submit(p)
+    clu.step()
+    loads = [len(w.live_slots()) for w in clu.decode_workers]
+    assert loads == [2, 2], loads
+
+
+def test_in_flight_budget_caps_worker_load(setup):
+    """ClusterConfig.in_flight bounds each decode worker's live
+    requests below its slot count, and admission backpressure holds
+    the rest in the cluster queue rather than as stranded packets."""
+    cfg, params = setup
+    clu = ClusterEngine(params, cfg, EngineConfig(
+        max_batch=4, max_seq_len=64, max_new_tokens=8),
+        ClusterConfig(n_prefill=1, n_decode=2, in_flight=1))
+    for p in _prompts(cfg, [8, 9, 10, 11], seed=4):
+        clu.submit(p)
+    max_load = 0
+    while clu.waiting or clu.pending or clu._any_live():
+        clu.step()
+        max_load = max(max_load,
+                       *(len(w.live_slots()) for w in clu.decode_workers))
+    assert max_load == 1
+    assert len(clu.finished) == 4
+
+
+def test_cluster_rejects_nonblocking_scheduler(setup):
+    cfg, params = setup
+    with pytest.raises(ValueError, match="blocking"):
+        ClusterEngine(params, cfg,
+                      EngineConfig(max_batch=2, max_seq_len=64,
+                                   scheduler="chunked"),
+                      ClusterConfig())
+
+
+def test_no_routable_decode_worker_raises(setup):
+    cfg, params = setup
+    clu = ClusterEngine(params, cfg, EngineConfig(
+        max_batch=2, max_seq_len=64, max_new_tokens=4),
+        ClusterConfig(n_prefill=1, n_decode=1))
+    clu.submit(_prompts(cfg, [8], seed=5)[0])
+    clu.kill_worker(0)
+    with pytest.raises(RuntimeError, match="no routable decode worker"):
+        clu.run()
+
+
+def test_drain_refuses_last_routable_worker(setup):
+    """Draining needs a migration target: the last routable decode
+    worker warns and no-ops instead of stranding the cluster, and the
+    run still completes on it."""
+    cfg, params = setup
+    clu = ClusterEngine(params, cfg, EngineConfig(
+        max_batch=2, max_seq_len=64, max_new_tokens=4),
+        ClusterConfig(n_prefill=1, n_decode=1))
+    clu.submit(_prompts(cfg, [8], seed=6)[0])
+    clu.step()
+    with pytest.warns(UserWarning, match="refusing to drain"):
+        clu.drain_worker(0)
+    assert not clu.decode_workers[0].draining
+    clu.run()
+    assert len(clu.finished) == 1
+
+
+def test_migration_hops_accumulate(setup):
+    """A request migrated twice records hops=2 (per-request migration
+    accounting, surfaced as summary()['max_migration_hops'])."""
+    cfg, params = setup
+    clu = ClusterEngine(params, cfg, EngineConfig(
+        max_batch=2, max_seq_len=64, max_new_tokens=12),
+        ClusterConfig(n_prefill=1, n_decode=3))
+    clu.submit(_prompts(cfg, [8], seed=7)[0])
+    clu.step()
+    loaded = next(i for i, w in enumerate(clu.decode_workers)
+                  if w.live_slots())
+    clu.drain_worker(loaded)   # hop 1
+    clu.step()
+    loaded = next(i for i, w in enumerate(clu.decode_workers)
+                  if w.live_slots())
+    clu.kill_worker(loaded)    # hop 2
+    clu.run()
+    s = clu.summary()
+    assert s["migrations"] == 2
+    assert s["max_migration_hops"] == 2
+    assert len(clu.finished) == 1
+
+
+# ---------------------------------------------------------------------------
+# migration property (hypothesis)
+# ---------------------------------------------------------------------------
+
+def test_migration_loses_no_tokens_property():
+    """Property: killing or draining a decode worker at a random step
+    mid-run loses no tokens — every request retires with exactly the
+    single-engine stream — on both KV backends."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    cfg = registry.get_smoke_config("qwen1.5-0.5b").replace(dtype="float32")
+    params = MD.init_params(KEY, cfg)
+    kw = dict(max_batch=2, max_seq_len=64, max_new_tokens=4)
+    singles = {}
+
+    @given(lens=st.lists(st.integers(1, 40), min_size=1, max_size=6),
+           fault_step=st.integers(1, 6),
+           fault=st.sampled_from(["kill", "drain"]),
+           kv_cache=st.sampled_from(["contiguous", "paged"]))
+    @settings(max_examples=8, deadline=None)
+    def prop(lens, fault_step, fault, kv_cache):
+        prompts = [np.arange(n) % cfg.vocab_size for n in lens]
+        skey = (tuple(lens), kv_cache)
+        if skey not in singles:
+            singles[skey] = _single_outputs(params, cfg, prompts,
+                                            kv_cache, **kw)
+        clu = ClusterEngine(params, cfg,
+                            EngineConfig(kv_cache=kv_cache, **kw),
+                            ClusterConfig(n_prefill=1, n_decode=2))
+        for p in prompts:
+            clu.submit(p)
+        steps = 0
+        while clu.waiting or clu.pending or clu._any_live():
+            clu.step()
+            steps += 1
+            if steps == fault_step:
+                if fault == "kill":
+                    clu.kill_worker(1)
+                else:
+                    clu.drain_worker(1)
+            assert steps < 500, "cluster failed to drain"
+        assert len(clu.finished) == len(prompts)
+        got = {r.rid: r.output for r in clu.finished}
+        assert got == singles[skey]
+
+    prop()
+
+
+# ---------------------------------------------------------------------------
+# analytical mirror
+# ---------------------------------------------------------------------------
+
+def test_simulator_cluster_serve_charges_transfer():
+    from repro.core import profiles as HW
+    from repro.core.simulator import LLMSimulator, SimConfig
+    from repro.serving.kv_cache import kv_bytes_per_token
+
+    cfg = registry.get_config("qwen1.5-0.5b")
+    sim = LLMSimulator(cfg, HW.PIM_AI_CHIP, SimConfig())
+    n_ins = [12, 20, 8, 16]
+    r = sim.serve(n_ins, 8, cluster=(1, 2))
+    assert r["cluster"] == (1, 2)
+    # one handoff per request: prompt positions x bytes/token
+    want = sum(n_ins) * kv_bytes_per_token(cfg)
+    assert r["kv_transfer_bytes"] == pytest.approx(want)
+    assert r["kv_transfer_s"] > 0
+    # two decode workers each step their sub-batch
+    assert r["decode_dispatches"] == 2 * 8
+    base = sim.serve(n_ins, 8)
+    # decode wall-clock can only improve when the batch splits across
+    # parallel workers (energy is conserved, seconds take the max)
+    assert r["decode"].seconds <= base["decode"].seconds * (1 + 1e-9)
+
+
+def test_simulator_cluster_requires_blocking():
+    from repro.core import profiles as HW
+    from repro.core.simulator import LLMSimulator, SimConfig
+
+    sim = LLMSimulator(registry.get_config("qwen1.5-0.5b"),
+                       HW.PIM_AI_CHIP, SimConfig())
+    with pytest.raises(ValueError, match="blocking"):
+        sim.serve([8, 8], 4, cluster=(1, 2), scheduler="chunked")
+
+
+def test_run_cloud_disaggregated_reports_tco_vs_both_baselines():
+    from repro.core.scenarios import run_cloud_disaggregated
+
+    r = run_cloud_disaggregated("llama2-70b", "gqa", n_in=64, n_out=8)
+    for system in ("disaggregated", "dgx-h100", "pim-ai-4srv"):
+        assert r["tco"][system]["tco_per_qps"] > 0
+    for key in ("tco_per_qps_vs_h100", "tco_per_qps_vs_pim",
+                "energy_per_query_vs_h100", "energy_per_query_vs_pim"):
+        assert np.isfinite(r["ratios"][key])
+    assert r["kv_transfer"]["bytes"] > 0
+    assert r["kv_transfer"]["seconds"] > 0
+    assert r["engines_per_xpu"] > 0
+    # phase placement: prefill charged on the xPU, decode on PIM
+    assert r["prefill"]["profile"] == "dgx-h100"
+    assert r["decode"]["profile"].startswith("pim-ai-engine")

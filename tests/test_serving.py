@@ -294,7 +294,9 @@ def test_hybrid_family_ragged_engine():
     want = [straight_line_generate(params, cfg, p, 4, 48) for p in prompts]
     eng = ServingEngine(params, cfg, EngineConfig(
         max_batch=4, max_seq_len=48, max_new_tokens=4))
-    assert not eng._bucketed  # recurrent state cannot absorb pad tokens
+    # recurrent prefill buckets via the length-masked scan: pad steps
+    # get decay 1 / zero input, so the state is the exact-length one
+    assert eng._bucketed
     for p in prompts:
         eng.submit(p)
     eng.run()
@@ -302,3 +304,29 @@ def test_hybrid_family_ragged_engine():
     got = {r.rid: r.output for r in eng.finished}
     for i, w in enumerate(want):
         assert got[i] == w, f"hybrid ragged request {i}"
+
+
+@pytest.mark.parametrize("arch", ["xlstm-350m", "zamba2-2.7b"])
+def test_recurrent_bucketed_prefill_matches_exact(arch):
+    """Bucketed (right-padded) prefill for recurrent families must be
+    bitwise the exact-length prefill: the length-masked scan gives pad
+    steps decay 1 and zero input — the same values the SSD engine's
+    internal chunk padding uses — so the state handed to decode is
+    identical, and so is every generated token. Also pins the compile
+    win: prompts sharing a bucket share one prefill compile."""
+    cfg = registry.get_smoke_config(arch).replace(dtype="float32")
+    params = MD.init_params(jax.random.PRNGKey(2), cfg)
+    rng = np.random.default_rng(11)
+    lens = [3, 7, 13, 21, 17]
+    prompts = [rng.integers(0, cfg.vocab_size, size=n) for n in lens]
+    outs = {}
+    for bucket in (0, 16):   # 0 disables bucketing -> exact-length path
+        eng = ServingEngine(params, cfg, EngineConfig(
+            max_batch=2, max_seq_len=64, max_new_tokens=5,
+            prefill_bucket_min=bucket))
+        assert eng._bucketed == (bucket > 0)
+        for p in prompts:
+            eng.submit(p)
+        eng.run()
+        outs[bucket] = {r.rid: r.output for r in eng.finished}
+    assert outs[16] == outs[0]
