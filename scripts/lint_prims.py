@@ -1,0 +1,85 @@
+"""CI lint: every registry model's serving closures must price cleanly.
+
+For each arch (assigned + paper models) this traces the *engine's own*
+prefill and ragged-decode dispatch closures through the static cost
+model (``core/costmodel.DispatchPricer``) and fails — nonzero exit —
+if any primitive lands in the ``"other"`` classification bucket while
+moving more than ``--threshold`` bytes. An "other" primitive carries
+zero FLOPs through the simulator and the roofline, so a heavy one is a
+silent undercount: either teach ``core/trace.py`` to classify it or
+justify it below the threshold.
+
+Usage: python scripts/lint_prims.py [--threshold BYTES] [arch ...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import warnings
+
+from repro.configs import registry
+from repro.core import costmodel as CM
+from repro.core import trace as T
+
+PREFILL_TOKENS = 16
+DECODE_MAX_LEN = 64
+BATCH = 2
+
+
+def offenders(ops, threshold: float) -> list[str]:
+    out = []
+    for o in ops:
+        if o.kind != "other":
+            continue
+        nbytes = o.in_bytes + o.out_bytes
+        if nbytes > threshold:
+            out.append(f"{o.prim} ({nbytes:.0f} B)")
+    return out
+
+
+def lint_arch(name: str, threshold: float) -> list[str]:
+    cfg = registry.get_smoke_config(name)
+    pricer = CM.DispatchPricer(cfg)
+    problems = []
+    with warnings.catch_warnings():
+        # recurrent-family while bodies warn (charged 1 iteration);
+        # that undercount is tracked via approx_ops, not this lint
+        warnings.simplefilter("ignore", T.TraceUndercountWarning)
+        pre = pricer.prefill_ops(BATCH, PREFILL_TOKENS)
+        dec = pricer.decode_ops_linear(BATCH, DECODE_MAX_LEN, ragged=True)
+    for label, ops in (("prefill", pre),
+                       ("decode", [o.at(DECODE_MAX_LEN) for o in dec])):
+        bad = offenders(ops, threshold)
+        if bad:
+            problems.append(f"{label}: " + ", ".join(bad))
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("archs", nargs="*",
+                    help="arch ids (default: every registry model)")
+    ap.add_argument("--threshold", type=float, default=4096.0,
+                    help="max bytes an 'other' primitive may move")
+    args = ap.parse_args(argv)
+    archs = args.archs or registry.list_archs(assigned_only=False)
+    failed = 0
+    for name in archs:
+        try:
+            problems = lint_arch(name, args.threshold)
+        except Exception as e:  # noqa: BLE001 — a closure that won't
+            problems = [f"trace failed: {type(e).__name__}: {e}"]  # trace
+        if problems:                                # is itself lint-fatal
+            failed += 1
+            for p in problems:
+                print(f"FAIL {name:20s} {p}")
+        else:
+            print(f"OK   {name}")
+    if failed:
+        print(f"\n{failed}/{len(archs)} archs have unpriced heavy "
+              f"primitives (threshold {args.threshold:.0f} B)")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

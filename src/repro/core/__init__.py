@@ -2,8 +2,18 @@
 the analytical LLM-inference hardware simulator.
 
 - profiles:   Table-1 hardware profiles + PIM chip/DIMM/server composition
-- trace:      jaxpr op-stream tracer (the PyTorch-interception analogue)
-- simulator:  per-op time/energy roofline model, encode/decode phases
+- trace:      jaxpr op-stream tracer (the PyTorch-interception analogue):
+              classifies every primitive, multiplies scan/while trip
+              counts through, descends into ``pallas_call`` to price
+              kernels from their interior jaxpr + BlockSpec DMA plan,
+              and fits two-point linear models in cache length
+- costmodel:  static dispatch pricer over the serving engine's *actual*
+              jitted closures (``serving.engine.build_closures``), plus
+              the dispatch-log audit that CI gates simulator<->engine
+              drift on (``audit_engine`` / ``assert_no_drift``)
+- simulator:  per-op time/energy roofline model over traced op streams;
+              ``serve`` replays blocking/chunked/speculative schedules
+              priced from the same graphs the engine dispatches
 - metrics:    TTFT / tokens-s / energy / QPS / EPQ / 3-yr TCO
 - scenarios:  the paper's cloud + mobile evaluation setups
 """

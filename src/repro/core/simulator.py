@@ -33,6 +33,7 @@ from dataclasses import dataclass, field
 import jax
 import jax.numpy as jnp
 
+from repro.core import costmodel as CM
 from repro.core import trace as T
 from repro.core.profiles import HardwareProfile
 from repro.models import model as MD
@@ -104,6 +105,22 @@ def _op_cost(op: T.OpRecord, hw: HardwareProfile, sim: SimConfig
                       + bytes_total * 8 * hw.mem_pj_per_bit) * 1e-12
         r.ops = op.flops
         r.mem_bytes = bytes_total
+    elif op.kind == "kernel":
+        # hand-tiled pallas kernel: the tracer derived its exact DMA
+        # traffic from the BlockSpecs (KV streamed once, blocks
+        # resident along invariant grid axes) and its FLOPs from the
+        # kernel-interior jaxpr multiplied through the grid — charge
+        # the roofline over those numbers directly.
+        bytes_total = (op.in_bytes + op.out_bytes) * ascale
+        t_compute = op.flops / hw.ops_per_s
+        t_mem = bytes_total / (hw.mem_bw_gbs * 1e9)
+        r.compute_s = t_compute
+        r.memory_s = t_mem
+        r.seconds = max(t_compute, t_mem)
+        r.energy_j = (op.flops * hw.pj_per_op * ascale
+                      + bytes_total * 8 * hw.mem_pj_per_bit) * 1e-12
+        r.ops = op.flops
+        r.mem_bytes = bytes_total
     elif op.kind in ("elementwise", "reduce"):
         t = op.flops / hw.vector_ops_per_s
         r.compute_s = t
@@ -158,139 +175,40 @@ class LLMSimulator:
         self.cfg = cfg
         self.hw = hw
         self.sim = sim or SimConfig()
-        self._decode_linear = {}   # keyed (batch, max_len, ragged)
-        self._prefill_cache = {}
-        self._chunk_cache = {}     # keyed (chunk_tokens, capacity)
-        self._verify_linear = {}   # keyed (batch, max_len, gamma, kv)
+        # all traced op streams come from the static cost model, which
+        # prices the serving engine's real dispatch closures
+        # (engine.build_closures -> core/costmodel.DispatchPricer).
+        # The memo dicts are aliased under their historical names so
+        # memoization regressions stay visible to the existing tests.
+        self.pricer = CM.DispatchPricer(cfg)
+        self._decode_linear = self.pricer.decode_linear
+        self._prefill_cache = self.pricer.prefill_cache
+        self._chunk_cache = self.pricer.chunk_cache
+        self._verify_linear = self.pricer.verify_linear
 
-    # -- traced op streams -------------------------------------------------
+    # -- traced op streams (delegated to the dispatch pricer) --------------
     def _prefill_ops(self, batch: int, n_in: int):
-        key = (batch, n_in)
-        if key not in self._prefill_cache:
-            spec = MD.batch_spec(self.cfg, batch, n_in, "prefill")
-            params = jax.eval_shape(
-                lambda k: MD.init_params(k, self.cfg), jax.random.PRNGKey(0))
-
-            def fn(p, b):
-                return MD.prefill(p, self.cfg, b, n_in)
-
-            self._prefill_cache[key] = T.trace_ops(fn, params, spec)
-        return self._prefill_cache[key]
+        return self.pricer.prefill_ops(batch, n_in)
 
     def _decode_ops_linear(self, batch: int, max_len: int, *,
                            ragged: bool = False,
                            kv_cache: str = "contiguous",
                            kv_block_size: int = 16):
-        """Linear-in-cache-length op stream of one decode step.
-
-        Memoized per ``(batch, max_len, ragged, kv_cache, block)`` — a
-        reused simulator must not return the first call's trace for a
-        different batch size or sequence length. ``ragged=True`` traces
-        the serving engine's fully-ragged single-dispatch step: per-row
-        position vector + live mask (masked KV scatter instead of a
-        dynamic-update-slice). ``kv_cache="paged"`` traces the
-        block-table decode graph instead — KV pools sized to the
-        *resident* worst case (``batch * ceil(L/bs)`` blocks) with
-        per-row block-table gathers — so simulated cloud batching
-        charges the same compiled graph, and the same resident KV
-        bytes, as the engine backend it models.
-        """
-        key = (batch, max_len, ragged, kv_cache, kv_block_size)
-        if key not in self._decode_linear:
-            params = jax.eval_shape(
-                lambda k: MD.init_params(k, self.cfg), jax.random.PRNGKey(0))
-
-            def of_len(L):
-                if kv_cache == "paged":
-                    cache = MD.paged_cache_spec(
-                        self.cfg, batch, L, kv_block_size, ragged=ragged)
-                else:
-                    cache = MD.cache_spec(self.cfg, batch, L)
-                tok = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
-                if ragged:
-                    cache["len"] = jax.ShapeDtypeStruct((batch,), jnp.int32)
-                    live = jax.ShapeDtypeStruct((batch,), jnp.bool_)
-
-                    def fn(p, t, c, lv):
-                        return MD.decode_step(p, self.cfg, t, c, live=lv)
-
-                    return fn, (params, tok, cache, live)
-
-                def fn(p, t, c):
-                    return MD.decode_step(p, self.cfg, t, c)
-
-                return fn, (params, tok, cache)
-
-            L1 = max(32, max_len // 2)
-            L2 = max_len
-            if L1 == L2:  # degenerate fit window (max_len == 32)
-                L1 = max(1, L2 // 2)
-            self._decode_linear[key] = T.trace_linear(of_len, L1, L2)
-        return self._decode_linear[key]
+        return self.pricer.decode_ops_linear(
+            batch, max_len, ragged=ragged, kv_cache=kv_cache,
+            kv_block_size=kv_block_size)
 
     def _verify_ops_linear(self, batch: int, max_len: int, gamma: int, *,
                            kv_cache: str = "contiguous",
                            kv_block_size: int = 16):
-        """Linear-in-cache-length op stream of one speculative verify
-        dispatch: ``gamma + 1`` candidate tokens per row against the
-        row's cached history (``model.verify_tokens`` — the real
-        multi-token graph the engine jits, ragged per-row lengths +
-        live mask), traced at two cache lengths exactly like the decode
-        step so the cost model stays honest to the streamed-KV
-        growth."""
-        key = (batch, max_len, gamma, kv_cache, kv_block_size)
-        if key not in self._verify_linear:
-            params = jax.eval_shape(
-                lambda k: MD.init_params(k, self.cfg), jax.random.PRNGKey(0))
+        return self.pricer.verify_ops_linear(
+            batch, max_len, gamma, kv_cache=kv_cache,
+            kv_block_size=kv_block_size)
 
-            def of_len(L):
-                if kv_cache == "paged":
-                    cache = MD.paged_cache_spec(
-                        self.cfg, batch, L, kv_block_size, ragged=True)
-                else:
-                    cache = MD.cache_spec(self.cfg, batch, L)
-                cache["len"] = jax.ShapeDtypeStruct((batch,), jnp.int32)
-                tok = jax.ShapeDtypeStruct((batch, gamma + 1), jnp.int32)
-                live = jax.ShapeDtypeStruct((batch,), jnp.bool_)
-
-                def fn(p, t, c, lv):
-                    return MD.verify_tokens(p, self.cfg, t, c, live=lv)
-
-                return fn, (params, tok, cache, live)
-
-            L1 = max(32, max_len // 2)
-            L2 = max_len
-            if L1 == L2:
-                L1 = max(1, L2 // 2)
-            self._verify_linear[key] = T.trace_linear(of_len, L1, L2)
-        return self._verify_linear[key]
-
-    def _chunk_ops(self, chunk_tokens: int, capacity: int):
-        """Traced op stream of one chunked-prefill dispatch: a
-        ``chunk_tokens`` chunk attending a cached history view of the
-        full ``capacity`` (the real dispatch reads the whole buffer and
-        masks by ``hist_len``, so per-chunk cost is constant in the
-        history length — honest to the implementation, not a hand
-        model)."""
-        key = (chunk_tokens, capacity)
-        if key not in self._chunk_cache:
-            cfg = self.cfg
-            params = jax.eval_shape(
-                lambda k: MD.init_params(k, cfg), jax.random.PRNGKey(0))
-            batch = {"tokens": jax.ShapeDtypeStruct((1, chunk_tokens),
-                                                    jnp.int32)}
-            st = MD.cache_struct(cfg, 1, capacity)
-            kh = jax.ShapeDtypeStruct(*st["k"])
-            vh = jax.ShapeDtypeStruct(*st["v"])
-            hist = jax.ShapeDtypeStruct((), jnp.int32)
-            idx = jax.ShapeDtypeStruct((), jnp.int32)
-
-            def fn(p, b, k, v, h, i):
-                return MD.prefill_chunk(p, cfg, b, k, v, h, logit_index=i)
-
-            self._chunk_cache[key] = T.trace_ops(fn, params, batch, kh, vh,
-                                                 hist, idx)
-        return self._chunk_cache[key]
+    def _chunk_ops(self, chunk_tokens: int, capacity: int,
+                   kind: str = "contiguous", kv_block_size: int = 16):
+        return self.pricer.chunk_ops(chunk_tokens, capacity, kind,
+                                     kv_block_size)
 
     # -- phases --------------------------------------------------------------
     def encode(self, batch: int, n_in: int) -> PhaseResult:
@@ -406,10 +324,10 @@ class LLMSimulator:
                 kv_block_size=kv_block_size, cap=cap,
                 n_prefill=int(cluster[0]), n_decode=int(cluster[1]))
         if scheduler in ("chunked", "speculative"):
-            if (self.cfg.family not in MD.TRANSFORMER_FAMILIES
-                    or self.cfg.sliding_window is not None):
-                # mirror make_scheduler: families these policies cannot
-                # express fall back to the blocking schedule
+            from repro.serving.scheduler import policy_supported
+            if not policy_supported(self.cfg):
+                # the same predicate make_scheduler consults: families
+                # these policies cannot express fall back to blocking
                 import warnings
                 warnings.warn(
                     f"{scheduler} scheduling unsupported for family="
@@ -485,7 +403,8 @@ class LLMSimulator:
                                             paged_resident_kv_bytes)
         batch = len(n_ins)
         chunk_step = PhaseResult()
-        for op in self._chunk_ops(chunk_tokens, cap):
+        for op in self._chunk_ops(chunk_tokens, cap, kv_cache,
+                                  kv_block_size):
             chunk_step.add(_op_cost(op, self.hw, self.sim))
         dec_ops = self._decode_ops_linear(batch, cap, ragged=True,
                                           kv_cache=kv_cache,

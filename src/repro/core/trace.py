@@ -1,24 +1,47 @@
-"""Jaxpr op-stream tracer — the JAX-native analogue of the paper's
-PyTorch layer interception.
+"""Jaxpr op-stream tracer — the measurement substrate of the cost model.
 
 The paper's simulator overrides PyTorch layers/functions and classifies
 each call (GEMM / GEMV / activation / normalization), charging time and
 energy against a hardware profile. Here we walk the **jaxpr** of the
-real JAX model instead: every ``dot_general`` becomes a GEMM/GEMV
-record, elementwise/reduction primitives become vector-ops records, and
-gather/scatter/dynamic-slice become data-movement records. Control flow
-(``scan`` / ``while`` / ``pjit`` / ``remat``) is recursed into with trip
-counts multiplied through — which also makes this tracer the source of
-truth for roofline FLOPs/bytes (XLA's ``cost_analysis`` counts loop
-bodies exactly once).
+real JAX graphs instead: every ``dot_general`` becomes a GEMM/GEMV
+record, elementwise/reduction primitives become vector-ops records,
+gather/scatter/dynamic-slice become data-movement records, and
+``pallas_call`` kernels are priced from the inside — the kernel-interior
+jaxpr is classified like any other graph, multiplied through the grid,
+and the kernel's memory traffic is derived from its BlockSpecs (one
+block DMA per grid step along every grid axis the block's index map
+actually depends on, plus the scalar-prefetch operands). Control flow
+(``scan`` / ``while`` / ``cond`` / ``pjit`` / ``remat``) is recursed
+into with trip counts multiplied through — which also makes this tracer
+the source of truth for roofline FLOPs/bytes (XLA's ``cost_analysis``
+counts loop bodies exactly once).
 
-``trace_linear`` traces a token-position-parameterized function at two
-cache lengths and fits per-op linear models ``cost(L) = a + b*L`` — the
+This module is the bottom layer of the repo's static-analysis cost
+model:
+
+- ``trace_ops`` / ``trace_linear`` (here) turn a closure into an op
+  stream / a per-op linear model in the cache length;
+- :mod:`repro.core.costmodel` applies them to the serving engine's
+  *actual jitted closures* (decode step, prefill chunk, verify window,
+  bucketed prefill) and audits the engine's dispatch log against the
+  priced graphs;
+- :class:`repro.core.simulator.LLMSimulator` charges the resulting op
+  streams against a :class:`~repro.core.profiles.HardwareProfile`.
+
+``trace_linear`` traces a cache-length-parameterized closure at two
+lengths and fits per-op linear models ``cost(L) = a + b*L`` — the
 paper's "KV reads grow with every decode iteration" rule, recovered
 from real traced graphs instead of hand math.
+
+Known approximations are *surfaced*, never silent: a ``while`` body's
+trip count is unknown statically, so it is charged for exactly one
+iteration, every record from it is tagged ``approx="while:1-iter"``,
+``totals().approx_ops`` counts such records, and a
+:class:`TraceUndercountWarning` is emitted at trace time.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field, replace
 from functools import partial
 
@@ -44,6 +67,10 @@ CHEAP_PRIMS = {
     "expand_dims", "bitcast_convert_type", "is_finite", "stop_gradient",
     "copy", "shift_left", "shift_right_logical", "shift_right_arithmetic",
     "reduce_precision", "real", "imag",
+    # pallas-interior bookkeeping: grid position and VMEM/SMEM ref
+    # access — on-chip, never main-memory traffic (the kernel's HBM
+    # traffic is derived from its BlockSpecs in _pallas_record)
+    "program_id", "num_programs", "get", "swap", "addupdate",
 }
 REDUCE_PRIMS = {"reduce_sum", "reduce_max", "reduce_min", "reduce_prod",
                 "reduce_and", "reduce_or", "argmax", "argmin",
@@ -59,10 +86,18 @@ CALL_PRIMS = {"pjit", "closed_call", "custom_jvp_call", "custom_vjp_call",
               "shard_map"}
 
 
+class TraceUndercountWarning(UserWarning):
+    """A traced graph contains a construct whose cost is statically
+    unknowable (e.g. a ``while`` loop's trip count) and was charged at
+    a declared approximation. The affected records carry ``approx`` and
+    are counted by ``totals().approx_ops`` — undercounted loops are
+    visible, not invisible."""
+
+
 @dataclass
 class OpRecord:
     """One traced operation (already multiplied by loop trip counts)."""
-    kind: str          # gemm|gemv|conv|elementwise|reduce|data|other
+    kind: str          # gemm|gemv|conv|elementwise|reduce|data|kernel|other
     prim: str
     flops: float = 0.0       # multiply-accumulate*2 for matmuls
     in_bytes: float = 0.0    # operand bytes
@@ -72,6 +107,9 @@ class OpRecord:
     count: float = 1.0       # trip-count multiplier applied
     batch_dims: int = 0      # dot_general batch-dim count (attention
                              # scores GEMMs have >= 2: B and H)
+    kernel: str = ""         # pallas kernel name (kind == "kernel")
+    approx: str = ""         # non-empty: cost is a declared guess
+                             # (e.g. "while:1-iter")
 
     def scaled(self, m: float) -> "OpRecord":
         return replace(self, flops=self.flops * m,
@@ -136,6 +174,85 @@ def _conv_record(eqn) -> OpRecord:
                     _aval_bytes(out), _aval_bytes(rhs))
 
 
+# pallas_call ---------------------------------------------------------------
+
+def _index_map_grid_deps(index_map_jaxpr, n_grid: int) -> list:
+    """Which of the leading ``n_grid`` invars (the grid indices) of a
+    BlockSpec index map reach its outputs. Backward reachability over
+    the jaxpr — purely structural, no concrete grid values needed, so
+    it also handles maps that dereference scalar-prefetch operands
+    (paged block tables: ``tab[b, w]`` depends on grid axes b and w
+    *through* the table)."""
+    jaxpr = getattr(index_map_jaxpr, "jaxpr", index_map_jaxpr)
+    needed = {v for v in jaxpr.outvars if isinstance(v, jax.core.Var)}
+    for eqn in reversed(jaxpr.eqns):
+        if any(v in needed for v in eqn.outvars):
+            needed.update(v for v in eqn.invars
+                          if isinstance(v, jax.core.Var))
+    return [jaxpr.invars[i] in needed
+            for i in range(min(n_grid, len(jaxpr.invars)))]
+
+
+def _block_mapping_bytes(bm, grid) -> float:
+    """HBM traffic of one pallas operand across the whole grid: the
+    block is DMA'd once per grid step along every axis its index map
+    depends on, and stays resident (no re-fetch) along axes it is
+    invariant to — e.g. the split-KV decode kernel streams each KV tile
+    exactly once while its q / output blocks are fetched once per
+    (batch, head), not per KV block."""
+    shape = [int(d) for d in bm.block_shape
+             if isinstance(d, (int, np.integer))]
+    elems = int(np.prod(shape, dtype=np.int64)) if shape else 1
+    itemsize = np.dtype(bm.array_shape_dtype.dtype).itemsize
+    deps = _index_map_grid_deps(bm.index_map_jaxpr, len(grid))
+    fetches = 1
+    for axis, dep in enumerate(deps):
+        if dep:
+            fetches *= int(grid[axis])
+    return float(elems * itemsize * fetches)
+
+
+def _pallas_record(eqn) -> OpRecord:
+    """Price a ``pallas_call`` from the inside: classify the
+    kernel-interior jaxpr (FLOPs per grid step — VMEM-local byte
+    records like ``get``/``swap`` are on-chip and discarded), multiply
+    through the grid, and derive HBM bytes from the BlockSpecs plus the
+    scalar-prefetch operands. Falls back to an operand-bytes "other"
+    record only when the grid is dynamic (not statically priceable)."""
+    gm = eqn.params["grid_mapping"]
+    grid = tuple(gm.grid)
+    name = getattr(eqn.params.get("name_and_src_info"), "name", "") \
+        or "pallas"
+    if getattr(gm, "num_dynamic_grid_bounds", 0) or not all(
+            isinstance(d, (int, np.integer)) for d in grid):
+        return OpRecord(
+            "other", "pallas_call", 0.0,
+            sum(_aval_bytes(v.aval) for v in eqn.invars),
+            sum(_aval_bytes(v.aval) for v in eqn.outvars), kernel=name)
+    trips = int(np.prod(grid, dtype=np.int64)) if grid else 1
+    interior: list = []
+    _walk(eqn.params["jaxpr"], 1.0, interior)
+    flops = sum(o.flops for o in interior) * trips
+    mm = [o for o in interior if o.kind in ("gemm", "gemv", "conv")]
+    rows = max((o.rows for o in mm), default=0)
+    # memory traffic: scalar-prefetch operands land whole (SMEM), block
+    # operands stream per the BlockSpec fetch model above
+    n_pref = int(getattr(gm, "num_index_operands", 0))
+    in_b = sum(_aval_bytes(v.aval) for v in eqn.invars[:n_pref])
+    n_in = int(gm.num_inputs)
+    for bm in gm.block_mappings[:n_in]:
+        in_b += _block_mapping_bytes(bm, grid)
+    out_b = sum(_block_mapping_bytes(bm, grid)
+                for bm in gm.block_mappings[n_in:])
+    return OpRecord("kernel", "pallas_call", float(flops), in_b, out_b,
+                    rows=rows, count=trips, kernel=name)
+
+
+def _branch_cost(records) -> tuple:
+    return (sum(o.flops for o in records),
+            sum(o.in_bytes + o.out_bytes for o in records))
+
+
 def _walk(jaxpr, mult: float, out: list):
     for eqn in jaxpr.eqns:
         name = eqn.primitive.name
@@ -143,18 +260,38 @@ def _walk(jaxpr, mult: float, out: list):
             out.append(_dot_record(eqn).scaled(mult))
         elif name in CONV_PRIMS:
             out.append(_conv_record(eqn).scaled(mult))
+        elif name == "pallas_call":
+            out.append(_pallas_record(eqn).scaled(mult))
         elif name == "scan":
+            # ``unroll`` is a lowering hint only: the traced jaxpr keeps
+            # the full ``length`` and a single body copy regardless of
+            # the unroll factor (verified by test_scan_unroll_is_a_
+            # lowering_hint), so the trip multiplier is exactly length.
             length = eqn.params["length"]
-            n_unroll = max(1, eqn.params.get("unroll", 1))
             inner = eqn.params["jaxpr"]
-            _walk(inner.jaxpr, mult * length / 1, out)
+            _walk(inner.jaxpr, mult * length, out)
         elif name == "while":
-            # trip count unknown statically; charge one iteration
-            _walk(eqn.params["body_jaxpr"].jaxpr, mult, out)
+            # trip count unknown statically: charge exactly one
+            # iteration, tag every record from the body, and say so —
+            # undercounted loops must be visible (totals().approx_ops).
+            body: list = []
+            _walk(eqn.params["body_jaxpr"].jaxpr, mult, body)
+            warnings.warn(TraceUndercountWarning(
+                f"while loop charged for 1 iteration ({len(body)} ops; "
+                "trip count is not static) — totals().approx_ops counts "
+                "the affected records"), stacklevel=3)
+            out.extend(replace(o, approx="while:1-iter") for o in body)
         elif name == "cond":
-            branches = eqn.params["branches"]
-            if branches:
-                _walk(branches[-1].jaxpr, mult, out)  # worst-case branch
+            # charge the most expensive branch (worst case): pl.when
+            # bodies, checkpoint policies etc. put the compute in one
+            # branch and a no-op in the other
+            walked = []
+            for br in eqn.params["branches"]:
+                recs: list = []
+                _walk(br.jaxpr, mult, recs)
+                walked.append(recs)
+            if walked:
+                out.extend(max(walked, key=_branch_cost))
         elif name in CALL_PRIMS or "jaxpr" in eqn.params or \
                 "call_jaxpr" in eqn.params:
             sub = eqn.params.get("jaxpr", eqn.params.get("call_jaxpr"))
@@ -195,7 +332,10 @@ def _walk(jaxpr, mult: float, out: list):
         elif name in CHEAP_PRIMS:
             continue
         else:
-            # unknown primitive: record bytes, no flops
+            # unknown primitive: record bytes, no flops — the lint gate
+            # (scripts/lint_prims.py) fails when one of these carries
+            # real traffic, so new primitives get classified instead of
+            # silently dropping out of the cost model
             out.append(OpRecord(
                 "other", name, 0.0,
                 sum(_aval_bytes(v.aval) for v in eqn.invars),
@@ -219,6 +359,9 @@ class Totals:
     weight_bytes: float = 0.0
     gemm_flops: float = 0.0
     gemv_flops: float = 0.0
+    kernel_flops: float = 0.0  # share of matmul_flops inside pallas calls
+    approx_ops: int = 0        # records carrying a declared approximation
+                               # (while bodies charged at 1 iteration)
 
 
 def totals(ops) -> Totals:
@@ -227,12 +370,24 @@ def totals(ops) -> Totals:
         t.flops += o.flops
         t.bytes += o.in_bytes + o.out_bytes
         t.weight_bytes += o.weight_bytes
+        if o.approx:
+            t.approx_ops += 1
         if o.kind in ("gemm", "gemv", "conv"):
             t.matmul_flops += o.flops
             if o.kind == "gemv":
                 t.gemv_flops += o.flops
             else:
                 t.gemm_flops += o.flops
+        elif o.kind == "kernel":
+            # hand-tiled kernels are matmul-class compute; keep the
+            # GEMM/GEMV split by the interior row count (decode-style
+            # kernels with one query row per head group stay GEMV-like)
+            t.matmul_flops += o.flops
+            t.kernel_flops += o.flops
+            if o.rows > 1:
+                t.gemm_flops += o.flops
+            else:
+                t.gemv_flops += o.flops
         else:
             t.vector_ops += o.flops
     return t
@@ -252,12 +407,17 @@ class LinearOp:
     out_bytes: tuple = (0.0, 0.0)
     weight_bytes: tuple = (0.0, 0.0)
     batch_dims: int = 0
+    rows: int = 0
+    kernel: str = ""
+    approx: str = ""
 
     def at(self, L: float) -> OpRecord:
         ev = lambda c: c[0] + c[1] * L  # noqa: E731
         return OpRecord(self.kind, self.prim, ev(self.flops),
                         ev(self.in_bytes), ev(self.out_bytes),
-                        ev(self.weight_bytes), batch_dims=self.batch_dims)
+                        ev(self.weight_bytes), batch_dims=self.batch_dims,
+                        rows=self.rows, kernel=self.kernel,
+                        approx=self.approx)
 
 
 def trace_linear(fn_of_len, L1: int, L2: int) -> list:
@@ -274,8 +434,10 @@ def trace_linear(fn_of_len, L1: int, L2: int) -> list:
     out = []
     dL = float(L2 - L1)
     for a, b in zip(ops1, ops2):
-        if a.prim != b.prim:
-            raise ValueError(f"op mismatch: {a.prim} vs {b.prim}")
+        if a.prim != b.prim or a.kernel != b.kernel:
+            raise ValueError(
+                f"op mismatch: {a.prim}{a.kernel and f'[{a.kernel}]'} vs "
+                f"{b.prim}{b.kernel and f'[{b.kernel}]'}")
 
         def fit(x, y):
             slope = (y - x) / dL
@@ -286,5 +448,6 @@ def trace_linear(fn_of_len, L1: int, L2: int) -> list:
                             fit(a.in_bytes, b.in_bytes),
                             fit(a.out_bytes, b.out_bytes),
                             fit(a.weight_bytes, b.weight_bytes),
-                            batch_dims=a.batch_dims))
+                            batch_dims=a.batch_dims, rows=a.rows,
+                            kernel=a.kernel, approx=a.approx))
     return out

@@ -7,16 +7,19 @@ we derive, against TPU v5e hardware constants:
   memory term     = HLO_bytes / (chips x 819 GB/s HBM)
   collective term = collective_bytes / link (50 GB/s ICI per link)
 
-Sources and trip-count correction: XLA's ``cost_analysis`` counts a
-``while`` (lax.scan) body exactly once, so its raw flops/bytes
-undercount scanned layer stacks by the trip product. The jaxpr tracer
-(``core/trace.py``) is trip-aware and global, so:
+Sources: both leading terms come from the jaxpr tracer
+(``core/trace.py``), which multiplies ``scan``/``while`` trip counts
+through and prices ``pallas_call`` kernels from their BlockSpecs —
+unlike XLA's ``cost_analysis``, which counts loop bodies exactly once:
 
-  - compute_s  = trace.flops / chips / PEAK  (exact, trip-aware)
-  - memory_s   = cost.bytes_accessed * kappa / HBM_BW, where
-    kappa = (trace.flops / chips) / cost.flops is the measured trip
-    multiplier of this executable (flops and HBM bytes scale with the
-    same loop structure). When a record carries no trace, kappa = 1.
+  - compute_s  = trace.flops / chips / PEAK  (trip-aware, global)
+  - memory_s   = trace.bytes / chips / HBM_BW when the record's trace
+    carries byte totals (``launch/dryrun.py`` writes them). Records
+    from before the tracer reported bytes fall back to
+    cost.bytes_accessed * kappa / HBM_BW, where kappa =
+    (trace.flops / chips) / cost.flops is the measured trip multiplier
+    of this executable (flops and HBM bytes scale with the same loop
+    structure); with no trace at all, kappa = 1.
   - collective_s = hlo-parsed per-device payload bytes / LINK_BW (the
     parser multiplies while-loop trip counts through; see
     roofline/hlo.py).
@@ -64,7 +67,12 @@ def analyze_record(rec: dict) -> dict:
     g_flops = trace.get("flops") or cost_flops * chips
     kappa = (g_flops / chips) / cost_flops if cost_flops else 1.0
     compute_s = g_flops / chips / PEAK_FLOPS
-    memory_s = rec.get("bytes_accessed", 0.0) * kappa / HBM_BW
+    t_bytes = trace.get("bytes") or 0.0
+    if t_bytes:
+        # trip-aware global bytes straight from the jaxpr tracer
+        memory_s = t_bytes / chips / HBM_BW
+    else:
+        memory_s = rec.get("bytes_accessed", 0.0) * kappa / HBM_BW
     coll = (rec.get("collectives") or {}).get("total_bytes", 0)
     collective_s = coll / LINK_BW
     terms = {"compute": compute_s, "memory": memory_s,

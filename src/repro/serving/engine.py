@@ -105,6 +105,79 @@ from repro.serving.kv_cache import (ContiguousCache, contiguous_kv_bytes,
 from repro.serving.scheduler import PrefillState, make_scheduler
 
 
+def build_closures(cfg, capacity: int, *, masked: bool | None = None):
+    """The engine's jitted dispatch graphs, as plain functions of
+    ``(params, *operands)``, keyed by dispatch kind.
+
+    Module-level on purpose: the static cost model
+    (:mod:`repro.core.costmodel`) traces **these same function
+    objects** — the engine jits them, the pricer ``make_jaxpr``'s them
+    — so the graph the simulator charges and the graph the engine
+    dispatches cannot drift apart without the audit noticing.
+
+    ``capacity`` is the KV capacity the prefill graph writes into
+    (``EngineConfig.max_seq_len`` in the engine; the prompt length in
+    the simulator's per-request encode model). ``masked`` forces the
+    length-masked prefill scan (defaults to recurrent families, which
+    need pad steps neutralized; attention families keep their exact
+    pre-mask graph for bitwise stability)."""
+    C = capacity
+    if masked is None:
+        masked = cfg.family in MD.RECURRENT_FAMILIES
+
+    def prefill(params, batch, last_idx, n_valid):
+        """One bucketed whole-prompt (or draft) prefill dispatch."""
+        return MD.prefill(params, cfg, batch, C, logit_index=last_idx,
+                          length=n_valid if masked else None)
+
+    def decode(params, toks, cache, pos, live):
+        """One fully-ragged dispatch: every live slot advances at
+        its own absolute position; non-live rows keep their KV and
+        recurrent state exactly (masked inside ``decode_step``)."""
+        logits, new = MD.decode_step(params, cfg, toks,
+                                     dict(cache, len=pos), live=live)
+        new["len"] = cache["len"]  # positions tracked host-side
+        return logits, new
+
+    def chunk_contiguous(params, batch, cache_k, cache_v, slot, hist_len,
+                         logit_idx):
+        """One prefill-chunk dispatch over a contiguous cache: the
+        slot's dense history rows are sliced inside the jit (no
+        host-side copy per chunk)."""
+        kh = jax.lax.dynamic_slice_in_dim(cache_k, slot, 1, axis=1)
+        vh = jax.lax.dynamic_slice_in_dim(cache_v, slot, 1, axis=1)
+        return MD.prefill_chunk(params, cfg, batch, kh, vh, hist_len,
+                                logit_index=logit_idx)
+
+    def chunk_paged(params, batch, pool_k, pool_v, table, hist_len,
+                    logit_idx):
+        """Paged analogue: the slot's block-table row gathers its
+        pool blocks into the dense history view (PR 2's dense-view
+        gather), garbage blocks masked by ``hist_len``."""
+        nb, bs = pool_k.shape[1], pool_k.shape[2]
+        idx = jnp.clip(table, 0, nb - 1)  # (W,) sentinel -> clamped
+        l, w = pool_k.shape[0], idx.shape[0]
+        kh = pool_k[:, idx].reshape(l, 1, w * bs, *pool_k.shape[3:])
+        vh = pool_v[:, idx].reshape(l, 1, w * bs, *pool_v.shape[3:])
+        return MD.prefill_chunk(params, cfg, batch, kh, vh, hist_len,
+                                logit_index=logit_idx)
+
+    def verify(params, toks, cache, pos, live):
+        """One multi-token verify dispatch: every live slot's
+        gamma+1 candidate window is checked at its own absolute
+        position; candidate KVs land live-masked at per-row
+        offsets, rejected positions stay masked by the host-side
+        length vector (rollback by bookkeeping, not by rewrite)."""
+        logits, new = MD.verify_tokens(params, cfg, toks,
+                                       dict(cache, len=pos), live=live)
+        new["len"] = cache["len"]  # positions tracked host-side
+        return logits, new
+
+    return {"prefill": prefill, "decode": decode,
+            "chunk_contiguous": chunk_contiguous,
+            "chunk_paged": chunk_paged, "verify": verify}
+
+
 @dataclass
 class EngineConfig:
     max_batch: int = 8           # decode slots
@@ -256,64 +329,26 @@ class ServingEngine:
                           and cfg.family in MD.TRANSFORMER_FAMILIES
                           + ("audio",) + MD.RECURRENT_FAMILIES
                           and cfg.sliding_window is None)
-        # only recurrent families need the mask; attention families keep
-        # their exact pre-mask graph (bitwise-stability across PRs)
-        masked = cfg.family in MD.RECURRENT_FAMILIES
-
-        def _prefill_one(params, batch, last_idx, n_valid):
-            return MD.prefill(params, cfg, batch, C, logit_index=last_idx,
-                              length=n_valid if masked else None)
-
-        def _decode_ragged(params, toks, cache, pos, live):
-            """One fully-ragged dispatch: every live slot advances at
-            its own absolute position; non-live rows keep their KV and
-            recurrent state exactly (masked inside ``decode_step``)."""
-            logits, new = MD.decode_step(params, cfg, toks,
-                                         dict(cache, len=pos), live=live)
-            new["len"] = cache["len"]  # positions tracked host-side
-            return logits, new
-
-        def _chunk_contig(params, batch, cache_k, cache_v, slot, hist_len,
-                          logit_idx):
-            """One prefill-chunk dispatch over a contiguous cache: the
-            slot's dense history rows are sliced inside the jit (no
-            host-side copy per chunk)."""
-            kh = jax.lax.dynamic_slice_in_dim(cache_k, slot, 1, axis=1)
-            vh = jax.lax.dynamic_slice_in_dim(cache_v, slot, 1, axis=1)
-            return MD.prefill_chunk(params, cfg, batch, kh, vh, hist_len,
-                                    logit_index=logit_idx)
-
-        def _chunk_paged(params, batch, pool_k, pool_v, table, hist_len,
-                         logit_idx):
-            """Paged analogue: the slot's block-table row gathers its
-            pool blocks into the dense history view (PR 2's dense-view
-            gather), garbage blocks masked by ``hist_len``."""
-            nb, bs = pool_k.shape[1], pool_k.shape[2]
-            idx = jnp.clip(table, 0, nb - 1)  # (W,) sentinel -> clamped
-            l, w = pool_k.shape[0], idx.shape[0]
-            kh = pool_k[:, idx].reshape(l, 1, w * bs, *pool_k.shape[3:])
-            vh = pool_v[:, idx].reshape(l, 1, w * bs, *pool_v.shape[3:])
-            return MD.prefill_chunk(params, cfg, batch, kh, vh, hist_len,
-                                    logit_index=logit_idx)
-
-        def _verify_ragged(params, toks, cache, pos, live):
-            """One multi-token verify dispatch: every live slot's
-            gamma+1 candidate window is checked at its own absolute
-            position; candidate KVs land live-masked at per-row
-            offsets, rejected positions stay masked by the host-side
-            length vector (rollback by bookkeeping, not by rewrite)."""
-            logits, new = MD.verify_tokens(params, cfg, toks,
-                                           dict(cache, len=pos), live=live)
-            new["len"] = cache["len"]  # positions tracked host-side
-            return logits, new
-
-        self._prefill_one = jax.jit(_prefill_one)  # one compile per bucket
-        self._decode_ragged = jax.jit(_decode_ragged)  # one compile total
-        self._verify_ragged = jax.jit(_verify_ragged)  # one compile total
+        # dispatch audit trail: every jitted dispatch appends
+        # (step, kind, operand spec tree) — core/costmodel.audit_engine
+        # re-traces each entry through the same closures and fails on
+        # drift. Specs are ShapeDtypeStructs, so the log stays tiny.
+        self.dispatch_log: list[dict] = []
+        self.step_index = 0
+        # the dispatch graphs: built at module level so the static cost
+        # model traces literally the same function objects we jit here
+        self._closures = build_closures(cfg, C)
+        self._prefill_one = jax.jit(
+            self._closures["prefill"])  # one compile per bucket
+        self._decode_ragged = jax.jit(
+            self._closures["decode"])  # one compile total
+        self._verify_ragged = jax.jit(
+            self._closures["verify"])  # one compile total
         # chunked prefill: slot/hist_len/logit_idx traced -> one compile
         # per chunk shape (two for vlm: first chunk carries the images)
-        self._chunk_fns = {"contiguous": jax.jit(_chunk_contig),
-                           "paged": jax.jit(_chunk_paged)}
+        self._chunk_fns = {
+            "contiguous": jax.jit(self._closures["chunk_contiguous"]),
+            "paged": jax.jit(self._closures["chunk_paged"])}
         self._sample = jax.jit(self._make_sampler())
         # speculative draft: a second, smaller model with its own
         # (always-contiguous) KV cache that shadows the committed
@@ -363,19 +398,14 @@ class ServingEngine:
                 "both caches")
         self.draft_params, self.draft_cfg = draft_params, dcfg
         self.draft_kv = ContiguousCache(dcfg, ecfg)
-        C = ecfg.max_seq_len
-
-        def _draft_prefill(params, batch, last_idx):
-            return MD.prefill(params, dcfg, batch, C, logit_index=last_idx)
-
-        def _draft_decode(params, toks, cache, pos, live):
-            logits, new = MD.decode_step(params, dcfg, toks,
-                                         dict(cache, len=pos), live=live)
-            new["len"] = cache["len"]
-            return logits, new
-
-        self._draft_prefill = jax.jit(_draft_prefill)  # per bucket
-        self._draft_decode = jax.jit(_draft_decode)    # one compile total
+        # the draft's dispatch graphs are the same module-level
+        # closures, built for the draft config (speculative policies
+        # only resolve on attention families, so masked is never hit)
+        self._draft_closures = build_closures(dcfg, ecfg.max_seq_len)
+        self._draft_prefill = jax.jit(
+            self._draft_closures["prefill"])  # per bucket
+        self._draft_decode = jax.jit(
+            self._draft_closures["decode"])   # one compile total
 
     def _make_sampler(self):
         """Sampling head over returned logits — outside the model jits,
@@ -422,12 +452,27 @@ class ServingEngine:
             steps += 1
         return self.finished
 
+    def _log_dispatch(self, kind: str, *operands):
+        """Append one dispatch-audit entry: the kind plus the operand
+        spec tree (params excluded — their spec is derivable from
+        ``self.params``). ``core/costmodel.audit_engine`` re-traces
+        every entry through the matching ``build_closures`` function
+        and fails the CI gate on drift."""
+        def sds(x):
+            if hasattr(x, "shape") and hasattr(x, "dtype"):
+                return jax.ShapeDtypeStruct(tuple(x.shape), x.dtype)
+            return x
+        self.dispatch_log.append({
+            "step": self.step_index, "kind": kind,
+            "spec": jax.tree.map(sds, operands)})
+
     def step(self):
         """One engine iteration, orchestrated by the scheduling policy:
         admit -> (at most one prefill-chunk dispatch) -> single ragged
         decode dispatch -> retire. In steady-state decode that is
         exactly one jitted dispatch per step, plus at most one chunk
         dispatch while a prompt is streaming in."""
+        self.step_index += 1
         self.scheduler.admit(self)
         chunk_slot = self.scheduler.select_chunk(self)
         if chunk_slot is not None:
@@ -444,9 +489,10 @@ class ServingEngine:
     def _decode_step(self, live):
         """The vanilla one-token-per-slot ragged decode dispatch."""
         cache = self.kv.decode_view(self.slot_pos, live)
-        logits, new_cache = self._decode_ragged(
-            self.params, jnp.asarray(self.slot_tok), cache,
-            jnp.asarray(self.slot_pos), jnp.asarray(live))
+        args = (jnp.asarray(self.slot_tok), cache,
+                jnp.asarray(self.slot_pos), jnp.asarray(live))
+        self._log_dispatch("decode", *args)
+        logits, new_cache = self._decode_ragged(self.params, *args)
         self.kv.commit(new_cache)
         self.decode_dispatches += 1
         self.decode_steps += 1
@@ -544,9 +590,10 @@ class ServingEngine:
         toks = np.concatenate([self.slot_tok, cand], axis=1)  # (B, chain+1)
         cache = self.kv.verify_view(self.slot_pos, live,
                                     np.minimum(n_write, chain + 1))
-        logits, new_cache = self._verify_ragged(
-            self.params, jnp.asarray(toks), cache,
-            jnp.asarray(self.slot_pos), jnp.asarray(live))
+        args = (jnp.asarray(toks), cache,
+                jnp.asarray(self.slot_pos), jnp.asarray(live))
+        self._log_dispatch("verify", *args)
+        logits, new_cache = self._verify_ragged(self.params, *args)
         self.kv.commit(new_cache)
         self.decode_dispatches += 1
         self.decode_steps += 1
@@ -585,9 +632,10 @@ class ServingEngine:
     def _draft_dispatch(self, toks, live):
         """One ragged draft-model decode dispatch (chain/catch-up)."""
         cache = self.draft_kv.decode_view(self.draft_pos, live)
-        logits, new_cache = self._draft_decode(
-            self.draft_params, jnp.asarray(toks), cache,
-            jnp.asarray(self.draft_pos), jnp.asarray(live))
+        args = (jnp.asarray(toks), cache,
+                jnp.asarray(self.draft_pos), jnp.asarray(live))
+        self._log_dispatch("draft_decode", *args)
+        logits, new_cache = self._draft_decode(self.draft_params, *args)
         self.draft_kv.commit(new_cache)
         self.draft_dispatches += 1
         return logits
@@ -671,9 +719,10 @@ class ServingEngine:
                 (1, self.cfg.encoder_len, self.cfg.d_model),
                 jnp.bfloat16 if self.cfg.dtype == "bfloat16"
                 else jnp.float32)
-        logits, rows = self._prefill_one(
-            self.params, batch, jnp.asarray(n_prompt - 1, jnp.int32),
-            jnp.asarray(n_prompt, jnp.int32))
+        pre_args = (batch, jnp.asarray(n_prompt - 1, jnp.int32),
+                    jnp.asarray(n_prompt, jnp.int32))
+        self._log_dispatch("prefill", *pre_args)
+        logits, rows = self._prefill_one(self.params, *pre_args)
         self.prefills += 1
         req.prefill_chunks = 1
         seed = req.seed if req.seed is not None else self.ecfg.seed
@@ -690,9 +739,8 @@ class ServingEngine:
             # speculative: the draft shadows the committed sequence —
             # prefill its cache over the same (bucketed) batch so the
             # chain can propose from position n_prompt immediately
-            _, drows = self._draft_prefill(
-                self.draft_params, batch,
-                jnp.asarray(n_prompt - 1, jnp.int32))
+            self._log_dispatch("draft_prefill", *pre_args)
+            _, drows = self._draft_prefill(self.draft_params, *pre_args)
             self.draft_kv.splice(drows, slot, n_prompt, budget)
             self.draft_dispatches += 1
             self.draft_pos[slot] = n_prompt
@@ -748,10 +796,11 @@ class ServingEngine:
         fn = self._chunk_fns[view["kind"]]
         sel = (jnp.asarray(view["slot"], jnp.int32)
                if view["kind"] == "contiguous" else view["table"])
-        logits, ks, vs = fn(
-            self.params, batch, view["k"], view["v"], sel,
-            jnp.asarray(st.done, jnp.int32),
-            jnp.asarray(logit_idx, jnp.int32))
+        args = (batch, view["k"], view["v"], sel,
+                jnp.asarray(st.done, jnp.int32),
+                jnp.asarray(logit_idx, jnp.int32))
+        self._log_dispatch(f"chunk_{view['kind']}", *args)
+        logits, ks, vs = fn(self.params, *args)
         self.kv.splice_partial(ks, vs, slot, st.done, n_valid)
         self.prefill_chunk_dispatches += 1
         req.prefill_chunks += 1

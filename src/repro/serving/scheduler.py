@@ -182,6 +182,16 @@ class SpeculativeScheduler(BlockingScheduler):
     name = "speculative"
 
 
+def policy_supported(cfg) -> bool:
+    """Whether chunked prefill / speculative verify can express this
+    model: both resume attention from a KV view, which recurrent state
+    and rolling-SWA caches cannot do. Shared with the analytical
+    simulator (``LLMSimulator.serve``) so the engine's fallback and the
+    simulated schedule can never disagree."""
+    return (cfg.family in MD.TRANSFORMER_FAMILIES
+            and cfg.sliding_window is None)
+
+
 def make_scheduler(cfg, ecfg) -> Scheduler:
     """Build the configured policy; families chunked prefill /
     speculative verify cannot express (recurrent state, rolling SWA,
@@ -190,8 +200,7 @@ def make_scheduler(cfg, ecfg) -> Scheduler:
     if kind == "blocking":
         return BlockingScheduler()
     if kind in ("chunked", "speculative"):
-        if (cfg.family not in MD.TRANSFORMER_FAMILIES
-                or cfg.sliding_window is not None):
+        if not policy_supported(cfg):
             warnings.warn(
                 f"{kind} scheduling unsupported for family="
                 f"{cfg.family!r} sliding_window={cfg.sliding_window}; "

@@ -1,0 +1,142 @@
+"""The static-analysis cost model (core/costmodel.py): dispatch
+pricing from the engine's real closures, and the simulator<->engine
+drift audit that CI gates on."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.core import costmodel as CM
+from repro.models import model as MD
+from repro.serving.engine import EngineConfig, ServingEngine
+
+CFG = registry.get_smoke_config("qwen1.5-0.5b").replace(dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return MD.init_params(jax.random.PRNGKey(0), CFG)
+
+
+def run_engine(params, **ekw):
+    eng = ServingEngine(params, CFG, EngineConfig(
+        max_batch=2, max_seq_len=64, max_new_tokens=4, **ekw))
+    for p in ([1, 2, 3, 4, 5] * 4, [7, 8, 9]):
+        eng.submit(np.array(p, np.int32))
+    eng.run()
+    return eng
+
+
+# ---------------------------------------------------------------------------
+# trace_linear over the engine's ragged closures (paged + verify)
+# ---------------------------------------------------------------------------
+
+def test_trace_linear_paged_decode_closure():
+    """The paged ragged decode closure traces to one positionally
+    stable op stream across cache lengths, with cost growing in L (the
+    streamed-KV law) — previously only the dense path had coverage."""
+    pricer = CM.DispatchPricer(CFG)
+    lin = pricer.decode_ops_linear(2, 256, ragged=True, kv_cache="paged",
+                                   kv_block_size=16)
+    assert lin  # trace_linear would raise on a stream mismatch
+    f_lo = sum(o.at(64).flops for o in lin)
+    f_hi = sum(o.at(256).flops for o in lin)
+    assert 0 < f_lo < f_hi
+    b_lo = sum(o.at(64).in_bytes + o.at(64).out_bytes for o in lin)
+    b_hi = sum(o.at(256).in_bytes + o.at(256).out_bytes for o in lin)
+    assert b_lo < b_hi  # KV reads grow with every decode iteration
+
+
+def test_trace_linear_verify_closure():
+    """The speculative verify closure (gamma + 1 candidates per row)
+    fits linearly in cache length and strictly outworks the one-token
+    decode dispatch at every length."""
+    pricer = CM.DispatchPricer(CFG)
+    ver = pricer.verify_ops_linear(2, 256, 3, kv_cache="contiguous")
+    dec = pricer.decode_ops_linear(2, 256, ragged=True)
+    assert ver
+    for L in (64, 128, 256):
+        fv = sum(o.at(L).flops for o in ver)
+        fd = sum(o.at(L).flops for o in dec)
+        assert fv > fd > 0
+
+
+def test_pricer_memoizes_per_shape_class():
+    pricer = CM.DispatchPricer(CFG)
+    a = pricer.decode_ops_linear(1, 128, ragged=True)
+    b = pricer.decode_ops_linear(1, 128, ragged=True)
+    c = pricer.decode_ops_linear(2, 128, ragged=True)
+    assert a is b and a is not c
+
+
+def test_simulator_aliases_pricer_memos():
+    """LLMSimulator's traced streams ARE the pricer's: serve() costs
+    come from the engine's dispatch closures, not hand mirrors."""
+    from repro.core import profiles as HW
+    from repro.core.simulator import LLMSimulator
+    sim = LLMSimulator(CFG, HW.PIM_AI_MOBILE)
+    assert sim._decode_linear is sim.pricer.decode_linear
+    assert sim._chunk_cache is sim.pricer.chunk_cache
+    sim.serve([16, 24], 4)
+    assert any(k[2] for k in sim.pricer.decode_linear)  # ragged traced
+
+
+# ---------------------------------------------------------------------------
+# dispatch audit (the CI drift gate)
+# ---------------------------------------------------------------------------
+
+def test_audit_blocking_contiguous(params):
+    eng = run_engine(params)
+    rep = CM.audit_engine(eng)
+    CM.assert_no_drift(rep)
+    assert rep["priced"] == rep["dispatches"] > 0
+    assert rep["kinds"]["decode"] > 0 and rep["kinds"]["prefill"] > 0
+
+
+def test_audit_paged_backend(params):
+    eng = run_engine(params, kv_cache="paged", kv_block_size=8)
+    rep = CM.audit_engine(eng)
+    CM.assert_no_drift(rep)
+    assert rep["kinds"]["decode"] > 0
+
+
+def test_audit_chunked_scheduler(params):
+    eng = run_engine(params, scheduler="chunked", chunk_tokens=16,
+                     prefill_bucket_min=16)
+    rep = CM.audit_engine(eng)
+    CM.assert_no_drift(rep)
+    assert rep["kinds"]["chunk_contiguous"] > 0
+
+
+def test_audit_speculative_scheduler(params):
+    eng = run_engine(params, scheduler="speculative", spec_gamma=2)
+    rep = CM.audit_engine(eng)
+    CM.assert_no_drift(rep)
+    assert rep["kinds"]["verify"] > 0
+    assert rep["kinds"]["draft_decode"] > 0
+
+
+def test_audit_fails_on_unpriced_dispatch(params):
+    """The gate trips when the engine issues a dispatch the cost model
+    has no graph for."""
+    eng = run_engine(params)
+    eng.dispatch_log.append({"step": 999, "kind": "mystery", "spec": ()})
+    rep = CM.audit_engine(eng)
+    assert not rep["ok"]
+    assert rep["unpriced"] and rep["unpriced"][0]["kind"] == "mystery"
+    with pytest.raises(AssertionError, match="mystery"):
+        CM.assert_no_drift(rep)
+
+
+def test_audit_fails_on_double_dispatch(params):
+    """The one-target-dispatch-per-step invariant is checked
+    structurally from the log, not from the engine's counters."""
+    eng = run_engine(params)
+    dup = next(e for e in eng.dispatch_log if e["kind"] == "decode")
+    eng.dispatch_log.append(dict(dup))
+    rep = CM.audit_engine(eng)
+    assert rep["invariant_violations"] == [dup["step"]]
+    with pytest.raises(AssertionError):
+        CM.assert_no_drift(rep)
