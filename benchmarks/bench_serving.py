@@ -81,6 +81,11 @@ MIXED_SHORT_MAX = 14
 GAMMA = 4           # speculative: draft tokens per verify step
 N_PREFILL, N_DECODE = 1, 2   # --cluster topology
 KILL_STEP = 3       # fault injection: kill a decode worker here
+TRACE_SEED = 0      # --trace: seeded workload generator
+TRACE_QUANTUM = 0.01         # virtual seconds per engine step
+TRACE_NEW = 16               # engine cap; per-request budgets come
+                             # from the trace itself
+TRACE_TPUT_FLOOR = 0.95      # SLO policy may cost <= 5% vs FIFO
 
 
 def _workload(kind: str, rng):
@@ -306,8 +311,144 @@ def _run_cluster_section(params, cfg, results, mismatched):
            ["KV moved/batch", f"{het['kv_transfer']['bytes']/2**30:.1f}G"]])
 
 
+def _run_trace_section(params, cfg, results, mismatched, trace_name):
+    """The --trace benchmark: replay one seeded multi-tenant trace under
+    FIFO (blocking) and the SLO-aware scheduler, hard-gating
+
+    - bitwise-identical greedy outputs (preemption is migration through
+      the packet path, never token loss),
+    - the high-priority tenant's p99 TTFT within its SLO under the SLO
+      policy (with at least one preemption actually exercised),
+    - aggregate token throughput within ``TRACE_TPUT_FLOOR`` of FIFO,
+    - the analytical mirror (``LLMSimulator.serve(trace=...)``)
+      reproducing the SLO run's admission order and preemption log
+      exactly,
+
+    and lands the trace schema + both runs + the priced
+    ``run_cloud_trace`` scenario in the JSON artifact."""
+    from repro.core.scenarios import run_cloud_trace
+    from repro.serving.workload import make_named_trace, replay
+
+    tr = make_named_trace(trace_name, vocab_size=cfg.vocab_size,
+                          seed=TRACE_SEED)
+    results["trace"] = {"schema": tr.schema(),
+                        "step_quantum_s": TRACE_QUANTUM, "runs": {}}
+    # tenant -> (priority, ttft SLO) from the trace itself; the gated
+    # tenant is the highest-priority one with a finite TTFT SLO
+    tenant_slo: dict[str, tuple[int, float]] = {}
+    for r in tr.schema()["requests"]:
+        tenant_slo[r["tenant"]] = (r["priority"], r["slo_ttft_s"])
+    gated = max((t for t, (_, s) in tenant_slo.items()
+                 if s != float("inf")),
+                key=lambda t: tenant_slo[t][0], default=None)
+
+    runs = {}
+    rows = []
+    for label, sched in (("fifo", "blocking"), ("slo", "slo")):
+        eng = ServingEngine(params, cfg, EngineConfig(
+            max_batch=MAX_BATCH, max_seq_len=MAX_SEQ,
+            max_new_tokens=TRACE_NEW, scheduler=sched, eos_token=-1))
+        rep = replay(eng, tr, step_quantum_s=TRACE_QUANTUM)
+        runs[label] = rep
+        s = rep["summary"]
+        for tenant, b in s["by_tenant"].items():
+            _, slo_s = tenant_slo.get(tenant, (0, float("inf")))
+            rows.append(
+                [label, tenant, b["requests"],
+                 r3(b["ttft_p50_s"] * 1e3), r3(b["ttft_p99_s"] * 1e3),
+                 "-" if slo_s == float("inf") else r3(slo_s * 1e3),
+                 r3(b["slo_attainment"]), b["preemptions"]])
+        results["trace"]["runs"][label] = {
+            "scheduler": sched, "steps": rep["steps"],
+            "tokens": rep["tokens"], "decode_steps": rep["decode_steps"],
+            "preemptions": s["preemptions"],
+            "admission_order": rep["admission_order"],
+            "preemption_log": rep["preemption_log"],
+            "by_tenant": s["by_tenant"],
+            "by_priority": s["by_priority"],
+        }
+    print_table(
+        f"trace replay ({trace_name!r}, seed {TRACE_SEED}, "
+        f"{len(tr.requests)} requests over {tr.horizon_s}s, "
+        f"quantum {TRACE_QUANTUM}s)",
+        ["run", "tenant", "reqs", "ttft p50 ms", "ttft p99 ms",
+         "slo ms", "attain", "preempt"],
+        rows)
+
+    fifo, slo = runs["fifo"], runs["slo"]
+    if slo["outputs"] != fifo["outputs"]:
+        mismatched.append(
+            f"trace/{trace_name}: SLO outputs diverged from FIFO — "
+            "preemption must be lossless migration")
+    if slo["summary"]["preemptions"] < 1:
+        mismatched.append(
+            f"trace/{trace_name}: SLO policy made no preemptions — "
+            "the overload never exercised the packet path")
+    if gated is not None:
+        slo_s = tenant_slo[gated][1]
+        p99 = slo["summary"]["by_tenant"][gated]["ttft_p99_s"]
+        if p99 > slo_s:
+            mismatched.append(
+                f"trace/{trace_name}: {gated} p99 TTFT {p99:.4f}s "
+                f"misses its {slo_s:.3f}s SLO under the SLO scheduler")
+        p99_fifo = fifo["summary"]["by_tenant"][gated]["ttft_p99_s"]
+        results["trace"]["gate"] = {
+            "tenant": gated, "slo_ttft_s": slo_s,
+            "slo_p99_ttft_s": p99, "fifo_p99_ttft_s": p99_fifo,
+            "fifo_violates": p99_fifo > slo_s,
+        }
+    tput_ratio = ((slo["tokens"] / slo["steps"])
+                  / (fifo["tokens"] / fifo["steps"]))
+    results["trace"]["throughput_ratio_slo_vs_fifo"] = tput_ratio
+    if tput_ratio < TRACE_TPUT_FLOOR:
+        mismatched.append(
+            f"trace/{trace_name}: SLO throughput ratio {tput_ratio:.3f} "
+            f"below the {TRACE_TPUT_FLOOR} floor vs FIFO")
+
+    # analytical mirror: same trace, same (real) scheduler policy over
+    # the simulator's slot mechanism — the schedule must be identical
+    sim = LLMSimulator(registry.get_config(MODEL), HW.PIM_AI_SERVER,
+                       SimConfig())
+    r_sim = sim.serve(trace=tr, scheduler="slo", max_batch=MAX_BATCH,
+                      max_seq_len=MAX_SEQ, step_quantum_s=TRACE_QUANTUM)
+    mirror_ok = (r_sim["admission_order"] == slo["admission_order"]
+                 and r_sim["preemption_log"] == slo["preemption_log"]
+                 and r_sim["steps"] == slo["steps"])
+    if not mirror_ok:
+        mismatched.append(
+            f"trace/{trace_name}: analytical mirror schedule diverged "
+            "from the engine replay (admissions/preemptions/steps)")
+    results["trace"]["mirror"] = {
+        "profile": HW.PIM_AI_SERVER.name, "matches_engine": mirror_ok,
+        "steps": r_sim["steps"], "preemptions": r_sim["preemptions"],
+        "energy_per_token_j": r_sim["energy_per_token_j"],
+        "energy_j": r_sim["energy_j"],
+    }
+    print_table(
+        "analytical mirror (SLO schedule priced on "
+        f"{HW.PIM_AI_SERVER.name})",
+        ["matches engine", "steps", "preempt", "J/token"],
+        [[str(mirror_ok), r_sim["steps"], r_sim["preemptions"],
+          r3(r_sim["energy_per_token_j"])]])
+
+    # price the same trace shape at cloud scale (xPU vs PIM vs the
+    # autoscaled disaggregated split)
+    priced = run_cloud_trace(trace=trace_name, seed=TRACE_SEED)
+    results["trace"]["pricing"] = {
+        k: {kk: vv for kk, vv in priced[k].items() if kk != "tco"}
+        for k in ("dgx-h100", "pim-ai-engine", "disaggregated")}
+    results["trace"]["pricing"]["ratios"] = priced["ratios"]
+    print_table(
+        f"cloud pricing over the {trace_name!r} trace (llama2-70b/gqa)",
+        ["system", "J/token", "tco $/qps", "slo attain"],
+        [[k, r3(priced[k]["energy_per_token_j"]),
+          r3(priced[k]["tco_per_qps"]),
+          r3(priced[k]["slo_attainment"])]
+         for k in ("dgx-h100", "pim-ai-engine", "disaggregated")])
+
+
 def run(json_path: str | None = None, scheduler: str = "blocking",
-        cluster: bool = False):
+        cluster: bool = False, trace: str | None = None):
     cfg = registry.get_smoke_config(MODEL).replace(dtype="float32")
     params = MD.init_params(jax.random.PRNGKey(0), cfg)
 
@@ -318,6 +459,17 @@ def run(json_path: str | None = None, scheduler: str = "blocking",
                "speculative": []}
     rows = []
     mismatched = []
+    if trace is not None:
+        # the --trace flavor is its own CI step: one seeded multi-tenant
+        # trace, FIFO vs SLO, with the analytical mirror + pricing
+        _run_trace_section(params, cfg, results, mismatched, trace)
+        if json_path:
+            with open(json_path, "w") as f:
+                json.dump(results, f, indent=2, default=float)
+            print(f"\n[wrote {json_path}]")
+        if mismatched:
+            raise SystemExit(f"serving invariants violated: {mismatched}")
+        return results
     if cluster:
         # the --cluster flavor is its own CI step: run only the
         # disaggregated section (the single-engine baselines it needs
@@ -531,5 +683,12 @@ if __name__ == "__main__":
                          "benchmark instead: bitwise + fault-injection "
                          "migration gates, plus the analytical "
                          "heterogeneous xPU+PIM TCO scenario")
+    ap.add_argument("--trace", default=None,
+                    choices=["overload", "steady", "diurnal", "mixshift"],
+                    help="replay this seeded multi-tenant trace instead: "
+                         "FIFO vs SLO-aware scheduling with bitwise, "
+                         "SLO-attainment and throughput gates, the "
+                         "analytical schedule mirror, and cloud pricing")
     args = ap.parse_args()
-    run(args.json, scheduler=args.scheduler, cluster=args.cluster)
+    run(args.json, scheduler=args.scheduler, cluster=args.cluster,
+        trace=args.trace)

@@ -189,6 +189,89 @@ def run_cloud_disaggregated(model: str = "llama2-70b", attn: str = "gqa",
     }
 
 
+def run_cloud_trace(model: str = "llama2-70b", attn: str = "gqa",
+                    trace: str = "diurnal", seed: int = 0,
+                    max_batch: int = 8) -> dict:
+    """Time-varying multi-tenant load priced end-to-end: the seeded
+    named trace (diurnal swing by default) replayed through the
+    simulator's schedule mirror on (a) one DGX-H100, (b) one PIM-AI
+    engine — both under the SLO-aware scheduler — and (c) the
+    disaggregated split (xPU prefill tier feeding PIM decode workers,
+    autoscaler live). Unlike :func:`run_cloud`'s steady-state batch,
+    QPS here is *sustained over the trace horizon*, so idle troughs and
+    bursty peaks move TCO-per-QPS the way a real diurnal tenant mix
+    does. The named traces are schedule-scale (smoke-length prompts),
+    so the absolute numbers calibrate the *shape* of the comparison,
+    not paper-scale magnitudes."""
+    from repro.serving.workload import make_named_trace
+
+    cfg = registry.get_config(model)
+    if attn == "mha":
+        cfg = mha_variant(cfg)
+    tr = make_named_trace(trace, vocab_size=cfg.vocab_size, seed=seed)
+
+    xpu = LLMSimulator(
+        cfg, HW.DGX_H100,
+        SimConfig(orchestration_s=CLOUD_ORCHESTRATION_S, tp_degree=8))
+    pim = LLMSimulator(
+        cfg, HW.pim_engine(),
+        SimConfig(orchestration_s=CLOUD_ORCHESTRATION_S,
+                  tp_degree=HW.DIMMS_PER_ENGINE * HW.CHIPS_PER_DIMM))
+
+    r_xpu = xpu.serve(trace=tr, scheduler="slo", max_batch=max_batch)
+    r_pim = pim.serve(trace=tr, scheduler="slo", max_batch=max_batch)
+    n_pf, n_dec = 1, 3
+    r_dis = pim.serve(trace=tr, cluster=(n_pf, n_dec), max_batch=max_batch,
+                      prefill_sim=xpu,
+                      cluster_opts={"autoscale": True,
+                                    "autoscale_interval": 8,
+                                    "prefill_rate": 2})
+
+    engine_capex = (HW.PIM_AI_SERVER.cost_usd * HW.SERVERS_PER_8U
+                    / HW.ENGINES_PER_8U)
+
+    def _system(r: dict, capex: float) -> dict:
+        n = len(r["requests"])
+        qps = n / max(r["virtual_s"], 1e-12)    # sustained over horizon
+        epq = r["energy_j"] / max(1, n)
+        tco = tco_3yr(capex, qps, epq)
+        return {
+            "requests": n, "tokens": r["tokens"], "steps": r["steps"],
+            "virtual_s": r["virtual_s"], "qps_sustained": qps,
+            "energy_j": r["energy_j"],
+            "energy_per_token_j": r["energy_per_token_j"],
+            "energy_per_query_j": epq,
+            "slo_attainment": r["summary"]["slo_attainment"],
+            "preemptions": r["summary"]["preemptions"],
+            "tco": tco, "tco_per_qps": tco["tco_per_qps"],
+        }
+
+    # disaggregated capex at the provisioned (initial) topology — the
+    # autoscaler re-balances roles, it doesn't buy hardware
+    sys_xpu = _system(r_xpu, HW.DGX_H100.cost_usd)
+    sys_pim = _system(r_pim, engine_capex)
+    sys_dis = _system(r_dis, HW.DGX_H100.cost_usd * n_pf
+                      + engine_capex * n_dec)
+    sys_dis["rescale_log"] = r_dis["rescale_log"]
+    sys_dis["handoffs"] = r_dis["handoffs"]
+    return {
+        "model": model, "attn": attn, "trace": tr.schema(),
+        "max_batch": max_batch,
+        "dgx-h100": sys_xpu,
+        "pim-ai-engine": sys_pim,
+        "disaggregated": sys_dis,
+        "ratios": {
+            # > 1: PIM (or the split) wins on that axis over the trace
+            "energy_per_token": (sys_xpu["energy_per_token_j"]
+                                 / sys_pim["energy_per_token_j"]),
+            "tco_per_qps_pim_vs_h100": (sys_xpu["tco_per_qps"]
+                                        / sys_pim["tco_per_qps"]),
+            "tco_per_qps_disagg_vs_h100": (sys_xpu["tco_per_qps"]
+                                           / sys_dis["tco_per_qps"]),
+        },
+    }
+
+
 MOBILE_PROFILES = (HW.PIM_AI_MOBILE, HW.A17_PRO, HW.SNAPDRAGON_8_GEN3,
                    HW.DIMENSITY_9300)
 

@@ -28,10 +28,12 @@ following the paper's model:
 from __future__ import annotations
 
 import math
+from collections import deque
 from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import costmodel as CM
 from repro.core import trace as T
@@ -168,6 +170,525 @@ def _tp_collective(n_bytes: float, hw: HardwareProfile) -> PhaseResult:
     return r
 
 
+# ---------------------------------------------------------------------------
+# trace-driven serving mirror (serving/workload.py replay, analytically)
+# ---------------------------------------------------------------------------
+
+class _TraceSlotSim:
+    """The *mechanism* half of ``ServingEngine``, analytically: slot
+    arrays, the paged-pool ledger, and the admission / preemption /
+    retirement hooks — driven by the **real** scheduler-policy objects
+    (``make_scheduler``), so the simulated schedule cannot drift from
+    the engine's by construction. Where the engine dispatches a jitted
+    graph, this charges the traced cost model instead; where it moves
+    KV bytes, this charges a host transfer.
+
+    Faithfulness bounds: blocking/SLO admission only (no chunked
+    prefill or speculation — the trace replay gate runs those
+    schedulers on the real engine), and EOS is assumed never sampled
+    (token *values* are not simulated; the trace engines run with
+    ``eos_token=-1``), so every stream runs to its budget or the
+    capacity — exactly what the length-driven schedule needs."""
+
+    _TOKEN = -(2 ** 30)   # placeholder "sampled token": never equal to
+                          # a real eos id, so retirement is length-driven
+
+    def __init__(self, sim: "LLMSimulator", ecfg, *, kv_cache: str,
+                 kv_block_size: int, prefill_sim=None):
+        from repro.serving.kv_cache import kv_bytes_per_token
+        from repro.serving.scheduler import make_scheduler
+        self.sim = sim
+        self.hw, self.scfg = sim.hw, sim.sim
+        self.ecfg = ecfg
+        self.kv_kind = kv_cache
+        self.block_size = kv_block_size
+        B, C = ecfg.max_batch, ecfg.max_seq_len
+        # the attribute surface the scheduler policies touch
+        self.slot_req = [None] * B
+        self.slot_len = np.zeros(B, np.int32)
+        self.slot_pos = np.zeros(B, np.int32)
+        self.slot_nprompt = np.zeros(B, np.int32)
+        self.waiting: deque = deque()
+        self.finished: list = []
+        self.prefilling: dict = {}    # always empty: blocking admission
+        self.preempted_packets: dict = {}
+        self.preemptions = 0
+        self.preempted_kv_bytes = 0
+        self.admission_log: list[int] = []
+        self.preemption_log: list[tuple[int, int]] = []
+        self.scheduler = make_scheduler(sim.cfg, ecfg)
+        self.step_index = 0
+        self.now_s = 0.0
+        self.decode_steps = 0
+        self.prefills = 0
+        # paged-pool ledger: block counts are all the schedule needs
+        # (the real backend's lazy allocation fills each slot's table
+        # as a contiguous prefix — mirrored by a per-slot count)
+        if kv_cache == "paged":
+            if C % kv_block_size:
+                raise ValueError(
+                    f"kv_block_size={kv_block_size} must divide "
+                    f"max_seq_len={C}")
+            self._free_blocks = ecfg.kv_blocks or B * (C // kv_block_size)
+            self._nblk = np.zeros(B, np.int64)
+            self._rsv = np.zeros(B, np.int64)
+        # pricing: prefill dispatches may run on different hardware
+        # (xPU prefill tier); decode and transfers on this sim's
+        self._psim = prefill_sim or sim
+        self.enc = PhaseResult()
+        self.dec = PhaseResult()
+        self.xfer = PhaseResult()
+        self._bpt = kv_bytes_per_token(sim.cfg) * (sim.sim.act_bits / 16.0)
+        self._dec_ops = sim._decode_ops_linear(
+            B, C, ragged=True, kv_cache=kv_cache,
+            kv_block_size=kv_block_size)
+
+    # -- clock / engine surface -------------------------------------------
+    def set_now(self, t: float) -> None:
+        self.now_s = float(t)
+
+    def _now(self) -> float:
+        return self.now_s
+
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.preempted_packets
+                    or any(r is not None for r in self.slot_req))
+
+    def _budget(self, req) -> int:
+        return (req.max_new_tokens if req.max_new_tokens is not None
+                else self.ecfg.max_new_tokens)
+
+    def _prompt_cap(self) -> int:
+        cfg = self.sim.cfg
+        n_prefix = (cfg.n_image_tokens
+                    if cfg.family == "vlm" and cfg.n_image_tokens else 0)
+        return self.ecfg.max_seq_len - 1 - n_prefix
+
+    def _bucket_len(self, n: int) -> int:
+        """The prefill dispatch length the engine would compile
+        (power-of-two buckets), so the priced prefill matches the
+        dispatched one — and the trace's distinct-jaxpr count stays
+        small."""
+        cfg = self.sim.cfg
+        cap = self._prompt_cap()
+        bucketed = (self.ecfg.prefill_bucket_min > 0
+                    and cfg.family in MD.TRANSFORMER_FAMILIES
+                    + ("audio",) + MD.RECURRENT_FAMILIES
+                    and cfg.sliding_window is None)
+        if not bucketed:
+            return min(n, cap)
+        b = self.ecfg.prefill_bucket_min
+        while b < n:
+            b *= 2
+        return min(b, cap)
+
+    # -- paged-pool ledger -------------------------------------------------
+    def _need_blocks(self, n_prompt: int, budget: int) -> int:
+        n_pos = min(n_prompt + max(budget, 1) - 1,
+                    self.ecfg.max_seq_len - 1)
+        return math.ceil(max(n_pos, 1) / self.block_size)
+
+    def can_admit(self, n_prompt: int, budget: int) -> bool:
+        if self.kv_kind != "paged":
+            return True
+        return (self._free_blocks - int(self._rsv.sum())
+                >= self._need_blocks(n_prompt, budget))
+
+    def _ledger_bind(self, slot: int, n_prompt: int, budget: int, *,
+                     n_valid: int | None = None) -> None:
+        """Mirror of ``PagedCache.splice`` (fresh admit) / ``import_slot``
+        (resume): allocate the prefix blocks, reserve the worst case."""
+        if self.kv_kind != "paged":
+            return
+        held = n_prompt if n_valid is None else n_valid
+        now = max(1, math.ceil(max(held, 1) / self.block_size))
+        self._free_blocks -= now
+        self._nblk[slot] = now
+        self._rsv[slot] = max(0, self._need_blocks(n_prompt, budget) - now)
+
+    def _ledger_grow(self, slot: int) -> None:
+        """Mirror of ``decode_view``'s lazy allocation at the write
+        head (one block when the position crosses a boundary)."""
+        if self.kv_kind != "paged":
+            return
+        b = int(self.slot_pos[slot]) // self.block_size
+        if b >= int(self._nblk[slot]):
+            self._free_blocks -= 1
+            self._nblk[slot] = b + 1
+            self._rsv[slot] = max(0, int(self._rsv[slot]) - 1)
+
+    def _ledger_free(self, slot: int) -> None:
+        if self.kv_kind != "paged":
+            return
+        self._free_blocks += int(self._nblk[slot])
+        self._nblk[slot] = 0
+        self._rsv[slot] = 0
+
+    def _span_bytes(self, n_valid: int) -> int:
+        """Bytes of one exported slot packet — the quantized span the
+        real ``export_slot`` ships."""
+        from repro.serving.kv_cache import _export_span
+        if self.kv_kind == "paged":
+            span = max(1, math.ceil(max(n_valid, 1)
+                                    / self.block_size)) * self.block_size
+        else:
+            span = min(_export_span(n_valid), self.ecfg.max_seq_len)
+        return int(span * self._bpt)
+
+    # -- admission / preemption mechanism (called by the scheduler) --------
+    def _admit_one(self, slot: int, req) -> bool:
+        if req.rid in self.preempted_packets:
+            return self._resume_slot(slot, req)
+        budget = self._budget(req)
+        if budget <= 0:
+            req.t_first = req.t_done = self._now()
+            self.finished.append(req)
+            return True
+        cap = self._prompt_cap()
+        n_tok = int(req.prompt.shape[0])
+        if n_tok > cap:
+            req.truncated_from = n_tok
+            n_tok = cap
+        cfg = self.sim.cfg
+        n_prefix = (cfg.n_image_tokens
+                    if cfg.family == "vlm" and cfg.n_image_tokens else 0)
+        n_prompt = n_tok + n_prefix
+        if not self.can_admit(n_prompt, budget):
+            return False
+        # one bucketed whole-prompt prefill dispatch, priced on the
+        # prefill tier's hardware
+        self.enc.add(self._psim.encode(1, self._bucket_len(n_tok)))
+        self.prefills += 1
+        self.admission_log.append(req.rid)
+        req.prefill_chunks = 1
+        req.t_first = self._now()
+        req.output.append(self._TOKEN)
+        if budget <= 1 or n_prompt >= self.ecfg.max_seq_len - 1:
+            req.t_done = self._now()   # admit-time retirement
+            self.finished.append(req)
+            return True
+        self._ledger_bind(slot, n_prompt, budget)
+        self.slot_req[slot] = req
+        self.slot_len[slot] = 1
+        self.slot_pos[slot] = n_prompt
+        self.slot_nprompt[slot] = n_prompt
+        return True
+
+    def _pack_slot(self, slot: int) -> dict:
+        req = self.slot_req[slot]
+        pkt = {"req": req, "pos": int(self.slot_pos[slot]),
+               "gen_len": int(self.slot_len[slot]),
+               "n_prompt": int(self.slot_nprompt[slot]),
+               "budget": self._budget(req),
+               "kv_bytes": self._span_bytes(int(self.slot_pos[slot]))}
+        self.slot_req[slot] = None
+        self.slot_len[slot] = 0
+        self._ledger_free(slot)
+        return pkt
+
+    def _unpack_slot(self, pkt: dict, slot: int) -> None:
+        self._ledger_bind(slot, pkt["n_prompt"], pkt["budget"],
+                          n_valid=pkt["pos"])
+        self.slot_req[slot] = pkt["req"]
+        self.slot_len[slot] = pkt["gen_len"]
+        self.slot_pos[slot] = pkt["pos"]
+        self.slot_nprompt[slot] = pkt["n_prompt"]
+
+    def preempt_slot(self, slot: int) -> dict:
+        req = self.slot_req[slot]
+        if req is None:
+            raise ValueError(f"slot {slot} is not live")
+        pkt = self._pack_slot(slot)
+        self.preempted_packets[req.rid] = pkt
+        req.preemptions += 1
+        self.preemptions += 1
+        self.preempted_kv_bytes += pkt["kv_bytes"]
+        self.preemption_log.append((self.step_index, req.rid))
+        self.waiting.append(req)
+        # eviction ships the packet to host memory
+        self.xfer.add(_host_transfer(pkt["kv_bytes"], self.hw, d2h=True))
+        return pkt
+
+    def _resume_slot(self, slot: int, req) -> bool:
+        pkt = self.preempted_packets[req.rid]
+        if not self.can_admit(pkt["n_prompt"], pkt["budget"]):
+            return False
+        del self.preempted_packets[req.rid]
+        self._unpack_slot(pkt, slot)
+        self.admission_log.append(req.rid)
+        self.xfer.add(_host_transfer(pkt["kv_bytes"], self.hw, d2h=False))
+        return True
+
+    def _retire_slot(self, i: int) -> None:
+        req = self.slot_req[i]
+        req.t_done = self._now()
+        self.finished.append(req)
+        self.slot_req[i] = None
+        self.slot_len[i] = 0
+        self._ledger_free(i)
+
+    # -- the step loop -----------------------------------------------------
+    def _decode_step_cost(self, l_mean: float) -> PhaseResult:
+        r = PhaseResult()
+        for lop in self._dec_ops:
+            r.add(_op_cost(lop.at(l_mean), self.hw, self.scfg))
+        B = self.ecfg.max_batch
+        r.add(_host_transfer(B * 4, self.hw, d2h=True))
+        r.add(_host_transfer(B * 4, self.hw, d2h=False))
+        if self.scfg.tp_degree > 1:
+            cfg = self.sim.cfg
+            per_tok = (2 * cfg.n_layers * cfg.d_model * 2
+                       * (self.scfg.tp_degree - 1) / self.scfg.tp_degree)
+            r.add(_tp_collective(per_tok * B, self.hw))
+        r.seconds += self.scfg.orchestration_s
+        r.host_s += self.scfg.orchestration_s
+        return r
+
+    def step(self) -> PhaseResult | None:
+        """One engine iteration, in the exact order ``ServingEngine.
+        step`` runs it: admit -> one ragged decode dispatch over the
+        live slots -> retire. Returns the step's decode cost (the
+        cluster mirror max-reduces it across parallel workers)."""
+        self.step_index += 1
+        self.scheduler.admit(self)
+        live = [i for i, r in enumerate(self.slot_req) if r is not None]
+        cost = None
+        if live:
+            for i in live:
+                self._ledger_grow(i)
+            l_mean = float(np.mean([int(self.slot_pos[i]) for i in live]))
+            cost = self._decode_step_cost(l_mean)
+            self.dec.add(cost)
+            self.decode_steps += 1
+            for i in live:
+                self.slot_req[i].output.append(self._TOKEN)
+                self.slot_len[i] += 1
+                self.slot_pos[i] += 1
+        self.scheduler.retire(self)
+        return cost
+
+
+class _TraceWorker:
+    """One tier worker of the cluster mirror (a ``_TraceSlotSim`` plus
+    the routing flags ``ClusterEngine.Worker`` carries)."""
+
+    def __init__(self, role: str, idx: int, eng: _TraceSlotSim):
+        self.role = role
+        self.idx = idx
+        self.alive = True
+        self.draining = False
+        self.eng = eng
+
+    def live_slots(self) -> list[int]:
+        return [i for i, r in enumerate(self.eng.slot_req) if r is not None]
+
+    def free_slot(self) -> int | None:
+        for i, r in enumerate(self.eng.slot_req):
+            if r is None:
+                return i
+        return None
+
+
+class _TraceClusterSim:
+    """``ClusterEngine``, analytically: the same admit → place → step
+    loop over ``_TraceWorker`` tiers, the same least-loaded router and
+    prefill-rate throttle, and — critically — the same shared
+    :func:`repro.serving.workload.autoscale_decision` at the same step
+    cadence, so the rescale schedule is bit-identical to the engine's.
+    Healthy clusters only (no straggler drain / kill injection — those
+    paths are exercised on the real engine)."""
+
+    def __init__(self, sim: "LLMSimulator", ecfg, *, kv_cache: str,
+                 kv_block_size: int, n_prefill: int, n_decode: int,
+                 opts: dict, prefill_sim=None):
+        self.sim = sim
+        self.ecfg = ecfg
+        self.opts = opts
+        mk = lambda: _TraceSlotSim(sim, ecfg, kv_cache=kv_cache,
+                                   kv_block_size=kv_block_size,
+                                   prefill_sim=prefill_sim)
+        self.prefill_workers = [_TraceWorker("prefill", i, mk())
+                                for i in range(n_prefill)]
+        self.decode_workers = [_TraceWorker("decode", n_prefill + i, mk())
+                               for i in range(n_decode)]
+        self.waiting: deque = deque()
+        self.pending: deque = deque()
+        self.finished: list = []
+        self._pf_rr = 0
+        self.handoffs = 0
+        self.migrations = 0
+        self.kv_transfer_bytes = 0
+        self.migration_bytes = 0
+        self.steps = 0
+        self.rescale_log: list[tuple[int, str]] = []
+        self.now_s = 0.0
+        self.xfer = PhaseResult()      # interconnect handoff / migration
+        self.decode_wall_s = 0.0       # parallel decode tier: max/step
+
+    # -- surface -----------------------------------------------------------
+    def set_now(self, t: float) -> None:
+        self.now_s = float(t)
+        for w in self.prefill_workers + self.decode_workers:
+            w.eng.set_now(t)
+
+    def _now(self) -> float:
+        return self.now_s
+
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.pending
+                    or any(w.alive and w.live_slots()
+                           for w in self.decode_workers))
+
+    @property
+    def decode_steps(self) -> int:
+        return sum(w.eng.decode_steps
+                   for w in self.prefill_workers + self.decode_workers)
+
+    # -- internals (mirroring ClusterEngine method-for-method) -------------
+    def _budget_slots(self, w) -> int:
+        cap = self.ecfg.max_batch
+        inf = int(self.opts.get("in_flight", 0))
+        return min(inf, cap) if inf else cap
+
+    def _decode_headroom(self) -> int:
+        cap = 0
+        for w in self.decode_workers:
+            if w.alive and not w.draining:
+                cap += max(0, self._budget_slots(w) - len(w.live_slots()))
+        return cap - len(self.pending)
+
+    def _collect(self, eng: _TraceSlotSim) -> None:
+        if eng.finished:
+            self.finished.extend(eng.finished)
+            eng.finished.clear()
+
+    def _interconnect(self, n_bytes: int) -> PhaseResult:
+        hw = self.sim.hw
+        bw = (hw.interconnect_bw_gbs or hw.h2d_bw_gbs) * 1e9
+        pj = (hw.interconnect_pj_per_bit
+              if hw.interconnect_bw_gbs else hw.h2d_pj_per_bit)
+        r = PhaseResult()
+        r.seconds = n_bytes / bw
+        r.host_s = r.seconds
+        r.host_bytes = n_bytes
+        r.energy_j = n_bytes * 8 * pj * 1e-12
+        return r
+
+    def _export_slot(self, w: _TraceWorker, slot: int, *,
+                     migration: bool = False) -> None:
+        pkt = w.eng._pack_slot(slot)
+        self.kv_transfer_bytes += pkt["kv_bytes"]
+        if migration:
+            self.migrations += 1
+            self.migration_bytes += pkt["kv_bytes"]
+        else:
+            self.handoffs += 1
+        self.pending.append(pkt)
+        self.xfer.add(self._interconnect(pkt["kv_bytes"]))
+
+    def _migrate_all(self, w: _TraceWorker) -> None:
+        for slot in w.live_slots():
+            self._export_slot(w, slot, migration=True)
+
+    def _autoscale(self) -> None:
+        from repro.serving.workload import autoscale_decision
+        routable = [w for w in self.decode_workers
+                    if w.alive and not w.draining]
+        alive_pf = [w for w in self.prefill_workers if w.alive]
+        decision = autoscale_decision(
+            waiting=len(self.waiting), pending=len(self.pending),
+            live=sum(len(w.live_slots()) for w in routable),
+            n_prefill=len(alive_pf), n_decode=len(routable),
+            slots_per_worker=self.ecfg.max_batch)
+        if decision == "to_decode":
+            w = alive_pf[-1]
+            self.prefill_workers.remove(w)
+            w.role = "decode"
+            self.decode_workers.append(w)
+        elif decision == "to_prefill":
+            w = min(routable, key=lambda o: (len(o.live_slots()),
+                                             self.decode_workers.index(o)))
+            self._migrate_all(w)
+            self.decode_workers.remove(w)
+            w.role = "prefill"
+            self.prefill_workers.append(w)
+        if decision:
+            self.rescale_log.append((self.steps, decision))
+
+    def _admit_prefills(self) -> None:
+        head = self._decode_headroom()
+        if not self.waiting:
+            return
+        pws = [w for w in self.prefill_workers if w.alive]
+        rate = int(self.opts.get("prefill_rate", 0))
+        quota = rate * len(pws) if rate > 0 else float("inf")
+        while self.waiting and head > 0 and quota > 0:
+            quota -= 1
+            w = pws[self._pf_rr % len(pws)]
+            self._pf_rr += 1
+            req = self.waiting.popleft()
+            w.eng.waiting.append(req)
+            w.eng.scheduler.admit(w.eng)
+            self._collect(w.eng)   # admit-time retirements finish here
+            if w.eng.waiting:
+                # deferred by the worker's pool ledger: push back, stop
+                self.waiting.appendleft(w.eng.waiting.popleft())
+                break
+            for slot in w.live_slots():
+                self._export_slot(w, slot)
+                head -= 1
+
+    def _route(self, pkt: dict) -> _TraceWorker | None:
+        best = None
+        for w in self.decode_workers:
+            if not w.alive or w.draining:
+                continue
+            live = len(w.live_slots())
+            if live >= self._budget_slots(w) or w.free_slot() is None:
+                continue
+            if not w.eng.can_admit(pkt["n_prompt"], pkt["budget"]):
+                continue
+            if best is None or live < len(best.live_slots()):
+                best = w
+        return best
+
+    def _place_pending(self) -> None:
+        still: deque = deque()
+        while self.pending:
+            pkt = self.pending.popleft()
+            w = self._route(pkt)
+            if w is None:
+                still.append(pkt)
+                continue
+            w.eng._unpack_slot(pkt, w.free_slot())
+        self.pending = still
+
+    def step(self) -> None:
+        from repro.serving.scheduler import slo_sort_key
+        self.steps += 1
+        if (self.opts.get("autoscale")
+                and self.steps % int(self.opts.get("autoscale_interval", 8))
+                == 0):
+            self._autoscale()
+        if self.opts.get("slo_aware") and len(self.waiting) > 1:
+            now = self._now()
+            ordered = sorted(self.waiting,
+                             key=lambda r: slo_sort_key(r, now))
+            self.waiting.clear()
+            self.waiting.extend(ordered)
+        self._admit_prefills()
+        self._place_pending()
+        wall = 0.0
+        for w in self.decode_workers:
+            if not w.alive or not w.live_slots():
+                continue
+            cost = w.eng.step()
+            self._collect(w.eng)
+            if cost is not None:
+                wall = max(wall, cost.seconds)
+        self.decode_wall_s += wall
+
+
 class LLMSimulator:
     """Per-(model, profile) generation simulator: encode + decode."""
 
@@ -264,12 +785,17 @@ class LLMSimulator:
         total.host_s += self.sim.orchestration_s * n_out
         return total
 
-    def serve(self, n_ins, n_out: int, *, kv_cache: str = "contiguous",
+    def serve(self, n_ins=None, n_out: int = 0, *,
+              kv_cache: str = "contiguous",
               kv_block_size: int = 16, max_seq_len: int | None = None,
               scheduler: str = "blocking", chunk_tokens: int = 64,
               gamma: int = 4, acceptance: float = 0.8,
               draft_layers: int = 0,
-              cluster: tuple | None = None) -> dict:
+              cluster: tuple | None = None,
+              trace=None, step_quantum_s: float = 0.01,
+              max_batch: int = 8, kv_blocks: int = 0,
+              cluster_opts: dict | None = None,
+              prefill_sim: "LLMSimulator | None" = None) -> dict:
         """Continuous-batching cloud scenario (matches ``ServingEngine``):
         per-request prefill + one fully-ragged decode dispatch per step
         over the whole batch, each row's KV span growing from its own
@@ -309,9 +835,52 @@ class LLMSimulator:
         is handed off once over the device interconnect (charged bytes
         + energy), and the decode batch splits across ``n_decode``
         workers stepping in parallel. Blocking scheduler only — exactly
-        the restriction the engine enforces."""
+        the restriction the engine enforces.
+
+        ``trace=`` (a :class:`repro.serving.workload.Trace`) switches to
+        the step-driven multi-tenant mirror: the simulator runs the
+        *actual* scheduler-policy objects (``BlockingScheduler`` /
+        ``SLOScheduler``, and the shared cluster autoscale policy) over
+        an analytical slot mechanism on the same virtual clock the
+        ``replay`` driver uses, so the admission order, preemption log
+        and rescale schedule are reproduced exactly — and then priced
+        per dispatch through the hardware cost model. ``scheduler``
+        must be ``"blocking"`` or ``"slo"``; ``max_batch`` /
+        ``max_seq_len`` / ``step_quantum_s`` mirror the engine
+        configuration; ``cluster`` + ``cluster_opts`` (``autoscale``,
+        ``autoscale_interval``, ``prefill_rate``, ``in_flight``,
+        ``slo_aware``) mirror ``ClusterConfig``; ``prefill_sim`` prices
+        prefill dispatches on different hardware (the paper's
+        xPU-prefill / PIM-decode split)."""
         from repro.serving.kv_cache import (contiguous_kv_bytes,
                                             paged_resident_kv_bytes)
+        if trace is not None:
+            if scheduler not in ("blocking", "slo"):
+                raise ValueError(
+                    f"trace serving mirrors blocking/slo admission, got "
+                    f"scheduler={scheduler!r}")
+            cap = max_seq_len or (
+                max(int(r.prompt.shape[0]) for r in trace.requests)
+                + max(int(r.max_new_tokens) for r in trace.requests) + 1)
+            if cluster is not None:
+                if scheduler != "blocking":
+                    raise ValueError(
+                        f"cluster serving requires scheduler='blocking', "
+                        f"got {scheduler!r} (mirrors ClusterEngine)")
+                return self._serve_trace_cluster(
+                    trace, kv_cache=kv_cache, kv_block_size=kv_block_size,
+                    cap=cap, max_batch=max_batch, kv_blocks=kv_blocks,
+                    n_prefill=int(cluster[0]), n_decode=int(cluster[1]),
+                    step_quantum_s=step_quantum_s,
+                    opts=cluster_opts or {}, prefill_sim=prefill_sim)
+            return self._serve_trace(
+                trace, kv_cache=kv_cache, kv_block_size=kv_block_size,
+                cap=cap, scheduler=scheduler, max_batch=max_batch,
+                kv_blocks=kv_blocks,
+                step_quantum_s=step_quantum_s, prefill_sim=prefill_sim)
+        if n_ins is None:
+            raise TypeError("serve() needs a workload: either n_ins/"
+                            "n_out or trace=")
         batch = len(n_ins)
         cap = max_seq_len or (max(int(n) for n in n_ins) + n_out)
         if cluster is not None:
@@ -566,6 +1135,191 @@ class LLMSimulator:
             "prefill_chunks": batch,
             "resident_kv_bytes": resident,
             "contiguous_kv_bytes": contiguous_bytes,
+        }
+
+    # -- trace-driven multi-tenant mirror ----------------------------------
+    def _trace_requests(self, trace):
+        """Real ``Request`` objects for the trace, in replay submit
+        order — rids match the trace's, so schedule logs compare
+        directly against ``workload.replay``'s translated ones."""
+        from repro.serving.engine import Request
+        order = sorted(trace.requests, key=lambda r: (r.arrival_s, r.rid))
+        return deque(
+            Request(tr.rid, np.asarray(tr.prompt, np.int32),
+                    int(tr.max_new_tokens), seed=tr.seed,
+                    tenant=tr.tenant, priority=int(tr.priority),
+                    slo=tr.slo, arrival_s=float(tr.arrival_s),
+                    t_submit=float(tr.arrival_s))
+            for tr in order)
+
+    def _trace_summary(self, done, preemptions: int) -> dict:
+        from repro.serving.engine import request_breakdowns
+        if not done:
+            return {"requests": 0}
+        ttft = [r.ttft_s for r in done]
+        return {
+            "requests": len(done),
+            "tokens": sum(len(r.output) for r in done),
+            "mean_ttft_s": float(np.mean(ttft)),
+            "ttft_p50_s": float(np.percentile(ttft, 50)),
+            "ttft_p99_s": float(np.percentile(ttft, 99)),
+            "mean_itl_s": float(np.mean(
+                [r.itl_s for r in done if len(r.output) > 1] or [0.0])),
+            "preemptions": preemptions,
+            "slo_attainment": sum(r.slo_met for r in done) / len(done),
+            **request_breakdowns(done),
+        }
+
+    def _serve_trace(self, trace, *, kv_cache: str, kv_block_size: int,
+                     cap: int, scheduler: str, max_batch: int,
+                     step_quantum_s: float, kv_blocks: int = 0,
+                     prefill_sim=None,
+                     max_steps: int = 200_000) -> dict:
+        """Single-engine trace mirror: the replay loop of
+        ``serving.workload.replay``, verbatim, over the analytical slot
+        mechanism — same virtual clock, same arrival quantization, same
+        (real) scheduler policy. The returned ``admission_order`` /
+        ``preemption_log`` / per-request virtual TTFTs are equal to the
+        engine replay's; the PhaseResults price that schedule on this
+        simulator's hardware."""
+        from repro.serving.engine import EngineConfig
+        ecfg = EngineConfig(max_batch=max_batch, max_seq_len=cap,
+                            scheduler=scheduler, kv_cache=kv_cache,
+                            kv_block_size=kv_block_size,
+                            kv_blocks=kv_blocks)
+        tsim = _TraceSlotSim(self, ecfg, kv_cache=kv_cache,
+                             kv_block_size=kv_block_size,
+                             prefill_sim=prefill_sim)
+        queue = self._trace_requests(trace)
+        it = 0
+        while queue or tsim.has_work():
+            if it >= max_steps:
+                raise RuntimeError(
+                    f"trace {trace.name!r} did not drain in "
+                    f"{max_steps} steps")
+            now = it * step_quantum_s
+            tsim.set_now(now)
+            while queue and queue[0].arrival_s <= now:
+                tsim.waiting.append(queue.popleft())
+            tsim.step()
+            it += 1
+        tsim.set_now(it * step_quantum_s)
+        done = tsim.finished
+        toks = sum(len(r.output) for r in done)
+        enc, dec, xfer = tsim.enc, tsim.dec, tsim.xfer
+        busy = enc.seconds + dec.seconds + xfer.seconds
+        energy = enc.energy_j + dec.energy_j + xfer.energy_j
+        horizon = it * step_quantum_s
+        return {
+            "trace": trace.name,
+            "scheduler": scheduler,
+            "kv_cache": kv_cache,
+            "steps": it,
+            "step_quantum_s": step_quantum_s,
+            "virtual_s": horizon,
+            "decode_steps": tsim.decode_steps,
+            "tokens": toks,
+            "requests": {r.rid: r for r in done},
+            "admission_order": list(tsim.admission_log),
+            "preemption_log": list(tsim.preemption_log),
+            "preemptions": tsim.preemptions,
+            "preempted_kv_bytes": tsim.preempted_kv_bytes,
+            "prefills": tsim.prefills,
+            "summary": self._trace_summary(done, tsim.preemptions),
+            # priced on this simulator's hardware profile
+            "encode": enc,
+            "decode": dec,
+            "kv_transfer": xfer,
+            "busy_s": busy,
+            "energy_j": energy,
+            "energy_per_token_j": energy / max(1, toks),
+            "tokens_per_s": toks / max(dec.seconds, 1e-12),
+            "qps": len(done) / max(busy, 1e-12),
+            "utilization": busy / max(horizon, 1e-12),
+        }
+
+    def _serve_trace_cluster(self, trace, *, kv_cache: str,
+                             kv_block_size: int, cap: int, max_batch: int,
+                             n_prefill: int, n_decode: int,
+                             step_quantum_s: float, opts: dict,
+                             kv_blocks: int = 0, prefill_sim=None,
+                             max_steps: int = 200_000) -> dict:
+        """Disaggregated trace mirror: ``ClusterEngine`` replay over
+        analytical workers — including the shared autoscale policy, the
+        prefill-rate throttle and the per-request KV handoff, each
+        priced (prefill dispatches optionally on ``prefill_sim``'s
+        xPU-class hardware — the paper's heterogeneous split)."""
+        from repro.serving.engine import EngineConfig
+        if n_prefill < 1 or n_decode < 1:
+            raise ValueError(f"cluster needs >= 1 worker per phase, got "
+                             f"({n_prefill}, {n_decode})")
+        ecfg = EngineConfig(max_batch=max_batch, max_seq_len=cap,
+                            scheduler="blocking", kv_cache=kv_cache,
+                            kv_block_size=kv_block_size,
+                            kv_blocks=kv_blocks)
+        csim = _TraceClusterSim(self, ecfg, kv_cache=kv_cache,
+                                kv_block_size=kv_block_size,
+                                n_prefill=n_prefill, n_decode=n_decode,
+                                opts=opts, prefill_sim=prefill_sim)
+        queue = self._trace_requests(trace)
+        it = 0
+        while queue or csim.has_work():
+            if it >= max_steps:
+                raise RuntimeError(
+                    f"trace {trace.name!r} did not drain in "
+                    f"{max_steps} steps")
+            now = it * step_quantum_s
+            csim.set_now(now)
+            while queue and queue[0].arrival_s <= now:
+                csim.waiting.append(queue.popleft())
+            csim.step()
+            it += 1
+        csim.set_now(it * step_quantum_s)
+        done = csim.finished
+        toks = sum(len(r.output) for r in done)
+        workers = csim.prefill_workers + csim.decode_workers
+        enc = PhaseResult()
+        dec = PhaseResult()
+        for w in workers:
+            enc.add(w.eng.enc)
+            dec.add(w.eng.dec)
+        # decode workers step in parallel: wall is the per-step max,
+        # energy/ops stay the sum over workers
+        dec.seconds = csim.decode_wall_s
+        xfer = csim.xfer
+        busy = enc.seconds + dec.seconds + xfer.seconds
+        energy = enc.energy_j + dec.energy_j + xfer.energy_j
+        horizon = it * step_quantum_s
+        return {
+            "trace": trace.name,
+            "scheduler": "blocking",
+            "kv_cache": kv_cache,
+            "cluster": (n_prefill, n_decode),
+            "n_prefill": len(csim.prefill_workers),
+            "n_decode": len(csim.decode_workers),
+            "steps": it,
+            "step_quantum_s": step_quantum_s,
+            "virtual_s": horizon,
+            "decode_steps": csim.decode_steps,
+            "tokens": toks,
+            "requests": {r.rid: r for r in done},
+            "handoffs": csim.handoffs,
+            "migrations": csim.migrations,
+            "kv_transfer_bytes": csim.kv_transfer_bytes,
+            "migration_bytes": csim.migration_bytes,
+            "rescale_events": len(csim.rescale_log),
+            "rescale_log": list(csim.rescale_log),
+            "summary": self._trace_summary(
+                done, sum(r.preemptions for r in done)),
+            "encode": enc,
+            "decode": dec,
+            "kv_transfer": xfer,
+            "busy_s": busy,
+            "energy_j": energy,
+            "energy_per_token_j": energy / max(1, toks),
+            "tokens_per_s": toks / max(dec.seconds, 1e-12),
+            "qps": len(done) / max(busy, 1e-12),
+            "utilization": busy / max(horizon, 1e-12),
         }
 
     def _draft_cfg(self, draft_layers: int):

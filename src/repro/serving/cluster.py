@@ -59,7 +59,12 @@ import jax
 import numpy as np
 
 from repro.distributed.fault_tolerance import StragglerMonitor
-from repro.serving.engine import EngineConfig, Request, ServingEngine
+from repro.serving.engine import (EngineConfig, Request, ServingEngine,
+                                  SlotPacket, request_breakdowns)
+from repro.serving.scheduler import slo_sort_key
+from repro.serving.workload import autoscale_decision
+
+__all__ = ["ClusterConfig", "ClusterEngine", "SlotPacket", "Worker"]
 
 
 @dataclass
@@ -72,26 +77,27 @@ class ClusterConfig:
                                   # 0 -> the worker's max_batch slots
     straggler_factor: float = 3.0  # StragglerMonitor deadline multiplier
     auto_drain_stragglers: bool = False
+    slo_aware: bool = False       # order the cluster queue by priority /
+                                  # deadline slack (scheduler.slo_sort_key)
+                                  # instead of FIFO
+    autoscale: bool = False       # re-provision workers between the
+                                  # prefill and decode tiers as the
+                                  # workload mix shifts
+    autoscale_interval: int = 8   # cluster steps between rescale decisions
+    prefill_rate: int = 0         # admissions per alive prefill worker per
+                                  # step; 0 = unlimited (legacy behavior).
+                                  # With autoscale on, a finite rate makes
+                                  # the prefill tier size a real step-space
+                                  # throughput knob.
 
     def __post_init__(self):
         if self.n_prefill < 1 or self.n_decode < 1:
             raise ValueError(
                 f"cluster needs >= 1 prefill and >= 1 decode worker, got "
                 f"n_prefill={self.n_prefill} n_decode={self.n_decode}")
-
-
-@dataclass
-class SlotPacket:
-    """One request's live state in flight between workers."""
-    req: Request
-    seed: int
-    tok: int          # last sampled token (next dispatch's input)
-    pos: int          # absolute position; KV valid to pos - 1
-    gen_len: int      # tokens generated so far
-    n_prompt: int     # sequence positions the prompt occupies
-    budget: int       # total generation budget (admission-time value)
-    kv: dict          # host-side cache packet (export_slot)
-    hops: int = 0     # migrations this request has survived
+        if self.autoscale and self.autoscale_interval < 1:
+            raise ValueError(
+                f"autoscale_interval={self.autoscale_interval} must be >= 1")
 
 
 class Worker:
@@ -166,31 +172,69 @@ class ClusterEngine:
         self.migrations = 0
         self.kv_transfer_bytes = 0
         self.migration_bytes = 0
+        # autoscaling / virtual-clock state (trace replay)
+        self.steps = 0
+        self.rescale_log: list[tuple[int, str]] = []  # (step, direction)
+        self.clock = "wall"
+        self.now_s = 0.0
 
     # -- public API --------------------------------------------------------
     def submit(self, prompt, max_new_tokens: int | None = None,
-               seed: int | None = None) -> Request:
+               seed: int | None = None, *, tenant: str = "",
+               priority: int = 0, slo=None,
+               arrival_s: float | None = None) -> Request:
         req = Request(self._next_rid, np.asarray(prompt, np.int32),
-                      max_new_tokens, seed=seed, t_submit=time.time())
+                      max_new_tokens, seed=seed, tenant=tenant,
+                      priority=int(priority), slo=slo, arrival_s=arrival_s,
+                      t_submit=(arrival_s if arrival_s is not None
+                                else self._now()))
         self._next_rid += 1
         self.waiting.append(req)
         return req
 
+    def set_now(self, t: float) -> None:
+        """Virtual clock for trace replay, propagated to every worker
+        engine so all latency stamps share one simulated timeline."""
+        self.clock = "virtual"
+        self.now_s = float(t)
+        for w in self.prefill_workers + self.decode_workers:
+            w.eng.set_now(t)
+
+    def _now(self) -> float:
+        return self.now_s if self.clock == "virtual" else time.time()
+
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.pending or self._any_live())
+
+    @property
+    def decode_steps(self) -> int:
+        # sum over *all* workers: autoscaling moves engines between
+        # tiers and their history must not vanish with them
+        return sum(w.eng.decode_steps
+                   for w in self.prefill_workers + self.decode_workers)
+
     def run(self, max_steps: int = 10_000) -> list[Request]:
         """Drive until every submitted request finishes."""
         steps = 0
-        while (self.waiting or self.pending or self._any_live()) \
-                and steps < max_steps:
+        while self.has_work() and steps < max_steps:
             self.step()
             steps += 1
         return self.finished
 
     def step(self):
-        """One cluster iteration: admit waiting requests into prefill
-        workers (whole-prompt prefill + KV export), place pending
-        handoff packets on decode workers (least-loaded router), then
-        run one engine step on every decode worker that holds live
-        slots."""
+        """One cluster iteration: (optionally) rescale the tiers, admit
+        waiting requests into prefill workers (whole-prompt prefill +
+        KV export), place pending handoff packets on decode workers
+        (least-loaded router), then run one engine step on every decode
+        worker that holds live slots."""
+        self.steps += 1
+        if self.ccfg.autoscale and self.steps % self.ccfg.autoscale_interval == 0:
+            self._autoscale()
+        if self.ccfg.slo_aware and len(self.waiting) > 1:
+            now = self._now()
+            ordered = sorted(self.waiting, key=lambda r: slo_sort_key(r, now))
+            self.waiting.clear()
+            self.waiting.extend(ordered)
         self._admit_prefills()
         self._place_pending()
         for w in self.decode_workers:
@@ -241,6 +285,39 @@ class ClusterEngine:
         for slot in w.live_slots():
             self._export_slot(w, slot, migration=True)
 
+    # -- autoscaling -------------------------------------------------------
+    def _autoscale(self):
+        """Re-provision one worker between the tiers when the shared
+        :func:`~repro.serving.workload.autoscale_decision` policy says
+        the observed mix has shifted. Decode→prefill drains the moved
+        worker's live slots into the pending-packet buffer first (the
+        PR 5 migration path), so no stream is lost and outputs stay
+        bitwise identical; prefill→decode moves an always-empty engine.
+        The decision reads only aggregate counts, so the simulator's
+        trace mirror reproduces the identical rescale schedule."""
+        routable = [w for w in self.decode_workers
+                    if w.alive and not w.draining]
+        alive_pf = [w for w in self.prefill_workers if w.alive]
+        decision = autoscale_decision(
+            waiting=len(self.waiting), pending=len(self.pending),
+            live=sum(len(w.live_slots()) for w in routable),
+            n_prefill=len(alive_pf), n_decode=len(routable),
+            slots_per_worker=self.ecfg.max_batch)
+        if decision == "to_decode":
+            w = alive_pf[-1]
+            self.prefill_workers.remove(w)
+            w.role = "decode"
+            self.decode_workers.append(w)
+        elif decision == "to_prefill":
+            w = min(routable, key=lambda o: (len(o.live_slots()),
+                                             self.decode_workers.index(o)))
+            self._migrate_all(w)
+            self.decode_workers.remove(w)
+            w.role = "prefill"
+            self.prefill_workers.append(w)
+        if decision:
+            self.rescale_log.append((self.steps, decision))
+
     # -- internals ---------------------------------------------------------
     def _any_live(self) -> bool:
         return any(w.alive and w.live_slots() for w in self.decode_workers)
@@ -279,7 +356,13 @@ class ClusterEngine:
             return
         self._check_routable()
         pws = [w for w in self.prefill_workers if w.alive]
-        while self.waiting and head > 0:
+        # finite prefill_rate bounds admissions per step to the tier's
+        # aggregate throughput — what makes the prefill tier *size* a
+        # schedule-visible quantity the autoscaler can actually trade
+        rate = self.ccfg.prefill_rate
+        quota = rate * len(pws) if rate > 0 else float("inf")
+        while self.waiting and head > 0 and quota > 0:
+            quota -= 1
             w = pws[self._pf_rr % len(pws)]
             self._pf_rr += 1
             req = self.waiting.popleft()
@@ -297,26 +380,19 @@ class ClusterEngine:
                 head -= 1
 
     def _export_slot(self, w: Worker, slot: int, *, migration=False):
-        """Pack one live slot into a SlotPacket and release it."""
+        """Pack one live slot into a SlotPacket and release it (the
+        same ``_pack_slot`` snapshot the SLO policy uses to preempt)."""
         eng = w.eng
         req = eng.slot_req[slot]
         with jax.default_device(w.device):
-            kv = eng.kv.export_slot(slot, int(eng.slot_pos[slot]))
+            pkt = eng._pack_slot(slot)
         hops = self._req_hops.get(req.rid, 0) + (1 if migration else 0)
         self._req_hops[req.rid] = hops
-        pkt = SlotPacket(
-            req=req, seed=int(eng.slot_seed[slot]),
-            tok=int(eng.slot_tok[slot, 0]), pos=int(eng.slot_pos[slot]),
-            gen_len=int(eng.slot_len[slot]),
-            n_prompt=int(eng.slot_nprompt[slot]), budget=eng._budget(req),
-            kv=kv, hops=hops)
-        eng.slot_req[slot] = None
-        eng.slot_len[slot] = 0
-        eng.kv.free(slot)
-        self.kv_transfer_bytes += kv["kv_bytes"]
+        pkt.hops = hops
+        self.kv_transfer_bytes += pkt.kv["kv_bytes"]
         if migration:
             self.migrations += 1
-            self.migration_bytes += kv["kv_bytes"]
+            self.migration_bytes += pkt.kv["kv_bytes"]
         else:
             self.handoffs += 1
         self.pending.append(pkt)
@@ -347,16 +423,8 @@ class ClusterEngine:
                 still.append(pkt)  # transient: capacity frees as slots
                 continue           # retire; budget throttles admission
             slot = w.free_slot()
-            eng = w.eng
             with jax.default_device(w.device):
-                eng.kv.import_slot(pkt.kv, slot, pkt.n_prompt, pkt.budget)
-            eng.slot_req[slot] = pkt.req
-            eng.slot_len[slot] = pkt.gen_len
-            eng.slot_pos[slot] = pkt.pos
-            eng.slot_tok[slot, 0] = pkt.tok
-            eng.slot_rid[slot] = pkt.req.rid
-            eng.slot_seed[slot] = pkt.seed
-            eng.slot_nprompt[slot] = pkt.n_prompt
+                w.eng._unpack_slot(pkt, slot)
         self.pending = still
 
     # -- metrics -----------------------------------------------------------
@@ -387,13 +455,25 @@ class ClusterEngine:
             "max_migration_hops": max(self._req_hops.values(), default=0),
             "kv_transfer_bytes": self.kv_transfer_bytes,
             "migration_bytes": self.migration_bytes,
-            "prefills": sum(w.eng.prefills for w in self.prefill_workers),
-            "decode_dispatches": sum(w.eng.decode_dispatches for w in dws),
-            "decode_steps": sum(w.eng.decode_steps for w in dws),
+            # autoscaling + SLO accounting (empty/0 when disabled)
+            "rescale_events": len(self.rescale_log),
+            "rescale_log": list(self.rescale_log),
+            "preemptions": sum(r.preemptions for r in done),
+            "slo_attainment": sum(r.slo_met for r in done) / len(done),
+            **request_breakdowns(done),
+            # prefills over *all* workers: autoscaling moves engines
+            # between tiers and their dispatch history moves with them
+            "prefills": sum(w.eng.prefills
+                            for w in self.prefill_workers + dws),
+            "decode_dispatches": sum(
+                w.eng.decode_dispatches
+                for w in self.prefill_workers + dws),
+            "decode_steps": self.decode_steps,
             # the single-dispatch invariant holds per worker
             "dispatches_per_step": (
-                sum(w.eng.decode_dispatches for w in dws)
-                / max(1, sum(w.eng.decode_steps for w in dws))),
+                sum(w.eng.decode_dispatches
+                    for w in self.prefill_workers + dws)
+                / max(1, self.decode_steps)),
             "straggler_events": sum(len(w.monitor.events) for w in dws),
             "workers_alive": sum(w.alive for w in dws),
             "kv_cache": dws[0].eng.kv.name,

@@ -220,10 +220,11 @@ class EngineConfig:
             raise ValueError(
                 f"max_seq_len={self.max_seq_len} must be >= 2 (one "
                 "prompt position plus one decode position)")
-        if self.scheduler not in ("blocking", "chunked", "speculative"):
+        if self.scheduler not in ("blocking", "chunked", "speculative",
+                                  "slo"):
             raise ValueError(f"unknown scheduler {self.scheduler!r} "
-                             "(expected 'blocking', 'chunked' or "
-                             "'speculative')")
+                             "(expected 'blocking', 'chunked', "
+                             "'speculative' or 'slo')")
         if self.scheduler == "speculative":
             if self.spec_gamma < 1:
                 raise ValueError(
@@ -254,6 +255,11 @@ class Request:
     prompt: np.ndarray                 # (S,) int32
     max_new_tokens: int | None = None
     seed: int | None = None            # per-request sampling seed
+    # multi-tenant workload attribution (serving/workload.py traces):
+    tenant: str = ""                   # tenant name ("" = untagged)
+    priority: int = 0                  # higher preempts lower (SLO policy)
+    slo: object | None = None          # scheduler.SLO TTFT/ITL targets
+    arrival_s: float | None = None     # trace arrival time (virtual clock)
     # filled by the engine:
     output: list = field(default_factory=list)
     t_submit: float = 0.0
@@ -261,6 +267,8 @@ class Request:
     t_done: float = 0.0
     truncated_from: int | None = None  # original prompt length, if clipped
     prefill_chunks: int = 0            # prefill dispatches this request took
+    preemptions: int = 0               # times this request was evicted to
+                                       # the queue and later resumed
     spec_accepted: list = field(default_factory=list)
     # per-verify-round committed token counts (accepted prefix + bonus,
     # capped by budget/EOS/capacity) — sums to the request's
@@ -283,6 +291,66 @@ class Request:
         n = len(self.output)
         return (self.t_done - self.t_first) / (n - 1) if n > 1 else 0.0
 
+    @property
+    def slo_met(self) -> bool:
+        """Whether the measured TTFT/ITL hit the request's targets
+        (vacuously true without an SLO)."""
+        if self.slo is None:
+            return True
+        return (self.ttft_s <= self.slo.ttft_s + 1e-9
+                and self.itl_s <= self.slo.itl_s + 1e-9)
+
+
+@dataclass
+class SlotPacket:
+    """Host-side snapshot of one live decode slot: everything needed to
+    resume the stream elsewhere — on another worker (cluster drain /
+    handoff) or in the same engine later (SLO preemption). ``kv`` is the
+    backend-portable ``export_slot`` payload. Because sampling is keyed
+    by ``(seed, rid, position)``, resuming from a packet is bitwise
+    identical to never having moved."""
+    req: Request
+    seed: int
+    tok: int          # pending input token (last sampled)
+    pos: int          # absolute position
+    gen_len: int      # tokens generated so far
+    n_prompt: int     # prompt length at bind
+    budget: int       # generation budget
+    kv: dict          # export_slot payload (host arrays + metadata)
+    hops: int = 0     # migrations this stream has survived
+
+
+def request_breakdowns(done) -> dict:
+    """Per-tenant and per-priority latency/SLO breakdowns over finished
+    requests. Shared by ``ServingEngine.summary`` and
+    ``ClusterEngine.summary`` (and reused by the workload replay
+    reports), so every reporting surface slices traffic identically."""
+    def pct(vals, q):
+        return float(np.percentile(vals, q)) if vals else 0.0
+
+    def bucket(key_fn):
+        groups: dict = {}
+        for r in done:
+            groups.setdefault(key_fn(r), []).append(r)
+        out = {}
+        for k in sorted(groups, key=str):
+            rs = groups[k]
+            ttft = [r.ttft_s for r in rs]
+            itl = [r.itl_s for r in rs if len(r.output) > 1]
+            out[k] = {
+                "requests": len(rs),
+                "ttft_p50_s": pct(ttft, 50),
+                "ttft_p99_s": pct(ttft, 99),
+                "itl_p50_s": pct(itl, 50),
+                "itl_p99_s": pct(itl, 99),
+                "preemptions": sum(r.preemptions for r in rs),
+                "slo_attainment": sum(r.slo_met for r in rs) / len(rs),
+            }
+        return out
+
+    return {"by_tenant": bucket(lambda r: r.tenant or "default"),
+            "by_priority": bucket(lambda r: r.priority)}
+
 
 class ServingEngine:
     def __init__(self, params, cfg, ecfg: EngineConfig, *,
@@ -303,6 +371,22 @@ class ServingEngine:
         self.waiting: deque[Request] = deque()
         self.finished: list[Request] = []
         self._next_rid = 0
+        # clock: wall by default; trace replay switches to a virtual
+        # clock (``set_now``) so TTFT/ITL are measured in deterministic
+        # simulated seconds — step-space determinism makes the whole
+        # schedule reproducible and exactly mirrorable analytically
+        self.clock = "wall"
+        self.now_s = 0.0
+        # SLO preemption state: rid -> SlotPacket for evicted-but-
+        # unfinished streams; admission resumes them from the packet
+        self.preempted_packets: dict[int, SlotPacket] = {}
+        self.preemptions = 0
+        self.preempted_kv_bytes = 0
+        # schedule audit trail for the analytical mirror
+        # (LLMSimulator.serve(trace=...)): admission order (rids) and
+        # (step, rid) preemption events
+        self.admission_log: list[int] = []
+        self.preemption_log: list[tuple[int, int]] = []
         # scheduling policy (admission / chunk selection / retirement)
         self.scheduler = make_scheduler(cfg, ecfg)
         self.prefilling: dict[int, PrefillState] = {}  # slot -> progress
@@ -436,18 +520,37 @@ class ServingEngine:
 
     # -- public API -----------------------------------------------------------
     def submit(self, prompt, max_new_tokens: int | None = None,
-               seed: int | None = None) -> Request:
+               seed: int | None = None, *, tenant: str = "",
+               priority: int = 0, slo=None,
+               arrival_s: float | None = None) -> Request:
         req = Request(self._next_rid, np.asarray(prompt, np.int32),
-                      max_new_tokens, seed=seed, t_submit=time.time())
+                      max_new_tokens, seed=seed, tenant=tenant,
+                      priority=int(priority), slo=slo, arrival_s=arrival_s,
+                      t_submit=(arrival_s if arrival_s is not None
+                                else self._now()))
         self._next_rid += 1
         self.waiting.append(req)
         return req
 
+    def set_now(self, t: float) -> None:
+        """Switch to (and advance) the virtual clock — the workload
+        replay driver calls this before each step so every latency stamp
+        is in deterministic simulated seconds."""
+        self.clock = "virtual"
+        self.now_s = float(t)
+
+    def _now(self) -> float:
+        return self.now_s if self.clock == "virtual" else time.time()
+
+    def has_work(self) -> bool:
+        """Anything queued, live, or evicted-but-unfinished."""
+        return bool(self.waiting or self.preempted_packets
+                    or any(r is not None for r in self.slot_req))
+
     def run(self, max_steps: int = 10_000) -> list[Request]:
         """Drive until all submitted requests finish. Returns finished."""
         steps = 0
-        while (self.waiting or any(r is not None for r in self.slot_req)) \
-                and steps < max_steps:
+        while self.has_work() and steps < max_steps:
             self.step()
             steps += 1
         return self.finished
@@ -676,7 +779,7 @@ class ServingEngine:
         if budget <= 0:
             # explicit zero-token request: nothing to generate — never
             # runs prefill, never touches the cache
-            req.t_first = req.t_done = time.time()
+            req.t_first = req.t_done = self._now()
             self.finished.append(req)
             return True
         cap = self._prompt_cap()
@@ -699,7 +802,10 @@ class ServingEngine:
         """Blocking admission mechanism: run ``req``'s whole prefill in
         one bucketed dispatch and bind it to ``slot``. False when the
         cache backend cannot reserve capacity yet (request stays
-        queued)."""
+        queued). A previously-preempted request resumes from its packet
+        instead of re-prefilling (its tokens are already sampled)."""
+        if req.rid in self.preempted_packets:
+            return self._resume_slot(slot, req)
         pro = self._admit_prologue(slot, req)
         if isinstance(pro, bool):
             return pro
@@ -724,6 +830,7 @@ class ServingEngine:
         self._log_dispatch("prefill", *pre_args)
         logits, rows = self._prefill_one(self.params, *pre_args)
         self.prefills += 1
+        self.admission_log.append(req.rid)
         req.prefill_chunks = 1
         seed = req.seed if req.seed is not None else self.ecfg.seed
         tok = self._sample_first(req, seed, logits, n_prompt)
@@ -731,7 +838,7 @@ class ServingEngine:
         # budget / EOS / capacity — never occupy a decode slot for it.
         if (budget <= 1 or tok == self.ecfg.eos_token
                 or n_prompt >= self.ecfg.max_seq_len - 1):
-            req.t_done = time.time()
+            req.t_done = self._now()
             self.finished.append(req)
             return True
         self.kv.splice(rows, slot, n_prompt, budget)
@@ -754,11 +861,14 @@ class ServingEngine:
         over the following steps. False defers (backend out of
         capacity), True means the request was consumed (bound, or
         insta-finished on a zero budget)."""
+        if req.rid in self.preempted_packets:
+            return self._resume_slot(slot, req)
         pro = self._admit_prologue(slot, req)
         if isinstance(pro, bool):
             return pro
         prompt, n_prompt, budget = pro
         self.kv.reserve(slot, n_prompt, budget)
+        self.admission_log.append(req.rid)
         seed = req.seed if req.seed is not None else self.ecfg.seed
         n_prefix = n_prompt - int(prompt.shape[0])
         self.slot_req[slot] = req
@@ -811,7 +921,7 @@ class ServingEngine:
         tok = self._sample_first(req, st.seed, logits, st.n_prompt)
         if (st.budget <= 1 or tok == self.ecfg.eos_token
                 or st.n_prompt >= self.ecfg.max_seq_len - 1):
-            req.t_done = time.time()
+            req.t_done = self._now()
             self.finished.append(req)
             self.slot_req[slot] = None
             self.kv.free(slot)
@@ -827,7 +937,7 @@ class ServingEngine:
             logits, jnp.asarray([seed], jnp.int32),
             jnp.asarray([req.rid], jnp.int32),
             jnp.asarray([n_prompt - 1], jnp.int32)))[0])
-        req.t_first = time.time()
+        req.t_first = self._now()
         req.output.append(tok)
         return tok
 
@@ -845,7 +955,7 @@ class ServingEngine:
     def _retire_slot(self, i: int):
         """Release slot ``i`` (scheduler-decided retirement)."""
         req = self.slot_req[i]
-        req.t_done = time.time()
+        req.t_done = self._now()
         self.finished.append(req)
         self.slot_req[i] = None
         self.slot_len[i] = 0
@@ -853,6 +963,78 @@ class ServingEngine:
         if self.draft_kv is not None:
             self.draft_kv.free(i)
             self.draft_pos[i] = 0
+
+    # -- preempt-and-requeue (slot <-> host packet) ------------------------
+    def _pack_slot(self, slot: int) -> SlotPacket:
+        """Snapshot slot ``slot``'s live stream into a host packet and
+        release the slot. The cluster wraps this for worker drains; the
+        SLO policy wraps it for preemption — same bytes either way."""
+        req = self.slot_req[slot]
+        pkt = SlotPacket(
+            req=req, seed=int(self.slot_seed[slot]),
+            tok=int(self.slot_tok[slot, 0]), pos=int(self.slot_pos[slot]),
+            gen_len=int(self.slot_len[slot]),
+            n_prompt=int(self.slot_nprompt[slot]),
+            budget=self._budget(req),
+            kv=self.kv.export_slot(slot, int(self.slot_pos[slot])))
+        self.slot_req[slot] = None
+        self.slot_len[slot] = 0
+        self.kv.free(slot)
+        return pkt
+
+    def _unpack_slot(self, pkt: SlotPacket, slot: int) -> None:
+        """Land a packet in free slot ``slot`` and rebind the stream
+        (inverse of :meth:`_pack_slot`; the import re-runs the
+        reservation math, so callers must check ``can_admit`` first)."""
+        self.kv.import_slot(pkt.kv, slot, pkt.n_prompt, pkt.budget)
+        self.slot_req[slot] = pkt.req
+        self.slot_len[slot] = pkt.gen_len
+        self.slot_pos[slot] = pkt.pos
+        self.slot_tok[slot, 0] = pkt.tok
+        self.slot_rid[slot] = pkt.req.rid
+        self.slot_seed[slot] = pkt.seed
+        self.slot_nprompt[slot] = pkt.n_prompt
+
+    def preempt_slot(self, slot: int) -> SlotPacket:
+        """Evict slot ``slot``'s live stream to the waiting queue:
+        pack it into a host packet (PR 5's drain path) and requeue the
+        request. No token is lost — admission later resumes the stream
+        from its exact position, and because sampling is keyed by
+        ``(seed, rid, position)`` the resumed greedy stream is bitwise
+        identical to an unpreempted run."""
+        req = self.slot_req[slot]
+        if req is None:
+            raise ValueError(f"slot {slot} is not live")
+        if slot in self.prefilling:
+            raise RuntimeError(
+                f"slot {slot} is mid-prefill: chunked prefill state "
+                "cannot be packed (no sampled token yet) — preempt only "
+                "decode-phase slots")
+        if self.draft_kv is not None:
+            raise RuntimeError(
+                "preemption is unsupported under speculative decoding: "
+                "the draft's shadow cache is not part of the export "
+                "packet and cannot resume")
+        pkt = self._pack_slot(slot)
+        self.preempted_packets[req.rid] = pkt
+        req.preemptions += 1
+        self.preemptions += 1
+        self.preempted_kv_bytes += int(pkt.kv["kv_bytes"])
+        self.preemption_log.append((self.step_index, req.rid))
+        self.waiting.append(req)
+        return pkt
+
+    def _resume_slot(self, slot: int, req: Request) -> bool:
+        """Admission path for a preempted request: re-import its packet
+        into ``slot`` (no prefill — its tokens are already sampled).
+        False defers when the cache backend cannot re-admit yet."""
+        pkt = self.preempted_packets[req.rid]
+        if not self.kv.can_admit(pkt.n_prompt, pkt.budget):
+            return False
+        del self.preempted_packets[req.rid]
+        self._unpack_slot(pkt, slot)
+        self.admission_log.append(req.rid)
+        return True
 
     # -- metrics ---------------------------------------------------------------
     def summary(self) -> dict:
@@ -904,6 +1086,11 @@ class ServingEngine:
                 if self.draft_kv is not None else 0.0),
             "prefills": self.prefills,
             "truncated": sum(r.truncated_from is not None for r in done),
+            # SLO-policy preemption accounting (0 under other policies)
+            "preemptions": self.preemptions,
+            "preempted_kv_bytes": self.preempted_kv_bytes,
+            "slo_attainment": sum(r.slo_met for r in done) / len(done),
+            **request_breakdowns(done),
             "kv_cache": self.kv.name,
             # peak bytes the cache backend actually held vs. what a
             # dense max_batch x max_seq_len cache charges regardless;

@@ -269,6 +269,10 @@ class ContiguousCache:
         self._cache = MD.init_cache(cfg, B, C)
         axes = MD.cache_batch_axes(self._cache)
         self._footprint = contiguous_kv_bytes(cfg, B, C)
+        # occupancy, for the double-import guard: the dense layout has
+        # no allocator to notice a clobber, so track which slots hold a
+        # live (spliced or imported, not yet freed) stream explicitly
+        self._occupied: set[int] = set()
 
         def _splice(big, rows, slot):
             out = {}
@@ -305,11 +309,12 @@ class ContiguousCache:
 
     def splice(self, rows: dict, slot: int, n_prompt: int,
                budget: int) -> None:
+        self._occupied.add(slot)
         self._cache = self._splice(self._cache, rows,
                                    jnp.asarray(slot, jnp.int32))
 
     def reserve(self, slot: int, n_prompt: int, budget: int) -> None:
-        pass  # capacity is pre-provisioned per slot
+        self._occupied.add(slot)  # capacity is pre-provisioned per slot
 
     def splice_partial(self, k_rows, v_rows, slot: int, offset: int,
                        n_valid: int) -> None:
@@ -336,7 +341,8 @@ class ContiguousCache:
         self._cache = new_cache
 
     def free(self, slot: int) -> None:
-        pass  # rows are overwritten by the next admit
+        self._occupied.discard(slot)  # rows are overwritten by the
+        # next admit; only the occupancy mark needs releasing
 
     def export_slot(self, slot: int, n_valid: int) -> dict:
         """Pack the slot's row of every batched leaf. KV leaves are
@@ -363,6 +369,12 @@ class ContiguousCache:
 
     def import_slot(self, packet: dict, slot: int, n_prompt: int,
                     budget: int) -> None:
+        if slot in self._occupied:
+            raise RuntimeError(
+                f"import_slot into occupied slot {slot}: a live stream's "
+                "KV would be silently clobbered — free the slot first "
+                "(preemption/requeue must never double-import)")
+        self._occupied.add(slot)
         axes = MD.cache_batch_axes(self._cache)
         rows = {}
         for name, arr in self._cache.items():
@@ -616,6 +628,12 @@ class PagedCache:
         the blocks allocated now stays reserved, so the migrated
         request keeps the no-mid-decode-deadlock guarantee on the
         importing pool. Callers gate on :meth:`can_admit` first."""
+        if (self.table[slot] != self.num_blocks).any() or self._reserved[slot]:
+            raise RuntimeError(
+                f"import_slot into occupied slot {slot}: its block-table "
+                "row still holds allocated blocks (or a live "
+                "reservation) that would leak from the pool — free the "
+                "slot first (preemption/requeue must never double-import)")
         bs = self.block_size
         n_valid = int(packet["n_valid"])
         now = max(1, math.ceil(max(n_valid, 1) / bs))

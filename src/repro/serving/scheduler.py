@@ -50,6 +50,18 @@ runs this step, and when a slot retires:
   against the target's argmax, which is exact for greedy and would
   bias any other sampling mode.
 
+- :class:`SLOScheduler` — multi-tenant SLO-aware admission: the
+  waiting queue is ordered by (priority desc, TTFT-deadline slack,
+  arrival), and when every slot is busy a high-priority arrival
+  *preempts* the lowest-priority live slot. Preemption is migration to
+  the queue: the victim's slot is packed into the same backend-portable
+  ``export_slot``/``import_slot`` packet the cluster uses for worker
+  drains, so the victim resumes later from its exact position — no
+  token is lost, and because sampling is keyed by
+  ``(seed, rid, position)`` the resumed stream is bitwise identical to
+  an unpreempted run. Admission itself is blocking (whole-prompt
+  prefill), so this policy works for every model family.
+
 Both schedulers drive identical prefill/decode math for the tokens they
 produce: greedy outputs are bitwise identical across schedulers (and
 across cache backends), only *when* — and, under speculation, *how
@@ -57,12 +69,40 @@ many per step* — each token is produced changes.
 """
 from __future__ import annotations
 
+import math
 import warnings
 from dataclasses import dataclass
 
 import numpy as np
 
 from repro.models import model as MD
+
+
+@dataclass(frozen=True)
+class SLO:
+    """Per-request service-level objective: time-to-first-token and
+    inter-token-latency targets in seconds (``inf`` = no target)."""
+    ttft_s: float = float("inf")
+    itl_s: float = float("inf")
+
+
+def slo_sort_key(req, now: float):
+    """Admission order for the SLO policy: priority (desc) first, then
+    TTFT-deadline slack, then arrival, with rid as the deterministic
+    tiebreak. Shared with the analytical mirror
+    (``LLMSimulator.serve(trace=...)``) so the engine's admission
+    schedule and the simulated one can never disagree."""
+    ttft = req.slo.ttft_s if req.slo is not None else float("inf")
+    slack = (req.t_submit + ttft - now) if math.isfinite(ttft) else float("inf")
+    return (-req.priority, slack, req.t_submit, req.rid)
+
+
+def preempt_victim_key(priority: int, remaining: int, slot: int):
+    """Victim choice among live slots: lowest priority first, then the
+    slot with the *most* remaining budget (evicting it wastes the least
+    imminent completion), then slot index. Shared with the simulator
+    mirror for the same no-drift reason as :func:`slo_sort_key`."""
+    return (priority, -remaining, slot)
 
 
 @dataclass
@@ -167,6 +207,63 @@ class ChunkedScheduler(Scheduler):
         return None if best is None else best[1]
 
 
+class SLOScheduler(BlockingScheduler):
+    """SLO-aware multi-tenant policy: deadline-slack-ordered admission
+    plus preempt-and-requeue of lower-priority live slots.
+
+    Each step re-sorts the waiting queue by :func:`slo_sort_key` and
+    runs the inherited blocking admission over free slots. If requests
+    are still waiting afterwards, a preemption pass evicts, for each
+    waiting request that strictly outranks some live slot, the victim
+    chosen by :func:`preempt_victim_key`; the victim is packed to a
+    host packet (``ServingEngine.preempt_slot``) and requeued, and the
+    high-priority request prefills into the freed slot this same step.
+    Preemption never crosses equal priorities, so it cannot livelock:
+    a requeued victim only preempts strictly lower-priority work."""
+
+    name = "slo"
+
+    def admit(self, eng) -> None:
+        if len(eng.waiting) > 1:
+            now = eng._now()
+            ordered = sorted(eng.waiting, key=lambda r: slo_sort_key(r, now))
+            eng.waiting.clear()
+            eng.waiting.extend(ordered)
+        super().admit(eng)
+        self._preempt_pass(eng)
+
+    def _preempt_pass(self, eng) -> None:
+        # Bounded: each iteration either preempts (at most max_batch
+        # victims can exist) or breaks.
+        for _ in range(2 * eng.ecfg.max_batch):
+            if not eng.waiting:
+                return
+            head = eng.waiting[0]
+            victim = self._pick_victim(eng, head.priority)
+            if victim is None:
+                return
+            eng.preempt_slot(victim)          # frees slot, requeues victim
+            req = eng.waiting.popleft()       # == head
+            if not self._admit_request(eng, victim, req):
+                eng.waiting.appendleft(req)   # cache deferral: stop, retry next step
+                return
+
+    def _pick_victim(self, eng, priority: int) -> int | None:
+        """Live decode slot with strictly lower priority, preferring the
+        one ranked first by :func:`preempt_victim_key`."""
+        best = None
+        for slot, req in enumerate(eng.slot_req):
+            if req is None or slot in eng.prefilling:
+                continue
+            if req.priority >= priority:
+                continue
+            remaining = eng._budget(req) - int(eng.slot_len[slot])
+            key = preempt_victim_key(req.priority, remaining, slot)
+            if best is None or key < best[0]:
+                best = (key, slot)
+        return None if best is None else best[1]
+
+
 class SpeculativeScheduler(BlockingScheduler):
     """Speculative decoding policy: admission *is* blocking admission
     (inherited; the engine additionally prefills the draft cache at
@@ -199,6 +296,11 @@ def make_scheduler(cfg, ecfg) -> Scheduler:
     kind = getattr(ecfg, "scheduler", "blocking")
     if kind == "blocking":
         return BlockingScheduler()
+    if kind == "slo":
+        # Admission is blocking and preemption packets are
+        # backend-portable (they carry recurrent leaves too), so the
+        # SLO policy supports every family.
+        return SLOScheduler()
     if kind in ("chunked", "speculative"):
         if not policy_supported(cfg):
             warnings.warn(

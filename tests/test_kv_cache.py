@@ -235,3 +235,41 @@ def test_simulator_serve_reports_resident_kv():
         cfg, [min(n + 8 - 1, 96) for n in lens], 16)
     for r in (contig, paged):
         assert r["tokens_per_s"] > 0 and r["decode_dispatches"] == 8
+
+
+# ---------------------------------------------------------------------------
+# double-import guard (preemption/requeue must never clobber a stream)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kv_cache", ["contiguous", "paged"])
+def test_import_into_occupied_slot_raises(kv_cache):
+    """Importing a packet into a slot that already holds a live stream
+    must raise, not silently clobber the resident KV (contiguous) or
+    leak the slot's allocated blocks (paged)."""
+    cfg = registry.get_smoke_config("qwen1.5-0.5b").replace(dtype="float32")
+    params = MD.init_params(KEY, cfg)
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n) for n in (9, 13)]
+    eng = ServingEngine(params, cfg, EngineConfig(
+        max_batch=2, max_seq_len=64, max_new_tokens=4, kv_cache=kv_cache,
+        kv_block_size=16))
+    for p in prompts:
+        eng.submit(p)
+    eng.scheduler.admit(eng)          # both slots live, no decode yet
+    slots = [i for i, r in enumerate(eng.slot_req) if r is not None]
+    assert len(slots) == 2
+    a, b = slots
+    pkt = eng.kv.export_slot(a, int(eng.slot_pos[a]))
+    if kv_cache == "paged":
+        before = eng.kv.allocator.allocated_blocks
+    with pytest.raises(RuntimeError, match="occupied"):
+        eng.kv.import_slot(pkt, b, int(eng.slot_nprompt[a]), 4)
+    if kv_cache == "paged":
+        # the refused import must not have taken blocks from the pool
+        assert eng.kv.allocator.allocated_blocks == before
+    # slot b's stream is untouched: the engine finishes both bitwise
+    ref = _run_engine(params, cfg, prompts, kv_cache, max_batch=2,
+                      max_new_tokens=4, kv_block_size=16)
+    eng.run()
+    assert ({r.rid: r.output for r in eng.finished}
+            == {r.rid: r.output for r in ref.finished})

@@ -1,0 +1,344 @@
+"""Trace-driven multi-tenant workload layer: seeded trace generation,
+SLO-aware scheduling with lossless preemption, cluster autoscaling over
+a shifting mix, and the analytical schedule mirror
+(``LLMSimulator.serve(trace=...)``)."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.core import profiles as HW
+from repro.core.simulator import LLMSimulator, SimConfig
+from repro.models import model as MD
+from repro.serving import (ClusterConfig, ClusterEngine, EngineConfig,
+                           ServingEngine)
+from repro.serving.workload import (SLO, TenantSpec, autoscale_decision,
+                                    make_named_trace, make_trace, replay)
+
+KEY = jax.random.PRNGKey(3)
+QUANTUM = 0.01
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = registry.get_smoke_config("qwen1.5-0.5b").replace(dtype="float32")
+    params = MD.init_params(KEY, cfg)
+    return cfg, params
+
+
+def _engine(params, cfg, scheduler="blocking", kv_cache="contiguous",
+            **kw):
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("max_seq_len", 96)
+    kw.setdefault("max_new_tokens", 16)
+    return ServingEngine(params, cfg, EngineConfig(
+        scheduler=scheduler, kv_cache=kv_cache, eos_token=-1, **kw))
+
+
+# ---------------------------------------------------------------------------
+# trace generation
+# ---------------------------------------------------------------------------
+
+def test_trace_generation_deterministic_and_seed_sensitive():
+    a = make_named_trace("overload", vocab_size=256, seed=0)
+    b = make_named_trace("overload", vocab_size=256, seed=0)
+    c = make_named_trace("overload", vocab_size=256, seed=1)
+    sa, sb, sc = a.schema(), b.schema(), c.schema()
+    assert sa == sb                       # same seed: identical trace
+    assert sa != sc                       # different seed: different one
+    assert all(np.array_equal(x.prompt, y.prompt)
+               for x, y in zip(a.requests, b.requests))
+    # arrivals sorted, inside the horizon, rids unique
+    arr = [r.arrival_s for r in a.requests]
+    assert arr == sorted(arr)
+    assert all(0.0 <= t < a.horizon_s for t in arr)
+    assert len({r.rid for r in a.requests}) == len(a.requests)
+
+
+def test_trace_tenant_mix_windows_and_slos():
+    tr = make_named_trace("overload", vocab_size=256, seed=0)
+    by_tenant: dict = {}
+    for r in tr.requests:
+        by_tenant.setdefault(r.tenant, []).append(r)
+    assert set(by_tenant) == {"chat", "summarize"}
+    # the summarize burst is windowed; chat spans the whole horizon
+    assert max(r.arrival_s for r in by_tenant["summarize"]) <= 0.8
+    assert max(r.arrival_s for r in by_tenant["chat"]) > 0.8
+    for r in by_tenant["chat"]:
+        assert r.priority == 2 and r.slo.ttft_s == pytest.approx(0.04)
+    for r in by_tenant["summarize"]:
+        assert r.priority == 0 and r.slo.ttft_s == float("inf")
+
+
+def test_diurnal_rate_modulation():
+    """Diurnal thinning concentrates arrivals in the high-rate half of
+    the period vs the flat-Poisson trace of the same tenants."""
+    tenants = (TenantSpec("t", rate_rps=20.0, prompt_len=(6, 10),
+                          new_tokens=(2, 2)),)
+    flat = make_trace(tenants, 6.0, vocab_size=256, seed=0)
+    diur = make_trace(tenants, 6.0, vocab_size=256, seed=0,
+                      arrival="diurnal", diurnal_period_s=6.0)
+
+    def peak_frac(tr):
+        # rate = 1 + depth*sin(2 pi t / 6): peak half-period is [0, 3)
+        ts = [r.arrival_s for r in tr.requests]
+        return sum(t < 3.0 for t in ts) / len(ts)
+
+    assert peak_frac(diur) > peak_frac(flat) + 0.1
+    assert len(diur.requests) < len(flat.requests)  # thinning removes
+
+
+# ---------------------------------------------------------------------------
+# SLO scheduling under overload: the tentpole acceptance gate
+# ---------------------------------------------------------------------------
+
+def test_slo_scheduler_holds_chat_p99_fifo_does_not(setup):
+    """Under the seeded overload trace the SLO-aware policy must keep
+    the high-priority chat tenant's p99 TTFT within its 40ms SLO by
+    preempting low-priority slots — losslessly (bitwise-identical
+    streams) and within 5% of FIFO aggregate throughput. FIFO itself
+    must violate the SLO, or the trace isn't an overload at all."""
+    cfg, params = setup
+    tr = make_named_trace("overload", vocab_size=cfg.vocab_size, seed=0)
+    runs = {}
+    for sched in ("blocking", "slo"):
+        runs[sched] = replay(_engine(params, cfg, sched), tr,
+                             step_quantum_s=QUANTUM)
+    fifo, slo = runs["blocking"], runs["slo"]
+    # lossless: preemption is migration through the packet path
+    assert slo["outputs"] == fifo["outputs"]
+    assert slo["summary"]["preemptions"] >= 1
+    assert len(slo["preemption_log"]) == slo["summary"]["preemptions"]
+    chat_slo = slo["summary"]["by_tenant"]["chat"]
+    chat_fifo = fifo["summary"]["by_tenant"]["chat"]
+    assert chat_slo["ttft_p99_s"] <= 0.04
+    assert chat_fifo["ttft_p99_s"] > 0.04
+    assert chat_slo["slo_attainment"] == 1.0
+    assert chat_fifo["slo_attainment"] < 1.0
+    # aggregate throughput within the 5% bound (virtual tokens/step)
+    ratio = ((slo["tokens"] / slo["steps"])
+             / (fifo["tokens"] / fifo["steps"]))
+    assert ratio >= 0.95
+    # preemptions never cross equal priorities: every victim logged is
+    # a lower-priority request than some waiting chat request
+    reqs = {r.rid: r for r in tr.requests}
+    assert all(reqs[rid].priority < 2 for _, rid in slo["preemption_log"])
+
+
+def test_per_tenant_and_priority_breakdowns_in_summary(setup):
+    cfg, params = setup
+    tr = make_named_trace("steady", vocab_size=cfg.vocab_size, seed=0)
+    rep = replay(_engine(params, cfg, "slo"), tr, step_quantum_s=QUANTUM)
+    s = rep["summary"]
+    assert set(s["by_tenant"]) == {"chat", "summarize", "agent"}
+    assert set(s["by_priority"]) == {0, 1, 2}
+    for b in list(s["by_tenant"].values()) + list(s["by_priority"].values()):
+        assert b["requests"] > 0
+        assert b["ttft_p50_s"] <= b["ttft_p99_s"]
+        assert 0.0 <= b["slo_attainment"] <= 1.0
+    n = sum(b["requests"] for b in s["by_tenant"].values())
+    assert n == s["requests"] == len(tr.requests)
+
+
+# ---------------------------------------------------------------------------
+# lossless preemption property (hypothesis)
+# ---------------------------------------------------------------------------
+
+def test_random_preemptions_lose_no_tokens_property(setup):
+    """Property: preempting random live slots at random steps — packets
+    requeued and re-admitted by the stock blocking scheduler — never
+    loses a token: outputs stay bitwise identical to the unpreempted
+    run, on both KV backends."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    cfg, params = setup
+    kw = dict(max_batch=2, max_seq_len=64, max_new_tokens=4)
+    singles: dict = {}
+
+    @given(lens=st.lists(st.integers(1, 30), min_size=1, max_size=5),
+           plan=st.lists(st.tuples(st.integers(1, 20), st.integers(0, 1)),
+                         min_size=1, max_size=4, unique_by=lambda p: p[0]),
+           kv_cache=st.sampled_from(["contiguous", "paged"]))
+    @settings(max_examples=8, deadline=None)
+    def prop(lens, plan, kv_cache):
+        prompts = [np.arange(n) % cfg.vocab_size for n in lens]
+        skey = (tuple(lens), kv_cache)
+        if skey not in singles:
+            ref = _engine(params, cfg, kv_cache=kv_cache, **kw)
+            for p in prompts:
+                ref.submit(p)
+            ref.run()
+            singles[skey] = {r.rid: r.output for r in ref.finished}
+        eng = _engine(params, cfg, kv_cache=kv_cache, **kw)
+        for p in prompts:
+            eng.submit(p)
+        by_step = dict(plan)
+        steps = preempted = 0
+        while eng.waiting or any(r is not None for r in eng.slot_req):
+            slot = by_step.get(steps)
+            if (slot is not None and eng.slot_req[slot] is not None
+                    and slot not in eng.prefilling):
+                eng.preempt_slot(slot)
+                preempted += 1
+            eng.step()
+            steps += 1
+            assert steps < 500, "engine failed to drain"
+        assert {r.rid: r.output for r in eng.finished} == singles[skey]
+        assert eng.preemptions == preempted
+
+    prop()
+
+
+# ---------------------------------------------------------------------------
+# cluster autoscaling over the shifting mix
+# ---------------------------------------------------------------------------
+
+MIXSHIFT_ECFG = dict(max_batch=4, max_seq_len=96, max_new_tokens=16,
+                     kv_cache="paged", kv_block_size=16, kv_blocks=6,
+                     eos_token=-1)
+MIXSHIFT_CCFG = dict(n_prefill=1, n_decode=3, autoscale=True,
+                     autoscale_interval=4, prefill_rate=2)
+
+
+def test_cluster_autoscales_both_directions_on_mixshift(setup):
+    """The mixshift trace (prefill-heavy documents, then decode-heavy
+    agent loops) over a block-constrained decode tier drives the
+    autoscaler in *both* directions, and rescaling stays lossless:
+    streams are bitwise the single blocking engine's."""
+    cfg, params = setup
+    tr = make_named_trace("mixshift", vocab_size=cfg.vocab_size, seed=0)
+    clu = ClusterEngine(params, cfg, EngineConfig(**MIXSHIFT_ECFG),
+                        ClusterConfig(**MIXSHIFT_CCFG))
+    rep = replay(clu, tr, step_quantum_s=QUANTUM)
+    dirs = {d for _, d in clu.rescale_log}
+    assert dirs == {"to_prefill", "to_decode"}
+    # decisions land only on autoscale-interval boundaries
+    assert all(s % 4 == 0 for s, _ in clu.rescale_log)
+    # role re-provisioning conserves workers
+    assert (len(clu.prefill_workers) + len(clu.decode_workers)
+            == MIXSHIFT_CCFG["n_prefill"] + MIXSHIFT_CCFG["n_decode"])
+    assert clu.handoffs >= len(tr.requests)  # every stream crossed once
+    eng = _engine(params, cfg)
+    ref = replay(eng, tr, step_quantum_s=QUANTUM)
+    assert rep["outputs"] == ref["outputs"]
+
+
+# ---------------------------------------------------------------------------
+# the analytical mirror reproduces the engine schedule exactly
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheduler", ["blocking", "slo"])
+def test_simulator_trace_mirror_matches_engine_schedule(setup, scheduler):
+    """``LLMSimulator.serve(trace=...)`` instantiates the *real*
+    scheduler over the analytical slot mechanism: admission order,
+    preemption log, step count and every request's virtual TTFT must
+    equal the engine replay's — and the schedule comes out priced."""
+    cfg, params = setup
+    tr = make_named_trace("overload", vocab_size=cfg.vocab_size, seed=0)
+    rep = replay(_engine(params, cfg, scheduler), tr,
+                 step_quantum_s=QUANTUM)
+    sim = LLMSimulator(cfg, HW.PIM_AI_SERVER, SimConfig())
+    r = sim.serve(trace=tr, scheduler=scheduler, max_batch=4,
+                  max_seq_len=96, step_quantum_s=QUANTUM)
+    assert r["admission_order"] == rep["admission_order"]
+    assert r["preemption_log"] == rep["preemption_log"]
+    assert r["steps"] == rep["steps"]
+    assert r["decode_steps"] == rep["decode_steps"]
+    ttft_eng = {rid: req.ttft_s for rid, req in rep["requests"].items()}
+    ttft_sim = {rid: req.ttft_s for rid, req in r["requests"].items()}
+    assert ttft_eng == ttft_sim
+    tok_eng = {rid: len(o) for rid, o in rep["outputs"].items()}
+    tok_sim = {rid: len(req.output) for rid, req in r["requests"].items()}
+    assert tok_eng == tok_sim
+    assert r["energy_j"] > 0 and r["energy_per_token_j"] > 0
+    if scheduler == "slo":
+        assert r["preemptions"] >= 1
+        assert r["preempted_kv_bytes"] > 0
+
+
+def test_simulator_cluster_trace_mirror_matches_rescale_schedule(setup):
+    """The disaggregated mirror reproduces the cluster's autoscale
+    decisions, handoff count and per-request schedule over the
+    mixshift trace — including both rescale directions."""
+    cfg, params = setup
+    tr = make_named_trace("mixshift", vocab_size=cfg.vocab_size, seed=0)
+    clu = ClusterEngine(params, cfg, EngineConfig(**MIXSHIFT_ECFG),
+                        ClusterConfig(**MIXSHIFT_CCFG))
+    rep = replay(clu, tr, step_quantum_s=QUANTUM)
+    sim = LLMSimulator(cfg, HW.PIM_AI_SERVER, SimConfig())
+    r = sim.serve(trace=tr, cluster=(1, 3), kv_cache="paged",
+                  kv_blocks=6, max_batch=4, max_seq_len=96,
+                  step_quantum_s=QUANTUM,
+                  cluster_opts={"autoscale": True, "autoscale_interval": 4,
+                                "prefill_rate": 2})
+    assert r["rescale_log"] == clu.rescale_log
+    assert {d for _, d in r["rescale_log"]} == {"to_prefill", "to_decode"}
+    assert r["handoffs"] == clu.handoffs
+    assert r["steps"] == rep["steps"]
+    assert r["decode_steps"] == rep["decode_steps"]
+    ttft_eng = {rid: req.ttft_s for rid, req in rep["requests"].items()}
+    ttft_sim = {rid: req.ttft_s for rid, req in r["requests"].items()}
+    assert ttft_eng == ttft_sim
+    assert r["kv_transfer_bytes"] > 0 and r["energy_j"] > 0
+
+
+def test_simulator_trace_mirror_heterogeneous_prefill(setup):
+    """``prefill_sim`` prices prefill dispatches on different hardware
+    (the xPU-prefill/PIM-decode split): same schedule, more prefill
+    energy when the prefill tier runs on the hungrier profile."""
+    cfg, params = setup
+    tr = make_named_trace("overload", vocab_size=cfg.vocab_size, seed=0)
+    pim = LLMSimulator(cfg, HW.PIM_AI_SERVER, SimConfig())
+    xpu = LLMSimulator(cfg, HW.DGX_H100, SimConfig())
+    homo = pim.serve(trace=tr, scheduler="slo", max_batch=4,
+                     max_seq_len=96)
+    het = pim.serve(trace=tr, scheduler="slo", max_batch=4,
+                    max_seq_len=96, prefill_sim=xpu)
+    assert het["admission_order"] == homo["admission_order"]
+    assert het["steps"] == homo["steps"]
+    assert het["decode"].energy_j == pytest.approx(homo["decode"].energy_j)
+    assert het["encode"].energy_j != homo["encode"].energy_j
+
+
+def test_autoscale_decision_policy_table():
+    base = dict(waiting=0, pending=0, live=0, n_prefill=2, n_decode=2,
+                slots_per_worker=4)
+    assert autoscale_decision(**base) is None
+    # packets backed up with a spare prefill worker: shift to decode
+    assert autoscale_decision(**{**base, "pending": 1}) == "to_decode"
+    # never drains the last prefill worker
+    assert autoscale_decision(
+        **{**base, "pending": 1, "n_prefill": 1}) is None
+    # deep arrival backlog + idle decode capacity: shift to prefill
+    assert autoscale_decision(
+        **{**base, "waiting": 3}) == "to_prefill"
+    # never drains the last decode worker, never strands live load
+    assert autoscale_decision(
+        **{**base, "waiting": 3, "n_decode": 1}) is None
+    assert autoscale_decision(
+        **{**base, "waiting": 3, "live": 5}) is None
+
+
+# ---------------------------------------------------------------------------
+# the priced cloud scenario over a trace
+# ---------------------------------------------------------------------------
+
+def test_run_cloud_trace_prices_all_three_systems():
+    from repro.core.scenarios import run_cloud_trace
+
+    r = run_cloud_trace(trace="diurnal", seed=0)
+    assert r["trace"]["name"] == "diurnal"
+    n = len(r["trace"]["requests"])
+    for system in ("dgx-h100", "pim-ai-engine", "disaggregated"):
+        s = r[system]
+        assert s["requests"] == n          # every system drains the trace
+        assert s["qps_sustained"] > 0
+        assert s["energy_per_token_j"] > 0
+        assert s["tco_per_qps"] > 0
+    # PIM's memory-bound decode wins energy/token over the trace
+    assert r["ratios"]["energy_per_token"] > 1.0
+    assert np.isfinite(r["ratios"]["tco_per_qps_disagg_vs_h100"])
+    assert r["disaggregated"]["handoffs"] >= n
