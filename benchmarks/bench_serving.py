@@ -36,6 +36,16 @@ Invariants under test:
   single-engine baseline, and the analytical mirror
   (``LLMSimulator.serve(cluster=...)`` + the heterogeneous
   ``run_cloud_disaggregated`` TCO-per-QPS scenario) lands in the JSON.
+- ``--prefix``: the ``'sharedprefix'`` trace replayed cold (prefix
+  cache off) and warm (on) through the paged engine on a constrained
+  block pool. Hard-fails unless greedy outputs are bitwise identical,
+  warm p99 TTFT lands strictly below cold (suffix-only prefill and
+  suffix-only reservations admit earlier), the warm engine's dispatch
+  audit is clean with ≥ 1 paged-chunk dispatch, the analytical mirror
+  reproduces the hit/miss/eviction ledger exactly, and the
+  disaggregated cluster routes ≥ 1 admission by prefix affinity while
+  staying bitwise. The hit-rate → TTFT → TCO-per-QPS sweep
+  (``run_cloud_trace(prefix_sweep=...)``) lands in the JSON.
 
 Also cross-checks against the analytical simulator's continuous-batching
 path (``LLMSimulator.serve``) on Table-1 cloud profiles, which charges
@@ -86,6 +96,11 @@ TRACE_QUANTUM = 0.01         # virtual seconds per engine step
 TRACE_NEW = 16               # engine cap; per-request budgets come
                              # from the trace itself
 TRACE_TPUT_FLOOR = 0.95      # SLO policy may cost <= 5% vs FIFO
+PREFIX_BLOCKS = 10           # --prefix: constrained pool, so admission
+                             # waits on KV capacity and cached prefixes
+                             # translate into earlier admission
+PREFIX_SWEEP = (0, 16, 32, 48)   # shared-preamble lengths for the
+                                 # hit-rate -> TTFT -> TCO sweep
 
 
 def _workload(kind: str, rng):
@@ -447,8 +462,179 @@ def _run_trace_section(params, cfg, results, mismatched, trace_name):
          for k in ("dgx-h100", "pim-ai-engine", "disaggregated")])
 
 
+def _run_prefix_section(params, cfg, results, mismatched):
+    """The --prefix benchmark: replay the shared-preamble trace cold
+    (prefix cache off) and warm (on) through the paged engine on the
+    virtual clock, hard-gating
+
+    - bitwise-identical greedy outputs (copy-on-write splicing never
+      changes tokens),
+    - warm p99 TTFT strictly below cold — suffix-only prefill plus
+      suffix-only reservations admit earlier under a constrained pool,
+    - a clean dispatch audit on the warm engine with at least one
+      paged-chunk dispatch (suffix prefill prices through the same
+      traced chunk closure as everything else),
+    - the analytical mirror reproducing the warm engine's admission
+      order and full hit/eviction ledger exactly,
+    - the disaggregated cluster routing at least one admission by
+      prefix affinity while staying bitwise with the cold run,
+
+    and lands the hit-rate -> TTFT -> TCO-per-QPS sweep in the JSON."""
+    from repro.core import costmodel as CM
+    from repro.core.scenarios import run_cloud_trace
+    from repro.serving.workload import make_named_trace, replay
+
+    tr = make_named_trace("sharedprefix", vocab_size=cfg.vocab_size,
+                          seed=TRACE_SEED)
+    results["prefix"] = {"trace": "sharedprefix", "seed": TRACE_SEED,
+                         "kv_blocks": PREFIX_BLOCKS, "runs": {}}
+    runs = {}
+    rows = []
+    engines = {}
+    for label, on in (("cold", False), ("warm", True)):
+        eng = ServingEngine(params, cfg, EngineConfig(
+            scheduler="blocking", kv_cache="paged", kv_block_size=16,
+            kv_blocks=PREFIX_BLOCKS, prefix_cache=on, eos_token=-1,
+            max_batch=MAX_BATCH, max_seq_len=MAX_SEQ,
+            max_new_tokens=TRACE_NEW))
+        rep = replay(eng, tr, step_quantum_s=TRACE_QUANTUM)
+        engines[label] = eng
+        runs[label] = rep
+        s = rep["summary"]
+        rows.append([label, s["requests"], r3(s["ttft_p50_s"] * 1e3),
+                     r3(s["ttft_p99_s"] * 1e3), s["prefix_hits"],
+                     r3(s["prefix_hit_rate"]), s["prefix_evictions"],
+                     f"{s['resident_shared_kv_bytes'] / 1024:.0f}K"])
+        results["prefix"]["runs"][label] = {
+            "prefix_cache": on, "steps": rep["steps"],
+            "ttft_p50_s": s["ttft_p50_s"], "ttft_p99_s": s["ttft_p99_s"],
+            "prefix_hits": s["prefix_hits"],
+            "prefix_lookups": s["prefix_lookups"],
+            "prefix_hit_rate": s["prefix_hit_rate"],
+            "prefix_evictions": s["prefix_evictions"],
+            "resident_shared_kv_bytes": s["resident_shared_kv_bytes"],
+            "prefill_chunks": s["prefill_chunks"],
+        }
+    print_table(
+        f"prefix cache ('sharedprefix' trace, seed {TRACE_SEED}, "
+        f"{len(tr.requests)} requests, {PREFIX_BLOCKS}-block pool)",
+        ["run", "reqs", "ttft p50 ms", "ttft p99 ms", "hits", "hit rate",
+         "evictions", "shared KV"],
+        rows)
+
+    cold, warm = runs["cold"], runs["warm"]
+    if warm["outputs"] != cold["outputs"]:
+        mismatched.append(
+            "prefix: warm greedy outputs diverged from cold prefill — "
+            "COW splicing must never change tokens")
+    ws, cs = warm["summary"], cold["summary"]
+    if ws["prefix_hits"] < 1:
+        mismatched.append("prefix: warm run recorded no prefix hits")
+    if not ws["ttft_p99_s"] < cs["ttft_p99_s"]:
+        mismatched.append(
+            f"prefix: warm p99 TTFT {ws['ttft_p99_s']:.4f}s not below "
+            f"cold {cs['ttft_p99_s']:.4f}s")
+    results["prefix"]["gate"] = {
+        "warm_matches_cold": warm["outputs"] == cold["outputs"],
+        "warm_ttft_p99_s": ws["ttft_p99_s"],
+        "cold_ttft_p99_s": cs["ttft_p99_s"],
+    }
+
+    # dispatch audit: suffix-only prefill must price through the traced
+    # paged-chunk closure with zero drift
+    try:
+        audit = CM.audit_engine(engines["warm"])
+        CM.assert_no_drift(audit)
+        if audit["kinds"].get("chunk_paged", 0) < 1:
+            mismatched.append(
+                "prefix: warm engine dispatched no paged prefill "
+                "chunks — suffix prefill must ride the chunk closure")
+        results["prefix"]["audit_kinds"] = audit["kinds"]
+    except Exception as e:  # noqa: BLE001 — audit drift is the gate
+        mismatched.append(f"prefix: dispatch audit failed: {e}")
+
+    # analytical mirror: same PrefixIndex over virtual block ids — the
+    # hit/miss/eviction schedule must replay exactly, not approximately
+    sim = LLMSimulator(registry.get_config(MODEL), HW.PIM_AI_SERVER,
+                       SimConfig())
+    r_sim = sim.serve(trace=tr, scheduler="blocking", kv_cache="paged",
+                      kv_block_size=16, kv_blocks=PREFIX_BLOCKS,
+                      prefix_cache=True, max_batch=MAX_BATCH,
+                      max_seq_len=MAX_SEQ, step_quantum_s=TRACE_QUANTUM)
+    mirror_ok = (r_sim["admission_order"] == warm["admission_order"]
+                 and r_sim["steps"] == warm["steps"]
+                 and r_sim["prefix_hits"] == ws["prefix_hits"]
+                 and r_sim["prefix_hit_tokens"] == ws["prefix_hit_tokens"]
+                 and r_sim["prefix_evictions"] == ws["prefix_evictions"])
+    if not mirror_ok:
+        mismatched.append(
+            "prefix: analytical mirror diverged from the warm engine "
+            f"(sim hits={r_sim['prefix_hits']} evictions="
+            f"{r_sim['prefix_evictions']} vs engine "
+            f"{ws['prefix_hits']}/{ws['prefix_evictions']})")
+    results["prefix"]["mirror"] = {
+        "matches_engine": mirror_ok, "steps": r_sim["steps"],
+        "prefix_hits": r_sim["prefix_hits"],
+        "prefix_hit_rate": r_sim["prefix_hit_rate"],
+        "prefix_evictions": r_sim["prefix_evictions"],
+        "energy_per_token_j": r_sim["energy_per_token_j"],
+    }
+    print_table(
+        f"analytical mirror (warm schedule priced on "
+        f"{HW.PIM_AI_SERVER.name})",
+        ["matches engine", "steps", "hits", "hit rate", "evictions"],
+        [[str(mirror_ok), r_sim["steps"], r_sim["prefix_hits"],
+          r3(r_sim["prefix_hit_rate"]), r_sim["prefix_evictions"]]])
+
+    # disaggregated path: the router must send shared-prefix admissions
+    # to the prefill worker already holding the blocks, bitwise intact
+    clu = ClusterEngine(
+        params, cfg,
+        EngineConfig(scheduler="blocking", kv_cache="paged",
+                     kv_block_size=16, kv_blocks=PREFIX_BLOCKS + 2,
+                     prefix_cache=True, eos_token=-1, max_batch=MAX_BATCH,
+                     max_seq_len=MAX_SEQ, max_new_tokens=TRACE_NEW),
+        ClusterConfig(n_prefill=2, n_decode=2))
+    rep_c = replay(clu, tr, step_quantum_s=TRACE_QUANTUM)
+    sc = rep_c["summary"]
+    if rep_c["outputs"] != cold["outputs"]:
+        mismatched.append(
+            "prefix: cluster warm outputs diverged from cold prefill")
+    if sc["prefix_routed"] < 1:
+        mismatched.append(
+            "prefix: cluster router never routed by prefix affinity")
+    results["prefix"]["cluster"] = {
+        "n_prefill": 2, "n_decode": 2,
+        "matches_cold": rep_c["outputs"] == cold["outputs"],
+        "prefix_routed": sc["prefix_routed"],
+        "prefix_hits": sc["prefix_hits"],
+        "prefix_hit_rate": sc["prefix_hit_rate"],
+        "handoffs": sc["handoffs"],
+    }
+    print_table(
+        "cluster prefix affinity (2 prefill + 2 decode)",
+        ["matches cold", "routed", "hits", "hit rate", "handoffs"],
+        [[str(rep_c["outputs"] == cold["outputs"]), sc["prefix_routed"],
+          sc["prefix_hits"], r3(sc["prefix_hit_rate"]), sc["handoffs"]]])
+
+    # cloud pricing: hit rate -> TTFT -> TCO-per-QPS, constant prompt
+    # length with a growing shared share (llama2-70b/gqa analytical)
+    priced = run_cloud_trace(seed=TRACE_SEED, prefix_sweep=PREFIX_SWEEP)
+    results["prefix"]["sweep"] = priced["prefix_sweep"]
+    print_table(
+        "hit-rate TCO sweep (llama2-70b/gqa, constant prompt length, "
+        "growing shared preamble)",
+        ["prefix len", "hit rate", "ttft p99 ms", "qps", "J/token",
+         "tco $/qps"],
+        [[p["prefix_len"], r3(p["prefix_hit_rate"]),
+          r3(p["ttft_p99_s"] * 1e3), r3(p["qps_sustained"]),
+          r3(p["energy_per_token_j"]), r3(p["tco_per_qps"])]
+         for p in priced["prefix_sweep"]])
+
+
 def run(json_path: str | None = None, scheduler: str = "blocking",
-        cluster: bool = False, trace: str | None = None):
+        cluster: bool = False, trace: str | None = None,
+        prefix: bool = False):
     cfg = registry.get_smoke_config(MODEL).replace(dtype="float32")
     params = MD.init_params(jax.random.PRNGKey(0), cfg)
 
@@ -459,6 +645,18 @@ def run(json_path: str | None = None, scheduler: str = "blocking",
                "speculative": []}
     rows = []
     mismatched = []
+    if prefix:
+        # the --prefix flavor is its own CI step: warm-vs-cold replay of
+        # the shared-preamble trace with bitwise/TTFT/audit/mirror/
+        # affinity gates plus the hit-rate TCO sweep
+        _run_prefix_section(params, cfg, results, mismatched)
+        if json_path:
+            with open(json_path, "w") as f:
+                json.dump(results, f, indent=2, default=float)
+            print(f"\n[wrote {json_path}]")
+        if mismatched:
+            raise SystemExit(f"serving invariants violated: {mismatched}")
+        return results
     if trace is not None:
         # the --trace flavor is its own CI step: one seeded multi-tenant
         # trace, FIFO vs SLO, with the analytical mirror + pricing
@@ -689,6 +887,12 @@ if __name__ == "__main__":
                          "FIFO vs SLO-aware scheduling with bitwise, "
                          "SLO-attainment and throughput gates, the "
                          "analytical schedule mirror, and cloud pricing")
+    ap.add_argument("--prefix", action="store_true",
+                    help="run the prefix-cache benchmark instead: warm "
+                         "vs cold replay of the shared-preamble trace "
+                         "with bitwise-output, p99-TTFT, dispatch-audit, "
+                         "mirror-exactness and affinity-routing gates, "
+                         "plus the hit-rate TCO sweep")
     args = ap.parse_args()
     run(args.json, scheduler=args.scheduler, cluster=args.cluster,
-        trace=args.trace)
+        trace=args.trace, prefix=args.prefix)

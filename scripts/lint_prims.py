@@ -24,6 +24,8 @@ from repro.core import trace as T
 PREFILL_TOKENS = 16
 DECODE_MAX_LEN = 64
 BATCH = 2
+CHUNK_TOKENS = 16      # suffix-prefill chunk: the closure a prefix-cache
+KV_BLOCK_SIZE = 16     # hit dispatches for the uncached tail
 
 
 def offenders(ops, threshold: float) -> list[str]:
@@ -47,8 +49,22 @@ def lint_arch(name: str, threshold: float) -> list[str]:
         warnings.simplefilter("ignore", T.TraceUndercountWarning)
         pre = pricer.prefill_ops(BATCH, PREFILL_TOKENS)
         dec = pricer.decode_ops_linear(BATCH, DECODE_MAX_LEN, ragged=True)
-    for label, ops in (("prefill", pre),
-                       ("decode", [o.at(DECODE_MAX_LEN) for o in dec])):
+        # the paged chunk closure is what a prefix-cache hit dispatches
+        # for its uncached suffix — it must price as cleanly as a cold
+        # full prefill. Families the engine refuses chunked prefill on
+        # (rolling SWA, audio/hybrid/recurrent caches) never dispatch
+        # it, so there is nothing to price there.
+        try:
+            chk = pricer.chunk_ops(CHUNK_TOKENS, DECODE_MAX_LEN,
+                                   kind="paged",
+                                   kv_block_size=KV_BLOCK_SIZE)
+        except (ValueError, KeyError):
+            chk = None
+    entries = [("prefill", pre),
+               ("decode", [o.at(DECODE_MAX_LEN) for o in dec])]
+    if chk is not None:
+        entries.append(("suffix-chunk", chk))
+    for label, ops in entries:
         bad = offenders(ops, threshold)
         if bad:
             problems.append(f"{label}: " + ", ".join(bad))

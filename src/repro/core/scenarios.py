@@ -191,7 +191,8 @@ def run_cloud_disaggregated(model: str = "llama2-70b", attn: str = "gqa",
 
 def run_cloud_trace(model: str = "llama2-70b", attn: str = "gqa",
                     trace: str = "diurnal", seed: int = 0,
-                    max_batch: int = 8) -> dict:
+                    max_batch: int = 8,
+                    prefix_sweep: tuple = ()) -> dict:
     """Time-varying multi-tenant load priced end-to-end: the seeded
     named trace (diurnal swing by default) replayed through the
     simulator's schedule mirror on (a) one DGX-H100, (b) one PIM-AI
@@ -202,8 +203,16 @@ def run_cloud_trace(model: str = "llama2-70b", attn: str = "gqa",
     bursty peaks move TCO-per-QPS the way a real diurnal tenant mix
     does. The named traces are schedule-scale (smoke-length prompts),
     so the absolute numbers calibrate the *shape* of the comparison,
-    not paper-scale magnitudes."""
-    from repro.serving.workload import make_named_trace
+    not paper-scale magnitudes.
+
+    ``prefix_sweep`` (e.g. ``(0, 16, 32, 48)``) adds the prefix-cache
+    TCO story: for each shared-preamble length, a sharedprefix-style
+    tenant mix runs on the PIM engine with the paged prefix cache
+    enabled, and the returned ``"prefix_sweep"`` rows chart realized
+    hit-rate -> TTFT -> TCO-per-QPS (longer shared preambles -> higher
+    hit rate -> cheaper sustained QPS; every avoided prefill token is
+    avoided xPU work *and* avoided KV ingest)."""
+    from repro.serving.workload import TenantSpec, make_named_trace, make_trace
 
     cfg = registry.get_config(model)
     if attn == "mha":
@@ -254,12 +263,50 @@ def run_cloud_trace(model: str = "llama2-70b", attn: str = "gqa",
                       + engine_capex * n_dec)
     sys_dis["rescale_log"] = r_dis["rescale_log"]
     sys_dis["handoffs"] = r_dis["handoffs"]
+
+    sweep_rows = []
+    for plen in prefix_sweep:
+        # constant total prompt length (56..64 tokens) at every point —
+        # only the *shared share* of it moves, so realized hit rate is
+        # the swept variable, not prompt size. A constrained pool
+        # (kv_blocks=12 over max_batch slots) makes admission wait on
+        # block capacity: warm requests charge only the uncached
+        # suffix, admit sooner, and TTFT/TCO respond to the hit rate.
+        plen = int(plen)
+        tenants = (
+            TenantSpec("assist", rate_rps=4.0,
+                       prompt_len=(56 - plen, 64 - plen),
+                       new_tokens=(4, 6), priority=1, prefix_len=plen),
+            TenantSpec("rag", rate_rps=3.0,
+                       prompt_len=(56 - plen, 64 - plen),
+                       new_tokens=(4, 6), priority=0, prefix_len=plen),
+            TenantSpec("adhoc", rate_rps=1.0, prompt_len=(10, 20),
+                       new_tokens=(4, 6), priority=0))
+        tr_p = make_trace(tenants, 2.0, vocab_size=cfg.vocab_size,
+                          seed=seed, name=f"sharedprefix-{plen}")
+        r = pim.serve(trace=tr_p, scheduler="slo", max_batch=max_batch,
+                      kv_cache="paged", kv_block_size=16,
+                      max_seq_len=96, kv_blocks=12, prefix_cache=True)
+        row = _system(r, engine_capex)
+        sweep_rows.append({
+            "prefix_len": plen,
+            "prefix_hit_rate": r["prefix_hit_rate"],
+            "prefix_hits": r["prefix_hits"],
+            "prefix_evictions": r["prefix_evictions"],
+            "mean_ttft_s": r["summary"]["mean_ttft_s"],
+            "ttft_p99_s": r["summary"]["ttft_p99_s"],
+            "qps_sustained": row["qps_sustained"],
+            "energy_per_token_j": row["energy_per_token_j"],
+            "tco_per_qps": row["tco_per_qps"],
+        })
+
     return {
         "model": model, "attn": attn, "trace": tr.schema(),
         "max_batch": max_batch,
         "dgx-h100": sys_xpu,
         "pim-ai-engine": sys_pim,
         "disaggregated": sys_dis,
+        "prefix_sweep": sweep_rows,
         "ratios": {
             # > 1: PIM (or the split) wins on that axis over the trace
             "energy_per_token": (sys_xpu["energy_per_token_j"]

@@ -232,6 +232,30 @@ class _TraceSlotSim:
             self._free_blocks = ecfg.kv_blocks or B * (C // kv_block_size)
             self._nblk = np.zeros(B, np.int64)
             self._rsv = np.zeros(B, np.int64)
+        # prefix caching: the *real* PrefixIndex over virtual block ids
+        # (minted from a counter — identity is all the LRU/refcount
+        # machinery reads), so match/acquire/release/register/evict
+        # replay the engine's hit/miss/eviction schedule by
+        # construction. Enabled exactly where the engine enables it
+        # (ServingEngine._prefix_on): paged + prefix_cache, token-only
+        # prompts (no vlm image prefix); the trace sim is blocking/slo
+        # only, so the speculative exclusion is vacuous here.
+        self.prefix = None
+        cfg = sim.cfg
+        if (kv_cache == "paged" and getattr(ecfg, "prefix_cache", False)
+                and not (cfg.family == "vlm" and cfg.n_image_tokens)):
+            from repro.serving.kv_cache import PrefixIndex
+            self.prefix = PrefixIndex(kv_block_size)
+        self._next_vbid = 0
+        # per-slot shared aliases, in table order (aliased prefix ids
+        # first, then ids registered from this slot's private blocks) —
+        # release order at free must match the engine's table scan
+        self._vshared: list[list[int]] = [[] for _ in range(B)]
+        self.prefix_lookups = 0
+        self.prefix_hits = 0
+        self.prefix_hit_tokens = 0
+        self.prefix_lookup_tokens = 0
+        self.prefill_chunk_dispatches = 0
         # pricing: prefill dispatches may run on different hardware
         # (xPU prefill tier); decode and transfers on this sim's
         self._psim = prefill_sim or sim
@@ -288,21 +312,70 @@ class _TraceSlotSim:
                     self.ecfg.max_seq_len - 1)
         return math.ceil(max(n_pos, 1) / self.block_size)
 
-    def can_admit(self, n_prompt: int, budget: int) -> bool:
+    def can_admit(self, n_prompt: int, budget: int, prompt=None) -> bool:
         if self.kv_kind != "paged":
             return True
-        return (self._free_blocks - int(self._rsv.sum())
-                >= self._need_blocks(n_prompt, budget))
+        need = self._need_blocks(n_prompt, budget)
+        avail = self._free_blocks - int(self._rsv.sum())
+        if self.prefix is not None:
+            # evictable credit applies even promptless (resume/route):
+            # see PagedCache.can_admit
+            ids = (self.prefix.match(prompt, n_prompt)
+                   if prompt is not None else [])
+            need -= len(ids)
+            avail += self.prefix.evictable(excluding=ids)
+        return avail >= need
+
+    def prefix_match_tokens(self, prompt, n_prompt: int) -> int:
+        """Mirror of ``PagedCache.prefix_match_tokens`` (pure query —
+        the cluster mirror's affinity router reads it)."""
+        if self.prefix is None:
+            return 0
+        return len(self.prefix.match(prompt, n_prompt)) * self.block_size
+
+    def _alloc_private(self, k: int) -> None:
+        """Take ``k`` private blocks from the pool, evicting LRU
+        zero-ref shared blocks under pressure — the exact discipline of
+        ``PagedCache._alloc_block``."""
+        for _ in range(k):
+            if self._free_blocks == 0 and self.prefix is not None:
+                if self.prefix.evict_lru() is not None:
+                    self._free_blocks += 1
+            self._free_blocks -= 1
+
+    def _register(self, slot: int, prompt, n_prompt: int) -> None:
+        """Mirror of ``PagedCache.register_prefix``: publish this
+        slot's full prompt blocks, minting a fresh virtual id per newly
+        registered block (a duplicate hash keeps the private copy,
+        exactly as the real cache does)."""
+        if self.prefix is None:
+            return
+        full = n_prompt // self.block_size
+        if not full:
+            return
+        keys = self.prefix.keys_for(prompt, full)
+        h = len(self._vshared[slot])
+        for k in range(h, full):
+            if self.prefix.register(keys[k], self._next_vbid):
+                self._vshared[slot].append(self._next_vbid)
+                self._next_vbid += 1
 
     def _ledger_bind(self, slot: int, n_prompt: int, budget: int, *,
-                     n_valid: int | None = None) -> None:
-        """Mirror of ``PagedCache.splice`` (fresh admit) / ``import_slot``
-        (resume): allocate the prefix blocks, reserve the worst case."""
+                     n_valid: int | None = None,
+                     shared_ids=()) -> None:
+        """Mirror of ``PagedCache.splice`` / ``splice_prefix`` (fresh
+        admit) / ``import_slot`` (resume): alias the matched shared
+        prefix, allocate the private remainder, reserve the worst
+        case."""
         if self.kv_kind != "paged":
             return
         held = n_prompt if n_valid is None else n_valid
         now = max(1, math.ceil(max(held, 1) / self.block_size))
-        self._free_blocks -= now
+        h = len(shared_ids)
+        if shared_ids:
+            self.prefix.acquire(shared_ids)
+        self._vshared[slot] = list(shared_ids)
+        self._alloc_private(now - h)
         self._nblk[slot] = now
         self._rsv[slot] = max(0, self._need_blocks(n_prompt, budget) - now)
 
@@ -313,14 +386,18 @@ class _TraceSlotSim:
             return
         b = int(self.slot_pos[slot]) // self.block_size
         if b >= int(self._nblk[slot]):
-            self._free_blocks -= 1
+            self._alloc_private(1)
             self._nblk[slot] = b + 1
             self._rsv[slot] = max(0, int(self._rsv[slot]) - 1)
 
     def _ledger_free(self, slot: int) -> None:
         if self.kv_kind != "paged":
             return
-        self._free_blocks += int(self._nblk[slot])
+        shared = self._vshared[slot]
+        self._free_blocks += int(self._nblk[slot]) - len(shared)
+        for bid in shared:   # table order — LRU insertion order matters
+            self.prefix.release(bid)
+        self._vshared[slot] = []
         self._nblk[slot] = 0
         self._rsv[slot] = 0
 
@@ -336,6 +413,30 @@ class _TraceSlotSim:
         return int(span * self._bpt)
 
     # -- admission / preemption mechanism (called by the scheduler) --------
+    def _suffix_cost(self, n_suf: int) -> PhaseResult:
+        """Price of a warm suffix-only admission: one ``chunk_{kind}``
+        dispatch over the bucketed suffix (the engine's warm path
+        reuses the chunked-prefill closure at the matched history
+        offset), the suffix token ids H2D — the shared-prefix KV
+        ingest is exactly the cost the cache avoids — and the
+        first-token D2H."""
+        psim = self._psim
+        r = PhaseResult()
+        nb = self._bucket_len(n_suf)
+        for op in psim._chunk_ops(nb, self.ecfg.max_seq_len,
+                                  self.kv_kind, self.block_size):
+            r.add(_op_cost(op, psim.hw, psim.sim))
+        r.add(_host_transfer(nb * 4, psim.hw, d2h=False))
+        r.add(_host_transfer(4, psim.hw, d2h=True))
+        if psim.sim.tp_degree > 1:
+            cfg = psim.cfg
+            per_tok = (2 * cfg.n_layers * cfg.d_model * 2
+                       * (psim.sim.tp_degree - 1) / psim.sim.tp_degree)
+            r.add(_tp_collective(per_tok * nb, psim.hw))
+        r.seconds += psim.sim.orchestration_s
+        r.host_s += psim.sim.orchestration_s
+        return r
+
     def _admit_one(self, slot: int, req) -> bool:
         if req.rid in self.preempted_packets:
             return self._resume_slot(slot, req)
@@ -353,8 +454,12 @@ class _TraceSlotSim:
         n_prefix = (cfg.n_image_tokens
                     if cfg.family == "vlm" and cfg.n_image_tokens else 0)
         n_prompt = n_tok + n_prefix
-        if not self.can_admit(n_prompt, budget):
+        prompt = req.prompt[:n_tok] if self.prefix is not None else None
+        if not self.can_admit(n_prompt, budget, prompt=prompt):
             return False
+        if (self.prefix is not None
+                and self.prefix_match_tokens(prompt, n_prompt)):
+            return self._admit_prefix(slot, req, prompt, n_prompt, budget)
         # one bucketed whole-prompt prefill dispatch, priced on the
         # prefill tier's hardware
         self.enc.add(self._psim.encode(1, self._bucket_len(n_tok)))
@@ -367,7 +472,53 @@ class _TraceSlotSim:
             req.t_done = self._now()   # admit-time retirement
             self.finished.append(req)
             return True
+        if self.prefix is not None:     # cold miss, counted on splice
+            self.prefix_lookups += 1
+            self.prefix_lookup_tokens += n_prompt
         self._ledger_bind(slot, n_prompt, budget)
+        if self.prefix is not None:
+            self._register(slot, prompt, n_prompt)
+        self.slot_req[slot] = req
+        self.slot_len[slot] = 1
+        self.slot_pos[slot] = n_prompt
+        self.slot_nprompt[slot] = n_prompt
+        return True
+
+    def _admit_prefix(self, slot: int, req, prompt, n_prompt: int,
+                      budget: int) -> bool:
+        """Warm admission: mirror of ``ServingEngine._admit_prefix``
+        step for step — alias the matched blocks, price only the
+        suffix chunk, publish on decode bind."""
+        ids = self.prefix.match(prompt, n_prompt)
+        h_tok = len(ids) * self.block_size
+        # counters land exactly where PagedCache.splice_prefix puts them
+        self.prefix_lookups += 1
+        self.prefix_lookup_tokens += n_prompt
+        self.prefix_hits += 1
+        self.prefix_hit_tokens += h_tok
+        n_suf = n_prompt - h_tok
+        self.enc.add(self._suffix_cost(n_suf))
+        self.prefill_chunk_dispatches += 1
+        self.prefills += 1
+        self.admission_log.append(req.rid)
+        req.prefill_chunks = 1
+        req.t_first = self._now()
+        req.output.append(self._TOKEN)
+        if budget <= 1 or n_prompt >= self.ecfg.max_seq_len - 1:
+            # admit-time retirement: the engine acquires on splice and
+            # releases on free — replay the LRU recency poke, including
+            # the suffix allocs (which can evict under pressure)
+            now = max(1, math.ceil(n_prompt / self.block_size))
+            self.prefix.acquire(ids)
+            self._alloc_private(now - len(ids))
+            for bid in ids:
+                self.prefix.release(bid)
+            self._free_blocks += now - len(ids)
+            req.t_done = self._now()
+            self.finished.append(req)
+            return True
+        self._ledger_bind(slot, n_prompt, budget, shared_ids=ids)
+        self._register(slot, prompt, n_prompt)
         self.slot_req[slot] = req
         self.slot_len[slot] = 1
         self.slot_pos[slot] = n_prompt
@@ -376,19 +527,27 @@ class _TraceSlotSim:
 
     def _pack_slot(self, slot: int) -> dict:
         req = self.slot_req[slot]
+        n_prompt = int(self.slot_nprompt[slot])
         pkt = {"req": req, "pos": int(self.slot_pos[slot]),
                "gen_len": int(self.slot_len[slot]),
-               "n_prompt": int(self.slot_nprompt[slot]),
+               "n_prompt": n_prompt,
                "budget": self._budget(req),
                "kv_bytes": self._span_bytes(int(self.slot_pos[slot]))}
+        if self.prefix is not None:   # shared-block provenance
+            pkt["prompt"] = req.prompt[:n_prompt]
         self.slot_req[slot] = None
         self.slot_len[slot] = 0
         self._ledger_free(slot)
         return pkt
 
     def _unpack_slot(self, pkt: dict, slot: int) -> None:
+        # mirror of import_slot's provenance re-match: alias whatever
+        # prefix the importing pool already holds, copy only the tail
+        ids = ()
+        if self.prefix is not None and pkt.get("prompt") is not None:
+            ids = self.prefix.match(pkt["prompt"], pkt["n_prompt"])
         self._ledger_bind(slot, pkt["n_prompt"], pkt["budget"],
-                          n_valid=pkt["pos"])
+                          n_valid=pkt["pos"], shared_ids=ids)
         self.slot_req[slot] = pkt["req"]
         self.slot_len[slot] = pkt["gen_len"]
         self.slot_pos[slot] = pkt["pos"]
@@ -515,6 +674,7 @@ class _TraceClusterSim:
         self.pending: deque = deque()
         self.finished: list = []
         self._pf_rr = 0
+        self.prefix_routed = 0
         self.handoffs = 0
         self.migrations = 0
         self.kv_transfer_bytes = 0
@@ -624,8 +784,7 @@ class _TraceClusterSim:
         quota = rate * len(pws) if rate > 0 else float("inf")
         while self.waiting and head > 0 and quota > 0:
             quota -= 1
-            w = pws[self._pf_rr % len(pws)]
-            self._pf_rr += 1
+            w = self._pick_prefill_worker(pws, self.waiting[0])
             req = self.waiting.popleft()
             w.eng.waiting.append(req)
             w.eng.scheduler.admit(w.eng)
@@ -637,6 +796,27 @@ class _TraceClusterSim:
             for slot in w.live_slots():
                 self._export_slot(w, slot)
                 head -= 1
+
+    def _pick_prefill_worker(self, pws: list, req) -> "_TraceWorker":
+        """Mirror of ``ClusterEngine._pick_prefill_worker``: prefix
+        affinity over round-robin, same cursor discipline, same
+        in-worker-order tie break."""
+        rr = pws[self._pf_rr % len(pws)]
+        self._pf_rr += 1
+        eng0 = pws[0].eng
+        if eng0.prefix is None:
+            return rr
+        prompt = req.prompt[:eng0._prompt_cap()]
+        n_prompt = int(prompt.shape[0])
+        best, score = None, 0
+        for w in pws:
+            s = w.eng.prefix_match_tokens(prompt, n_prompt)
+            if s > score:
+                best, score = w, s
+        if best is None:
+            return rr
+        self.prefix_routed += 1
+        return best
 
     def _route(self, pkt: dict) -> _TraceWorker | None:
         best = None
@@ -795,7 +975,8 @@ class LLMSimulator:
               trace=None, step_quantum_s: float = 0.01,
               max_batch: int = 8, kv_blocks: int = 0,
               cluster_opts: dict | None = None,
-              prefill_sim: "LLMSimulator | None" = None) -> dict:
+              prefill_sim: "LLMSimulator | None" = None,
+              prefix_cache: bool = False) -> dict:
         """Continuous-batching cloud scenario (matches ``ServingEngine``):
         per-request prefill + one fully-ragged decode dispatch per step
         over the whole batch, each row's KV span growing from its own
@@ -851,7 +1032,12 @@ class LLMSimulator:
         ``autoscale_interval``, ``prefill_rate``, ``in_flight``,
         ``slo_aware``) mirror ``ClusterConfig``; ``prefill_sim`` prices
         prefill dispatches on different hardware (the paper's
-        xPU-prefill / PIM-decode split)."""
+        xPU-prefill / PIM-decode split); ``prefix_cache=True`` mirrors
+        ``EngineConfig.prefix_cache`` — the trace mirror runs the
+        *real* ``PrefixIndex`` over virtual block ids, so the engine's
+        hit/miss/eviction schedule is reproduced exactly and warm
+        admissions are priced as suffix-only chunk dispatches (the
+        avoided prefix prefill + KV ingest is the saving)."""
         from repro.serving.kv_cache import (contiguous_kv_bytes,
                                             paged_resident_kv_bytes)
         if trace is not None:
@@ -872,12 +1058,14 @@ class LLMSimulator:
                     cap=cap, max_batch=max_batch, kv_blocks=kv_blocks,
                     n_prefill=int(cluster[0]), n_decode=int(cluster[1]),
                     step_quantum_s=step_quantum_s,
-                    opts=cluster_opts or {}, prefill_sim=prefill_sim)
+                    opts=cluster_opts or {}, prefill_sim=prefill_sim,
+                    prefix_cache=prefix_cache)
             return self._serve_trace(
                 trace, kv_cache=kv_cache, kv_block_size=kv_block_size,
                 cap=cap, scheduler=scheduler, max_batch=max_batch,
                 kv_blocks=kv_blocks,
-                step_quantum_s=step_quantum_s, prefill_sim=prefill_sim)
+                step_quantum_s=step_quantum_s, prefill_sim=prefill_sim,
+                prefix_cache=prefix_cache)
         if n_ins is None:
             raise TypeError("serve() needs a workload: either n_ins/"
                             "n_out or trace=")
@@ -1173,7 +1361,7 @@ class LLMSimulator:
     def _serve_trace(self, trace, *, kv_cache: str, kv_block_size: int,
                      cap: int, scheduler: str, max_batch: int,
                      step_quantum_s: float, kv_blocks: int = 0,
-                     prefill_sim=None,
+                     prefill_sim=None, prefix_cache: bool = False,
                      max_steps: int = 200_000) -> dict:
         """Single-engine trace mirror: the replay loop of
         ``serving.workload.replay``, verbatim, over the analytical slot
@@ -1186,7 +1374,8 @@ class LLMSimulator:
         ecfg = EngineConfig(max_batch=max_batch, max_seq_len=cap,
                             scheduler=scheduler, kv_cache=kv_cache,
                             kv_block_size=kv_block_size,
-                            kv_blocks=kv_blocks)
+                            kv_blocks=kv_blocks,
+                            prefix_cache=prefix_cache)
         tsim = _TraceSlotSim(self, ecfg, kv_cache=kv_cache,
                              kv_block_size=kv_block_size,
                              prefill_sim=prefill_sim)
@@ -1225,6 +1414,14 @@ class LLMSimulator:
             "preemptions": tsim.preemptions,
             "preempted_kv_bytes": tsim.preempted_kv_bytes,
             "prefills": tsim.prefills,
+            "prefix_lookups": tsim.prefix_lookups,
+            "prefix_hits": tsim.prefix_hits,
+            "prefix_hit_tokens": tsim.prefix_hit_tokens,
+            "prefix_hit_rate": (tsim.prefix_hit_tokens
+                                / tsim.prefix_lookup_tokens
+                                if tsim.prefix_lookup_tokens else 0.0),
+            "prefix_evictions": (tsim.prefix.evictions
+                                 if tsim.prefix is not None else 0),
             "summary": self._trace_summary(done, tsim.preemptions),
             # priced on this simulator's hardware profile
             "encode": enc,
@@ -1243,6 +1440,7 @@ class LLMSimulator:
                              n_prefill: int, n_decode: int,
                              step_quantum_s: float, opts: dict,
                              kv_blocks: int = 0, prefill_sim=None,
+                             prefix_cache: bool = False,
                              max_steps: int = 200_000) -> dict:
         """Disaggregated trace mirror: ``ClusterEngine`` replay over
         analytical workers — including the shared autoscale policy, the
@@ -1256,7 +1454,8 @@ class LLMSimulator:
         ecfg = EngineConfig(max_batch=max_batch, max_seq_len=cap,
                             scheduler="blocking", kv_cache=kv_cache,
                             kv_block_size=kv_block_size,
-                            kv_blocks=kv_blocks)
+                            kv_blocks=kv_blocks,
+                            prefix_cache=prefix_cache)
         csim = _TraceClusterSim(self, ecfg, kv_cache=kv_cache,
                                 kv_block_size=kv_block_size,
                                 n_prefill=n_prefill, n_decode=n_decode,
@@ -1309,6 +1508,18 @@ class LLMSimulator:
             "migration_bytes": csim.migration_bytes,
             "rescale_events": len(csim.rescale_log),
             "rescale_log": list(csim.rescale_log),
+            "prefix_routed": csim.prefix_routed,
+            "prefix_lookups": sum(w.eng.prefix_lookups for w in workers),
+            "prefix_hits": sum(w.eng.prefix_hits for w in workers),
+            "prefix_hit_tokens": sum(w.eng.prefix_hit_tokens
+                                     for w in workers),
+            "prefix_hit_rate": (
+                sum(w.eng.prefix_hit_tokens for w in workers)
+                / max(1, sum(w.eng.prefix_lookup_tokens for w in workers))
+                if any(w.eng.prefix_lookup_tokens for w in workers)
+                else 0.0),
+            "prefix_evictions": sum(w.eng.prefix.evictions for w in workers
+                                    if w.eng.prefix is not None),
             "summary": self._trace_summary(
                 done, sum(r.preemptions for r in done)),
             "encode": enc,

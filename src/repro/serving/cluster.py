@@ -29,6 +29,13 @@ from ``jax.devices()`` (multi-device in CI via
   alive decode worker whose in-flight budget and cache capacity accept
   it; packets that fit nowhere wait (backpressure throttles prefill
   admission through the same budget).
+- **Prefix-affinity prefill routing** (with ``prefix_cache`` on): a
+  waiting request goes to the prefill worker already holding the
+  longest cached prefix of its prompt — Sangam's locality-over-load
+  argument: re-prefilling KV another worker holds is wasted compute
+  *and* wasted DDR movement — falling back to round-robin on a cold
+  prompt. Handoff packets carry prefix provenance, so an importer
+  re-matches against its own index and aliases instead of copying.
 - **Fault-tolerant slot migration**: :meth:`drain_worker` /
   :meth:`kill_worker` export every live slot of a decode worker
   mid-stream and re-import them elsewhere — no token is lost and the
@@ -166,6 +173,7 @@ class ClusterEngine:
         self.finished: list[Request] = []
         self._next_rid = 0
         self._pf_rr = 0  # prefill round-robin cursor
+        self.prefix_routed = 0  # admissions routed by prefix affinity
         self._req_hops: dict[int, int] = {}  # rid -> migrations survived
         # transfer / migration accounting
         self.handoffs = 0
@@ -363,8 +371,7 @@ class ClusterEngine:
         quota = rate * len(pws) if rate > 0 else float("inf")
         while self.waiting and head > 0 and quota > 0:
             quota -= 1
-            w = pws[self._pf_rr % len(pws)]
-            self._pf_rr += 1
+            w = self._pick_prefill_worker(pws, self.waiting[0])
             req = self.waiting.popleft()
             with jax.default_device(w.device):
                 w.eng.waiting.append(req)
@@ -378,6 +385,33 @@ class ClusterEngine:
             for slot in w.live_slots():
                 self._export_slot(w, slot)
                 head -= 1
+
+    def _pick_prefill_worker(self, pws: list[Worker], req: Request) -> Worker:
+        """Prefix-affinity routing (Sangam's locality-over-load
+        observation): among alive prefill workers, the one already
+        holding the longest cached prefix of this prompt wins — re-
+        prefilling a prefix another worker holds is pure waste, and the
+        KV the affine worker splices never crosses a device boundary
+        twice. Ties break in worker order (deterministic, mirrorable);
+        with no match anywhere, fall back to round-robin. The cursor
+        advances either way, so a cold workload sees the exact
+        round-robin schedule prefix caching was layered onto."""
+        rr = pws[self._pf_rr % len(pws)]
+        self._pf_rr += 1
+        eng0 = pws[0].eng
+        if not eng0._prefix_on:
+            return rr
+        prompt = req.prompt[:eng0._prompt_cap()]
+        n_prompt = int(prompt.shape[0])
+        best, score = None, 0
+        for w in pws:
+            s = w.eng.kv.prefix_match_tokens(prompt, n_prompt)
+            if s > score:
+                best, score = w, s
+        if best is None:
+            return rr
+        self.prefix_routed += 1
+        return best
 
     def _export_slot(self, w: Worker, slot: int, *, migration=False):
         """Pack one live slot into a SlotPacket and release it (the
@@ -437,6 +471,11 @@ class ClusterEngine:
         toks = sum(len(r.output) for r in done)
         wall = max(r.t_done for r in done) - min(r.t_submit for r in done)
         dws = self.decode_workers
+        aws = self.prefill_workers + dws  # every engine, both tiers
+        hit_tok = sum(getattr(w.eng.kv, "prefix_hit_tokens", 0)
+                      for w in aws)
+        lookup_tok = sum(getattr(w.eng.kv, "prefix_lookup_tokens", 0)
+                         for w in aws)
         return {
             "requests": len(done),
             "tokens": toks,
@@ -477,6 +516,24 @@ class ClusterEngine:
             "straggler_events": sum(len(w.monitor.events) for w in dws),
             "workers_alive": sum(w.alive for w in dws),
             "kv_cache": dws[0].eng.kv.name,
+            # prefix-cache accounting over both tiers (admission-time
+            # lookups happen on prefill workers; decode workers re-match
+            # packet provenance at import but never register, so their
+            # lookup counters stay zero) + affinity-router wins
+            "prefix_routed": self.prefix_routed,
+            "prefix_hits": sum(getattr(w.eng.kv, "prefix_hits", 0)
+                               for w in aws),
+            "prefix_hit_tokens": hit_tok,
+            "prefix_lookups": sum(
+                getattr(w.eng.kv, "prefix_lookups", 0) for w in aws),
+            "prefix_hit_rate": (hit_tok / lookup_tok
+                                if lookup_tok else 0.0),
+            "prefix_evictions": sum(
+                w.eng.kv.prefix.evictions for w in aws
+                if getattr(w.eng.kv, "prefix", None) is not None),
+            "resident_shared_kv_bytes": sum(
+                getattr(w.eng.kv, "resident_shared_kv_bytes", 0)
+                for w in aws),
             # decode-tier KV residency (prefill workers release at export)
             "resident_kv_bytes": sum(
                 w.eng.kv.peak_resident_kv_bytes for w in dws),

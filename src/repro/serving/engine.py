@@ -196,6 +196,15 @@ class EngineConfig:
     kv_block_size: int = 16       # paged: positions per KV block
     kv_blocks: int = 0            # paged: pool size; 0 -> auto
                                   # (max_batch * max_seq_len / block_size)
+    prefix_cache: bool = False    # paged: hash-based prefix caching —
+                                  # admissions splice shared immutable
+                                  # blocks for the longest cached
+                                  # block-aligned prompt prefix and
+                                  # prefill only the suffix. Ignored by
+                                  # contiguous backends, image-prefix
+                                  # (vlm) configs, and the speculative
+                                  # policy (the draft's shadow cache
+                                  # needs the whole prompt).
     scheduler: str = "blocking"   # "blocking" | "chunked" |
                                   # "speculative" (serving/scheduler.py)
     chunk_tokens: int = 64        # chunked: prompt tokens per prefill
@@ -390,6 +399,16 @@ class ServingEngine:
         # scheduling policy (admission / chunk selection / retirement)
         self.scheduler = make_scheduler(cfg, ecfg)
         self.prefilling: dict[int, PrefillState] = {}  # slot -> progress
+        # prefix caching runs only where the KV layout can alias blocks
+        # (paged, so the backend carries a PrefixIndex), positions map
+        # 1:1 to prompt tokens (vlm image prefixes shift every block
+        # boundary off the token hashes), and the whole prompt is not
+        # needed by a second cache (the speculative draft's contiguous
+        # shadow has no block table to alias into)
+        self._prefix_on = (
+            getattr(self.kv, "prefix", None) is not None
+            and not (cfg.family == "vlm" and cfg.n_image_tokens)
+            and self.scheduler.name != "speculative")
         # dispatch accounting (the tentpole invariant: 1 per step)
         self.decode_dispatches = 0   # jitted target decode/verify calls
         self.decode_steps = 0        # engine steps that decoded anything
@@ -794,7 +813,9 @@ class ServingEngine:
         n_prompt = int(prompt.shape[0])
         if self.cfg.family == "vlm" and self.cfg.n_image_tokens:
             n_prompt += self.cfg.n_image_tokens
-        if not self.kv.can_admit(n_prompt, budget):
+        if not self.kv.can_admit(n_prompt, budget,
+                                 prompt=prompt if self._prefix_on
+                                 else None):
             return False
         return prompt, n_prompt, budget
 
@@ -810,6 +831,9 @@ class ServingEngine:
         if isinstance(pro, bool):
             return pro
         prompt, n_prompt, budget = pro
+        if (self._prefix_on
+                and self.kv.prefix_match_tokens(prompt, n_prompt)):
+            return self._admit_prefix(slot, req, prompt, n_prompt, budget)
         n = int(prompt.shape[0])
         nb = self._bucket_len(n)
         toks = np.zeros(nb, np.int32)
@@ -841,7 +865,13 @@ class ServingEngine:
             req.t_done = self._now()
             self.finished.append(req)
             return True
-        self.kv.splice(rows, slot, n_prompt, budget)
+        self.kv.splice(rows, slot, n_prompt, budget,
+                       prompt=prompt if self._prefix_on else None)
+        if self._prefix_on:
+            # publish the prompt's full blocks as shared (a cold miss:
+            # the match above was empty) — the next request with this
+            # prefix splices them instead of re-prefilling
+            self.kv.register_prefix(slot, prompt, n_prompt)
         if self.draft_kv is not None:
             # speculative: the draft shadows the committed sequence —
             # prefill its cache over the same (bucketed) batch so the
@@ -851,6 +881,54 @@ class ServingEngine:
             self.draft_kv.splice(drows, slot, n_prompt, budget)
             self.draft_dispatches += 1
             self.draft_pos[slot] = n_prompt
+        self._bind_decode(slot, req, seed, tok, n_prompt)
+        return True
+
+    def _admit_prefix(self, slot: int, req: Request, prompt,
+                      n_prompt: int, budget: int) -> bool:
+        """Warm blocking admission: splice the cached prefix blocks into
+        the slot (refcounts bumped, reservation charges only the
+        suffix), then prefill just ``prompt[h:]`` with one prefill-over-
+        cache chunk dispatch at history offset ``h`` — the PR 3 chunk
+        graph, so ``costmodel`` prices it with the same traced closure.
+        The suffix is never empty: matches cap at ``(n_prompt - 1) //
+        block_size`` blocks, so the prompt's last token always runs to
+        produce the admission logits at chunk-local index
+        ``n_prompt - 1 - h``. Bitwise equivalence with cold prefill
+        follows from determinism of the prompt KV: absolute-position
+        RoPE + the same tokens produce the same blocks, so attending
+        cached blocks equals re-computing them."""
+        h = self.kv.splice_prefix(slot, prompt, n_prompt, budget)
+        n_suf = n_prompt - h
+        nb = self._bucket_len(n_suf)
+        toks = np.zeros(nb, np.int32)
+        toks[:n_suf] = prompt[h:]
+        batch = {"tokens": jnp.asarray(toks[None, :])}
+        view = self.kv.chunk_view(slot)
+        fn = self._chunk_fns[view["kind"]]
+        sel = (jnp.asarray(view["slot"], jnp.int32)
+               if view["kind"] == "contiguous" else view["table"])
+        args = (batch, view["k"], view["v"], sel,
+                jnp.asarray(h, jnp.int32),
+                jnp.asarray(n_suf - 1, jnp.int32))
+        self._log_dispatch(f"chunk_{view['kind']}", *args)
+        logits, ks, vs = fn(self.params, *args)
+        self.kv.splice_partial(ks, vs, slot, h, n_suf)
+        self.prefill_chunk_dispatches += 1
+        self.admission_log.append(req.rid)
+        req.prefill_chunks = 1
+        seed = req.seed if req.seed is not None else self.ecfg.seed
+        tok = self._sample_first(req, seed, logits, n_prompt)
+        if (budget <= 1 or tok == self.ecfg.eos_token
+                or n_prompt >= self.ecfg.max_seq_len - 1):
+            # admit-time retirement: unlike the cold path, the slot
+            # already holds KV (aliased prefix + spliced suffix) —
+            # release it (shared refs drop back to the LRU queue)
+            req.t_done = self._now()
+            self.finished.append(req)
+            self.kv.free(slot)
+            return True
+        self.kv.register_prefix(slot, prompt, n_prompt)
         self._bind_decode(slot, req, seed, tok, n_prompt)
         return True
 
@@ -867,14 +945,22 @@ class ServingEngine:
         if isinstance(pro, bool):
             return pro
         prompt, n_prompt, budget = pro
-        self.kv.reserve(slot, n_prompt, budget)
+        if self._prefix_on:
+            # doubles as the reservation (charging only the uncached
+            # suffix); starting the chunk walk at ``done = h`` makes
+            # _run_chunk stream in exactly ``prompt[h:]`` at the
+            # matched history offset, unchanged
+            h = self.kv.splice_prefix(slot, prompt, n_prompt, budget)
+        else:
+            self.kv.reserve(slot, n_prompt, budget)
+            h = 0
         self.admission_log.append(req.rid)
         seed = req.seed if req.seed is not None else self.ecfg.seed
         n_prefix = n_prompt - int(prompt.shape[0])
         self.slot_req[slot] = req
         self.prefilling[slot] = PrefillState(
             prompt=np.asarray(prompt, np.int32), n_prefix=n_prefix,
-            n_prompt=n_prompt, budget=budget, seed=seed)
+            n_prompt=n_prompt, budget=budget, seed=seed, done=h)
         return True
 
     def _run_chunk(self, slot: int):
@@ -926,6 +1012,10 @@ class ServingEngine:
             self.slot_req[slot] = None
             self.kv.free(slot)
             return
+        if self._prefix_on:
+            # the prompt's KV is fully resident now — publish its full
+            # blocks (hash hits on already-shared blocks are skipped)
+            self.kv.register_prefix(slot, st.prompt, st.n_prompt)
         self._bind_decode(slot, req, st.seed, tok, st.n_prompt)
 
     def _sample_first(self, req: Request, seed: int, logits,
@@ -970,13 +1060,22 @@ class ServingEngine:
         release the slot. The cluster wraps this for worker drains; the
         SLO policy wraps it for preemption — same bytes either way."""
         req = self.slot_req[slot]
+        n_prompt = int(self.slot_nprompt[slot])
+        # prefix provenance rides the packet (the spliced token stream —
+        # req.prompt may have been truncated at admission): the importer
+        # re-matches it against its own index and aliases whatever it
+        # already holds instead of copying the prefix in
         pkt = SlotPacket(
             req=req, seed=int(self.slot_seed[slot]),
             tok=int(self.slot_tok[slot, 0]), pos=int(self.slot_pos[slot]),
             gen_len=int(self.slot_len[slot]),
-            n_prompt=int(self.slot_nprompt[slot]),
+            n_prompt=n_prompt,
             budget=self._budget(req),
-            kv=self.kv.export_slot(slot, int(self.slot_pos[slot])))
+            kv=self.kv.export_slot(
+                slot, int(self.slot_pos[slot]),
+                prompt=(req.prompt[:n_prompt]
+                        if self._prefix_on else None),
+                n_prompt=n_prompt if self._prefix_on else None))
         self.slot_req[slot] = None
         self.slot_len[slot] = 0
         self.kv.free(slot)
@@ -1092,6 +1191,20 @@ class ServingEngine:
             "slo_attainment": sum(r.slo_met for r in done) / len(done),
             **request_breakdowns(done),
             "kv_cache": self.kv.name,
+            # prefix-cache accounting (zeros where the backend has no
+            # index): token hit rate over admitted prompts, admissions
+            # with a nonzero match, shared-pool residency and LRU churn
+            "prefix_hit_rate": float(
+                getattr(self.kv, "prefix_hit_rate", 0.0)),
+            "prefix_hits": int(getattr(self.kv, "prefix_hits", 0)),
+            "prefix_hit_tokens": int(
+                getattr(self.kv, "prefix_hit_tokens", 0)),
+            "prefix_lookups": int(getattr(self.kv, "prefix_lookups", 0)),
+            "prefix_evictions": (
+                self.kv.prefix.evictions
+                if getattr(self.kv, "prefix", None) is not None else 0),
+            "resident_shared_kv_bytes": int(
+                getattr(self.kv, "resident_shared_kv_bytes", 0)),
             # peak bytes the cache backend actually held vs. what a
             # dense max_batch x max_seq_len cache charges regardless;
             # a speculative engine also holds the draft's contiguous

@@ -26,6 +26,22 @@ worst-case block count of every admitted request — ``can_admit`` only
 accepts a request when the free pool covers all outstanding
 reservations, so an admitted request can never deadlock mid-decode.
 
+Prefix caching (opt-in via ``EngineConfig.prefix_cache``): full
+``block_size``-token blocks of the prompt stream are content-hashed
+(chained, so a block's identity covers everything before it) into a
+per-cache :class:`PrefixIndex` of immutable shared blocks with
+refcounts. Admission matches the longest cached block-aligned prefix
+and splices those block IDs into the new slot's table instead of
+re-prefilling them; the reservation charges only the uncached suffix.
+Copy-on-write holds structurally: only blocks wholly inside the prompt
+are ever shared, and every post-prefill write lands at position
+``>= n_prompt`` — i.e. in a privately allocated block — so a shared
+block is never written in place. Refcount-zero shared blocks stay
+resident (that is the cache) and are evicted LRU-first under pool
+pressure; the availability invariant ``free + evictable >= sum of
+reservations`` keeps admission deadlock-free with phantom (evictable)
+credit counted.
+
 The decode-view contract: ``decode_view(pos, live)`` returns the device
 pytree ``decode_step`` consumes. Contiguous returns the dense cache;
 paged returns ``{"k": pool, "v": pool, "block_tab": (B, W) int32,
@@ -35,6 +51,7 @@ block/offset scatter for the new token's KV).
 """
 from __future__ import annotations
 
+import hashlib
 import math
 import warnings
 from typing import Protocol, runtime_checkable
@@ -90,14 +107,19 @@ class KVCacheManager(Protocol):
 
     name: str
 
-    def can_admit(self, n_prompt: int, budget: int) -> bool:
+    def can_admit(self, n_prompt: int, budget: int,
+                  prompt=None) -> bool:
         """True if capacity exists for a request of this prompt length
-        and generation budget (worst case, no mid-decode failure)."""
+        and generation budget (worst case, no mid-decode failure).
+        ``prompt`` (the token stream) lets prefix-caching backends
+        charge only the uncached suffix; backends without a prefix
+        index ignore it."""
         ...
 
     def splice(self, rows: dict, slot: int, n_prompt: int,
-               budget: int) -> None:
-        """Write a batch-1 prefill cache into ``slot``."""
+               budget: int, prompt=None) -> None:
+        """Write a batch-1 prefill cache into ``slot``. ``prompt`` is
+        cold-miss accounting context for prefix-caching backends."""
         ...
 
     def reserve(self, slot: int, n_prompt: int, budget: int) -> None:
@@ -163,7 +185,8 @@ class KVCacheManager(Protocol):
         """Release slot state at retirement."""
         ...
 
-    def export_slot(self, slot: int, n_valid: int) -> dict:
+    def export_slot(self, slot: int, n_valid: int, prompt=None,
+                    n_prompt=None) -> dict:
         """Pack slot ``slot``'s live cache state — KV positions
         ``0 .. n_valid - 1`` plus any recurrent/cross state — into a
         host-side packet for handoff to another worker's cache
@@ -172,7 +195,9 @@ class KVCacheManager(Protocol):
         rows, so a paged exporter can hand off to a contiguous importer
         and vice versa. ``packet["kv_bytes"]`` is the number of bytes
         that crossed the device boundary (what the cluster charges as
-        transfer cost)."""
+        transfer cost). ``prompt``/``n_prompt``, when given, attach
+        prefix provenance so a prefix-caching importer can re-match the
+        prompt against its own index and alias instead of copying."""
         ...
 
     def import_slot(self, packet: dict, slot: int, n_prompt: int,
@@ -243,6 +268,133 @@ class BlockAllocator:
         self._free.append(blk)
 
 
+# ---------------------------------------------------------------------------
+# prefix index (hash-chained shared blocks with refcounts + LRU)
+# ---------------------------------------------------------------------------
+
+def _chain_hash(prev: bytes, tokens: np.ndarray) -> bytes:
+    """One link of the block hash chain: the digest covers the previous
+    link, so equal hashes imply equal *prefixes*, not just equal blocks."""
+    data = prev + np.ascontiguousarray(tokens, np.int64).tobytes()
+    return hashlib.blake2b(data, digest_size=16).digest()
+
+
+class PrefixIndex:
+    """Content-hash registry of immutable shared KV blocks.
+
+    Each entry maps the chained hash of one full ``block_size``-token
+    prompt block (hash covers all tokens up to and including the block)
+    to a pool block id plus a refcount — the number of slot tables
+    currently aliasing the block. Refcount-zero entries stay resident
+    and form an LRU queue; :meth:`evict_lru` unregisters the coldest
+    one when the pool needs its block back.
+
+    The same class backs both the engine's :class:`PagedCache` and the
+    analytical mirror's ledger (virtual block ids), so the hit/miss/
+    eviction schedule is reproduced by construction, not by a re-
+    implementation.
+    """
+
+    def __init__(self, block_size: int):
+        self.block_size = block_size
+        self._by_hash: dict[bytes, int] = {}
+        self._hash_of: dict[int, bytes] = {}
+        self._refs: dict[int, int] = {}
+        self._lru: dict[int, None] = {}   # insertion-ordered: oldest first
+        self.evictions = 0
+
+    # -- queries ----------------------------------------------------------
+    def keys_for(self, prompt, n_blocks: int) -> list[bytes]:
+        """Chained hash keys of the first ``n_blocks`` full blocks."""
+        bs = self.block_size
+        arr = np.asarray(prompt, np.int64)[:n_blocks * bs]
+        keys, key = [], b""
+        for k in range(n_blocks):
+            key = _chain_hash(key, arr[k * bs:(k + 1) * bs])
+            keys.append(key)
+        return keys
+
+    def match(self, prompt, n_prompt: int) -> list[int]:
+        """Block ids of the longest cached block-aligned prefix. Capped
+        at ``(n_prompt - 1) // block_size`` blocks: at least one suffix
+        token must still run through prefill to produce the admission
+        logits."""
+        bs = self.block_size
+        limit = max(0, (int(n_prompt) - 1) // bs)
+        ids: list[int] = []
+        if not limit:
+            return ids
+        arr = np.asarray(prompt, np.int64)[:limit * bs]
+        key = b""
+        for k in range(limit):
+            key = _chain_hash(key, arr[k * bs:(k + 1) * bs])
+            bid = self._by_hash.get(key)
+            if bid is None:
+                break
+            ids.append(bid)
+        return ids
+
+    def holds(self, bid: int) -> bool:
+        return bid in self._hash_of
+
+    def refcount(self, bid: int) -> int:
+        return self._refs.get(bid, 0)
+
+    @property
+    def resident_blocks(self) -> int:
+        return len(self._hash_of)
+
+    def evictable(self, excluding=()) -> int:
+        """Refcount-zero resident blocks the pool could reclaim, minus
+        any the caller is about to acquire."""
+        if not excluding:
+            return len(self._lru)
+        return len(self._lru) - len(set(excluding) & self._lru.keys())
+
+    # -- mutation ---------------------------------------------------------
+    def acquire(self, ids) -> None:
+        """Alias shared blocks into one more slot table (revives any
+        refcount-zero entry out of the LRU queue)."""
+        for bid in ids:
+            self._refs[bid] = self._refs.get(bid, 0) + 1
+            self._lru.pop(bid, None)
+
+    def release(self, bid: int) -> None:
+        """Drop one table's alias; at refcount zero the block joins the
+        LRU queue (still resident — that is the cache)."""
+        n = self._refs.get(bid, 0) - 1
+        if n < 0:
+            raise RuntimeError(f"refcount underflow on shared block {bid}")
+        self._refs[bid] = n
+        if n == 0:
+            self._lru[bid] = None
+
+    def register(self, key: bytes, bid: int) -> bool:
+        """Publish ``bid`` as the canonical block for ``key`` with one
+        reference (the registering slot's own table). Returns False if
+        the key already has a canonical block — the caller keeps its
+        private copy."""
+        if key in self._by_hash:
+            return False
+        self._by_hash[key] = bid
+        self._hash_of[bid] = key
+        self._refs[bid] = 1
+        return True
+
+    def evict_lru(self):
+        """Unregister and return the coldest refcount-zero block id (the
+        caller returns it to the allocator), or None."""
+        if not self._lru:
+            return None
+        bid = next(iter(self._lru))
+        del self._lru[bid]
+        key = self._hash_of.pop(bid)
+        del self._by_hash[key]
+        del self._refs[bid]
+        self.evictions += 1
+        return bid
+
+
 EXPORT_QUANTUM = 16   # exported KV spans round up to this many positions
                       # (bounded set of handoff shapes -> bounded compiles)
 
@@ -304,11 +456,11 @@ class ContiguousCache:
         # slot/offset/n_valid traced: one compile per chunk shape
         self._splice_partial = jax.jit(_splice_partial)
 
-    def can_admit(self, n_prompt: int, budget: int) -> bool:
+    def can_admit(self, n_prompt: int, budget: int, prompt=None) -> bool:
         return True  # every slot already owns full capacity
 
     def splice(self, rows: dict, slot: int, n_prompt: int,
-               budget: int) -> None:
+               budget: int, prompt=None) -> None:
         self._occupied.add(slot)
         self._cache = self._splice(self._cache, rows,
                                    jnp.asarray(slot, jnp.int32))
@@ -344,12 +496,15 @@ class ContiguousCache:
         self._occupied.discard(slot)  # rows are overwritten by the
         # next admit; only the occupancy mark needs releasing
 
-    def export_slot(self, slot: int, n_valid: int) -> dict:
+    def export_slot(self, slot: int, n_valid: int, prompt=None,
+                    n_prompt=None) -> dict:
         """Pack the slot's row of every batched leaf. KV leaves are
         position-sliced to ``n_valid`` rounded up to the export quantum
         (bounded set of import-splice shapes); recurrent / cross-
         attention leaves travel whole — they are O(1) in the sequence
-        length."""
+        length. ``prompt``/``n_prompt`` (prefix provenance) are accepted
+        for signature parity and ignored: the dense layout shares
+        nothing."""
         axes = MD.cache_batch_axes(self._cache)
         packet = {"n_valid": int(n_valid)}
         nbytes = 0
@@ -439,6 +594,14 @@ class PagedCache:
         self.allocator = BlockAllocator(NB)
         self._reserved = np.zeros(B, np.int64)
         self._max_seq_len = C
+        # opt-in prefix caching: hash-chained shared blocks + refcounts
+        self.prefix = (PrefixIndex(bs)
+                       if getattr(ecfg, "prefix_cache", False) else None)
+        self._shared: list[set[int]] = [set() for _ in range(B)]
+        self.prefix_lookups = 0        # admissions that consulted the index
+        self.prefix_hits = 0           # admissions with a nonzero match
+        self.prefix_hit_tokens = 0     # prompt tokens served from cache
+        self.prefix_lookup_tokens = 0  # prompt tokens across lookups
 
         def _splice(pool_k, pool_v, rows_k, rows_v, blocks):
             # rows (L, 1, C, H, Dh) -> per-block (L, W, bs, H, Dh);
@@ -492,7 +655,7 @@ class PagedCache:
         n_pos = min(n_prompt + max(budget, 1) - 1, self._max_seq_len - 1)
         return math.ceil(max(n_pos, 1) / self.block_size)
 
-    def can_admit(self, n_prompt: int, budget: int) -> bool:
+    def can_admit(self, n_prompt: int, budget: int, prompt=None) -> bool:
         need = self._need_blocks(n_prompt, budget)
         if need > self.allocator.num_blocks:
             raise ValueError(
@@ -500,13 +663,61 @@ class PagedCache:
                 f"{self.allocator.num_blocks}; raise kv_blocks or lower "
                 "max_new_tokens")
         outstanding = int(self._reserved.sum())
-        return self.allocator.free_blocks - outstanding >= need
+        avail = self.allocator.free_blocks - outstanding
+        if self.prefix is not None:
+            # a cached prefix charges nothing; refcount-zero resident
+            # blocks (minus the ones this match is about to revive) are
+            # evictable on demand, so they count as available — the
+            # ``free + evictable >= sum(reserved)`` invariant keeps the
+            # phantom credit deadlock-free. The evictable credit applies
+            # even without a prompt (the conservative resume/route gate):
+            # otherwise a pool parked entirely in the zero-ref LRU would
+            # refuse a resume forever with nothing left to free it.
+            ids = (self.prefix.match(prompt, n_prompt)
+                   if prompt is not None else [])
+            need -= len(ids)
+            avail += self.prefix.evictable(excluding=ids)
+        return avail >= need
+
+    def prefix_match_tokens(self, prompt, n_prompt: int) -> int:
+        """Tokens of the longest cached block-aligned prefix (a pure
+        query — no counters, no refcounts; the router uses this too)."""
+        if self.prefix is None:
+            return 0
+        return len(self.prefix.match(prompt, n_prompt)) * self.block_size
+
+    def _alloc_block(self) -> int:
+        """Allocate one pool block, evicting LRU refcount-zero shared
+        blocks under pressure (the freed id is handed right back out)."""
+        if self.prefix is not None and self.allocator.free_blocks == 0:
+            bid = self.prefix.evict_lru()
+            if bid is not None:
+                self.allocator.free(bid)
+        return self.allocator.alloc()
+
+    def _free_block(self, blk: int) -> None:
+        """Return a privately-held block to the allocator. Freeing a
+        block the prefix index still refcounts would alias-corrupt the
+        pool (another slot's table points at it) — raise instead."""
+        if self.prefix is not None:
+            if self.prefix.refcount(blk) > 0:
+                raise RuntimeError(
+                    f"freeing shared block {blk} with refcount "
+                    f"{self.prefix.refcount(blk)}: another slot's table "
+                    "still aliases it — release via the prefix index, "
+                    "never the raw allocator")
+            if self.prefix.holds(blk):
+                raise RuntimeError(
+                    f"freeing registered shared block {blk} outside the "
+                    "eviction path: the index would map its hash to a "
+                    "recycled id")
+        self.allocator.free(blk)
 
     # -- protocol ---------------------------------------------------------
     def splice(self, rows: dict, slot: int, n_prompt: int,
-               budget: int) -> None:
+               budget: int, prompt=None) -> None:
         now = math.ceil(n_prompt / self.block_size)
-        blocks = [self.allocator.alloc() for _ in range(now)]
+        blocks = [self._alloc_block() for _ in range(now)]
         self.table[slot, :now] = blocks
         self._reserved[slot] = self._need_blocks(n_prompt, budget) - now
         vec = np.full(self.table_width, self.num_blocks, np.int32)
@@ -514,6 +725,54 @@ class PagedCache:
         self._pool_k, self._pool_v = self._splice(
             self._pool_k, self._pool_v, rows["k"], rows["v"],
             jnp.asarray(vec))
+        if self.prefix is not None and prompt is not None:
+            # a cold full prefill under prefix mode: count the miss
+            self.prefix_lookups += 1
+            self.prefix_lookup_tokens += int(n_prompt)
+
+    def splice_prefix(self, slot: int, prompt, n_prompt: int,
+                      budget: int) -> int:
+        """Install the longest cached block-aligned prefix into the
+        slot's table (aliasing shared blocks, refcounts bumped) and set
+        the reservation to charge only the uncached suffix. Returns the
+        matched prefix length in tokens — the caller prefills only
+        ``prompt[h:]`` at history offset ``h``. With no match this
+        degenerates to :meth:`reserve` plus miss accounting."""
+        assert self.prefix is not None, "prefix caching is not enabled"
+        ids = self.prefix.match(prompt, n_prompt)
+        h = len(ids)
+        self.prefix.acquire(ids)
+        self._shared[slot] = set(ids)
+        if h:
+            self.table[slot, :h] = ids
+        self._reserved[slot] = self._need_blocks(n_prompt, budget) - h
+        self.prefix_lookups += 1
+        self.prefix_lookup_tokens += int(n_prompt)
+        if h:
+            self.prefix_hits += 1
+            self.prefix_hit_tokens += h * self.block_size
+        return h * self.block_size
+
+    def register_prefix(self, slot: int, prompt, n_prompt: int) -> None:
+        """Publish the slot's full prompt blocks as shared. Called once
+        the prompt's KV is fully resident. Only blocks wholly inside
+        the prompt are shareable — every later write (decode, verify)
+        lands at position ``>= n_prompt``, i.e. in a later, privately
+        allocated block, so published blocks are immutable (this is the
+        copy-on-write guarantee). Hashes already mapped to a different
+        canonical block are skipped: the slot keeps its private copy."""
+        if self.prefix is None:
+            return
+        full = int(n_prompt) // self.block_size
+        if not full:
+            return
+        keys = self.prefix.keys_for(prompt, full)
+        for k in range(full):
+            blk = int(self.table[slot, k])
+            if blk in self._shared[slot]:
+                continue  # already aliased shared (a match hit)
+            if self.prefix.register(keys[k], blk):
+                self._shared[slot].add(blk)
 
     def reserve(self, slot: int, n_prompt: int, budget: int) -> None:
         """Chunked admission: hold the request's whole worst-case block
@@ -532,7 +791,7 @@ class PagedCache:
         for b in range(offset // bs,
                        math.ceil((offset + n_valid) / bs)):
             if self.table[slot, b] == self.num_blocks:
-                self.table[slot, b] = self.allocator.alloc()
+                self.table[slot, b] = self._alloc_block()
                 self._reserved[slot] = max(0, int(self._reserved[slot]) - 1)
         s = int(k_rows.shape[2])
         pos = offset + np.arange(s)
@@ -565,7 +824,7 @@ class PagedCache:
                        self._max_seq_len - 2)
             for b in range(int(pos[i]) // bs, last // bs + 1):
                 if self.table[i, b] == self.num_blocks:
-                    self.table[i, b] = self.allocator.alloc()
+                    self.table[i, b] = self._alloc_block()
                     self._reserved[i] = max(0, int(self._reserved[i]) - 1)
         return {"k": self._pool_k, "v": self._pool_v,
                 "block_tab": jnp.asarray(self.table),
@@ -587,7 +846,7 @@ class PagedCache:
                 # head, commit_n frees a suffix), so the first sentinel
                 # ends the scan — O(freed) host work, not O(width)
                 break
-            self.allocator.free(blk)
+            self._free_block(blk)
             self.table[slot, b] = self.num_blocks
             self._reserved[slot] += 1
 
@@ -596,17 +855,35 @@ class PagedCache:
         self._pool_v = new_cache["v"]
 
     def free(self, slot: int) -> None:
+        shared = self._shared[slot]
         for blk in self.table[slot]:
-            if blk != self.num_blocks:
-                self.allocator.free(int(blk))
+            if blk == self.num_blocks:
+                continue
+            blk = int(blk)
+            if blk in shared:
+                # shared blocks are released, never raw-freed: at
+                # refcount zero they stay resident on the LRU queue
+                self.prefix.release(blk)
+            else:
+                self._free_block(blk)
         self.table[slot] = self.num_blocks
         self._reserved[slot] = 0
+        self._shared[slot] = set()
 
-    def export_slot(self, slot: int, n_valid: int) -> dict:
+    def export_slot(self, slot: int, n_valid: int, prompt=None,
+                    n_prompt=None) -> dict:
         """Block-table-aware pack: gather the slot's allocated blocks
         (lazy allocation fills them as a contiguous prefix, so the
         first ``ceil(n_valid / bs)`` table entries are all real) into
-        dense per-layer rows — the backend-portable handoff format."""
+        dense per-layer rows — the backend-portable handoff format.
+
+        With prefix caching on and the request's prompt supplied, the
+        packet carries shared-block provenance (the prompt token stream
+        plus ``n_prompt``): a prefix-enabled importer re-matches it
+        against *its own* index and aliases whatever it already holds
+        instead of allocating private copies — migration and preemption
+        stay refcount-correct on both ends (the exporter's aliases are
+        released by :meth:`free`, never raw-freed)."""
         bs = self.block_size
         nblk = max(1, math.ceil(max(int(n_valid), 1) / bs))
         idx = jnp.asarray(self.table[slot, :nblk], jnp.int32)
@@ -618,6 +895,13 @@ class PagedCache:
                   "k": np.asarray(jax.device_get(k)),
                   "v": np.asarray(jax.device_get(v))}
         packet["kv_bytes"] = packet["k"].nbytes + packet["v"].nbytes
+        if (self.prefix is not None and prompt is not None
+                and n_prompt is not None):
+            packet["prefix"] = {
+                "tokens": np.asarray(prompt, np.int32).copy(),
+                "n_prompt": int(n_prompt),
+                "shared_blocks": len(self._shared[slot]),
+            }
         return packet
 
     def import_slot(self, packet: dict, slot: int, n_prompt: int,
@@ -638,8 +922,24 @@ class PagedCache:
         n_valid = int(packet["n_valid"])
         now = max(1, math.ceil(max(n_valid, 1) / bs))
         need = self._need_blocks(n_prompt, budget)
-        blocks = [self.allocator.alloc() for _ in range(now)]
-        self.table[slot, :now] = blocks
+        # shared-block provenance: re-match the prompt against our own
+        # index and alias the cached prefix instead of copying it in —
+        # private blocks (and the packet's dense rows) cover only the
+        # tail. A resumed/migrated request thus re-joins the shared
+        # prefix wherever the importer already holds it. h < now always:
+        # matches stop at (n_prompt - 1) // bs and n_valid >= n_prompt.
+        ids: list[int] = []
+        prov = packet.get("prefix")
+        if self.prefix is not None and prov is not None:
+            ids = self.prefix.match(prov["tokens"], int(prov["n_prompt"]))
+        h = len(ids)
+        if ids:
+            self.prefix.acquire(ids)
+        self._shared[slot] = set(ids)
+        if h:
+            self.table[slot, :h] = ids
+        blocks = [self._alloc_block() for _ in range(now - h)]
+        self.table[slot, h:now] = blocks
         self._reserved[slot] = max(0, need - now)
         span = now * bs
         rows_k, rows_v = packet["k"], packet["v"]
@@ -650,7 +950,8 @@ class PagedCache:
             rows_v = np.pad(rows_v, pad)
         self._pool_k, self._pool_v = self._import_blocks(
             self._pool_k, self._pool_v,
-            jnp.asarray(rows_k[:, :, :span]), jnp.asarray(rows_v[:, :, :span]),
+            jnp.asarray(rows_k[:, :, h * bs:span]),
+            jnp.asarray(rows_v[:, :, h * bs:span]),
             jnp.asarray(blocks, jnp.int32))
 
     def resident_kv_bytes(self) -> int:
@@ -661,6 +962,22 @@ class PagedCache:
     def peak_resident_kv_bytes(self) -> int:
         return (self.allocator.peak_allocated * self.block_size
                 * self._bytes_per_token)
+
+    @property
+    def resident_shared_kv_bytes(self) -> int:
+        """Bytes held by blocks the prefix index has published (any
+        refcount, including the refcount-zero LRU tail)."""
+        if self.prefix is None:
+            return 0
+        return (self.prefix.resident_blocks * self.block_size
+                * self._bytes_per_token)
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Fraction of admitted prompt tokens served from the cache."""
+        if not self.prefix_lookup_tokens:
+            return 0.0
+        return self.prefix_hit_tokens / self.prefix_lookup_tokens
 
 
 # ---------------------------------------------------------------------------

@@ -66,6 +66,18 @@ Both schedulers drive identical prefill/decode math for the tokens they
 produce: greedy outputs are bitwise identical across schedulers (and
 across cache backends), only *when* — and, under speculation, *how
 many per step* — each token is produced changes.
+
+Prefix caching (``EngineConfig.prefix_cache``, paged backend) sits
+*under* every policy at the admission seam rather than inside any one
+scheduler: when ``_admit_one`` binds a slot, the cache splices the
+longest content-hash-matched block-aligned prefix copy-on-write and
+the engine prefills only the uncached suffix (through the same chunk
+closure the chunked policy streams with, at the matched history
+offset). Policies only feel it through ``can_admit`` — a cached prefix
+charges no reservation, so warm requests admit earlier under pool
+pressure — which is what moves TTFT without changing any token.
+(Speculative engines opt out: verify-window rollback frees blocks by
+table position and may not alias shared ones.)
 """
 from __future__ import annotations
 

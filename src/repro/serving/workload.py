@@ -64,6 +64,11 @@ class TenantSpec:
                                        # (agent loops fan out > 1)
     window: tuple | None = None        # (t0, t1) active span; None = whole
                                        # horizon (mix-shift traces use this)
+    prefix_len: int = 0                # shared-preamble tokens prepended to
+                                       # every prompt (system prompt / few-
+                                       # shot block — the prefix-cache
+                                       # workload); prompt_len then sizes
+                                       # the unique tail
 
 
 @dataclass
@@ -125,10 +130,23 @@ def make_trace(tenants, horizon_s: float, *, vocab_size: int, seed: int = 0,
     ``len_step > 1`` rounds prompt lengths up to multiples of it,
     bounding the set of distinct prefill shapes (the simulator traces
     one jaxpr per shape — essential at 70B scale).
+
+    A tenant with ``prefix_len > 0`` shares one fixed preamble across
+    all its requests (prepended to each sampled tail). Preambles come
+    from a per-tenant *derived* rng — ``default_rng([seed, tenant
+    index])`` — so tenants with ``prefix_len=0`` draw nothing extra
+    from the main stream and every pre-existing trace stays
+    bit-identical.
     """
     if arrival not in ("poisson", "diurnal"):
         raise ValueError(f"unknown arrival process {arrival!r}")
     rng = np.random.default_rng(seed)
+    preamble = {}
+    for idx, tn in enumerate(tenants):
+        if tn.prefix_len > 0:
+            prng = np.random.default_rng([seed, idx])
+            preamble[tn.name] = prng.integers(
+                0, vocab_size, size=tn.prefix_len).astype(np.int32)
     events = []
     for tn in tenants:
         t0, t1 = tn.window or (0.0, horizon_s)
@@ -158,6 +176,8 @@ def make_trace(tenants, horizon_s: float, *, vocab_size: int, seed: int = 0,
         lo, hi = tn.new_tokens
         m = int(rng.integers(lo, hi + 1))
         prompt = rng.integers(0, vocab_size, size=n).astype(np.int32)
+        if tn.name in preamble:
+            prompt = np.concatenate([preamble[tn.name], prompt])
         requests.append(TraceRequest(
             rid=rid, arrival_s=float(t), tenant=tn.name,
             priority=tn.priority, slo=tn.slo, prompt=prompt,
@@ -181,6 +201,10 @@ def make_named_trace(name: str, *, vocab_size: int, seed: int = 0) -> Trace:
     - ``"mixshift"`` — prefill-heavy first half (long documents, tiny
       outputs), decode-heavy second half (bursty agent loops): drives
       the cluster autoscaler in both directions.
+    - ``"sharedprefix"`` — the prefix-cache gate: two tenants whose
+      requests share a 48-token preamble (3 full 16-token blocks)
+      ahead of short unique tails, plus one cold ad-hoc tenant. Warm
+      admissions should prefill only the tail.
     """
     chat = TenantSpec("chat", rate_rps=2.5, prompt_len=(6, 12),
                       new_tokens=(4, 4), priority=2,
@@ -218,8 +242,18 @@ def make_named_trace(name: str, *, vocab_size: int, seed: int = 0) -> Trace:
                        window=(0.5, 1.2)))
         return make_trace(tenants, 1.6, vocab_size=vocab_size, seed=seed,
                           name="mixshift")
+    if name == "sharedprefix":
+        tenants = (
+            TenantSpec("assist", rate_rps=4.0, prompt_len=(4, 12),
+                       new_tokens=(4, 6), priority=1, prefix_len=48),
+            TenantSpec("rag", rate_rps=3.0, prompt_len=(6, 14),
+                       new_tokens=(4, 6), priority=0, prefix_len=48),
+            TenantSpec("adhoc", rate_rps=1.0, prompt_len=(10, 20),
+                       new_tokens=(4, 6), priority=0))
+        return make_trace(tenants, 2.0, vocab_size=vocab_size, seed=seed,
+                          name="sharedprefix")
     raise ValueError(f"unknown named trace {name!r} (expected 'overload', "
-                     "'steady', 'diurnal' or 'mixshift')")
+                     "'steady', 'diurnal', 'mixshift' or 'sharedprefix')")
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,380 @@
+"""Prefix caching: PrefixIndex chain-hash/refcount/LRU invariants,
+copy-on-write warm admissions bitwise-identical to cold prefill (both
+schedulers, engine and cluster), suffix-only admission charging, the
+shared-block free guards, prefix-affinity routing, the analytical
+mirror's exact hit/miss/eviction replay, and the hit-rate TCO sweep."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.core import costmodel as CM
+from repro.core import profiles as HW
+from repro.core.simulator import LLMSimulator, SimConfig
+from repro.models import model as MD
+from repro.serving import (ClusterConfig, ClusterEngine, EngineConfig,
+                           ServingEngine)
+from repro.serving.kv_cache import PrefixIndex
+from repro.serving.workload import make_named_trace, replay
+
+KEY = jax.random.PRNGKey(3)
+BS = 16          # kv_block_size used throughout
+PRE = 3 * BS     # shared preamble: exactly three full blocks
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = registry.get_smoke_config("qwen1.5-0.5b").replace(dtype="float32")
+    params = MD.init_params(KEY, cfg)
+    return cfg, params
+
+
+def _shared_prompts(cfg, n=4, tails=(4, 7, 9, 12, 5, 8), seed=0):
+    """n prompts sharing one PRE-token preamble, distinct tails."""
+    rng = np.random.default_rng(seed)
+    pre = rng.integers(0, cfg.vocab_size, size=PRE)
+    return [np.concatenate(
+        [pre, rng.integers(0, cfg.vocab_size, size=tails[i % len(tails)])])
+        for i in range(n)]
+
+
+def _run(params, cfg, prompts, *, prefix_cache, **kw):
+    ekw = dict(scheduler="blocking", kv_cache="paged", kv_block_size=BS,
+               prefix_cache=prefix_cache, eos_token=-1, max_batch=2,
+               max_seq_len=96, max_new_tokens=5)
+    ekw.update(kw)
+    eng = ServingEngine(params, cfg, EngineConfig(**ekw))
+    for p in prompts:
+        eng.submit(p)
+    eng.run()
+    return eng
+
+
+def _outputs(eng):
+    return {r.rid: r.output for r in eng.finished}
+
+
+# ---------------------------------------------------------------------------
+# PrefixIndex unit invariants
+# ---------------------------------------------------------------------------
+
+def test_index_match_caps_below_prompt_and_follows_chain():
+    idx = PrefixIndex(4)
+    p = np.arange(12)
+    keys = idx.keys_for(p, 3)
+    assert len(keys) == 3 and len(set(keys)) == 3
+    for k in range(2):
+        assert idx.register(keys[k], 100 + k)
+    # limit is (n_prompt - 1) // bs: one suffix token must stay hot
+    assert idx.match(p, 12) == [100, 101]
+    assert idx.match(p, 9) == [100, 101]
+    assert idx.match(p, 8) == [100]
+    assert idx.match(p, 4) == []
+    # chained hashes: divergence anywhere kills everything after it
+    q = p.copy()
+    q[1] = 999
+    assert idx.match(q, 12) == []
+    q2 = p.copy()
+    q2[5] = 999
+    assert idx.match(q2, 12) == [100]
+
+
+def test_index_refcounts_lru_order_and_underflow():
+    idx = PrefixIndex(4)
+    keys = idx.keys_for(np.arange(16), 4)
+    for k in range(4):
+        assert idx.register(keys[k], k)
+    assert not idx.register(keys[0], 99)   # canonical block wins
+    assert idx.resident_blocks == 4 and idx.evictable() == 0
+    for k in range(4):
+        idx.release(k)                     # all join the LRU queue
+    assert idx.evictable() == 4
+    idx.acquire([1])                       # revived out of the queue
+    assert idx.evictable() == 3
+    assert idx.evictable(excluding=[0, 1]) == 2
+    idx.release(1)                         # re-queued at the tail
+    assert [idx.evict_lru() for _ in range(4)] == [0, 2, 3, 1]
+    assert idx.evict_lru() is None
+    assert idx.evictions == 4 and idx.resident_blocks == 0
+    with pytest.raises(RuntimeError, match="underflow"):
+        idx.release(7)
+
+
+# ---------------------------------------------------------------------------
+# warm == cold, bitwise (the whole point of COW sharing)
+# ---------------------------------------------------------------------------
+
+def test_warm_prefix_bitwise_identical_to_cold(setup):
+    cfg, params = setup
+    prompts = _shared_prompts(cfg)
+    cold = _run(params, cfg, prompts, prefix_cache=False)
+    warm = _run(params, cfg, prompts, prefix_cache=True)
+    assert _outputs(warm) == _outputs(cold)
+    s, sc = warm.summary(), cold.summary()
+    assert s["prefix_hits"] >= 1 and s["prefix_lookups"] == len(prompts)
+    assert 0.0 < s["prefix_hit_rate"] < 1.0
+    assert s["resident_shared_kv_bytes"] > 0
+    assert sc["prefix_hits"] == 0 and sc["prefix_hit_rate"] == 0.0
+    # drained engine: every alias released, shared blocks stay resident
+    # as the cache and are the only allocation left
+    kv = warm.kv
+    assert all(v == 0 for v in kv.prefix._refs.values())
+    assert kv.allocator.allocated_blocks == kv.prefix.resident_blocks
+    assert cold.kv.allocator.allocated_blocks == 0
+
+
+def test_warm_prefix_bitwise_under_chunked_scheduler(setup):
+    cfg, params = setup
+    prompts = _shared_prompts(cfg, seed=2)
+    kw = dict(scheduler="chunked", chunk_tokens=16, prefill_bucket_min=16)
+    cold = _run(params, cfg, prompts, prefix_cache=False, **kw)
+    warm = _run(params, cfg, prompts, prefix_cache=True, **kw)
+    assert _outputs(warm) == _outputs(cold)
+    s = warm.summary()
+    assert s["prefix_hits"] >= 1
+    # warm admissions prefill only the uncached suffix -> fewer chunks
+    assert s["prefill_chunks"] < cold.summary()["prefill_chunks"]
+
+
+def test_costmodel_audit_clean_on_suffix_prefill(setup):
+    """Suffix-only prefill dispatches price through the same traced
+    chunk closure as everything else — no untraced dispatch kinds."""
+    cfg, params = setup
+    warm = _run(params, cfg, _shared_prompts(cfg), prefix_cache=True)
+    rep = CM.audit_engine(warm)
+    CM.assert_no_drift(rep)
+    assert warm.summary()["prefix_hits"] >= 1
+    assert rep["kinds"]["chunk_paged"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# suffix-only reservation + shared-block free guards
+# ---------------------------------------------------------------------------
+
+def test_cached_prefix_charges_only_uncached_suffix(setup):
+    cfg, params = setup
+    p0, p1, p2 = _shared_prompts(cfg, n=3, tails=(4, 4, 4), seed=4)
+    eng = _run(params, cfg, [p0], prefix_cache=True, kv_blocks=5,
+               max_new_tokens=4)
+    kv = eng.kv
+    assert kv.prefix.resident_blocks == PRE // BS  # 3 registered, 0-ref
+    # live warm slot: aliases all 3 shared blocks + 1 private tail
+    eng.submit(p1)
+    eng.scheduler.admit(eng)
+    assert all(kv.prefix.refcount(b) == 1 for b in kv.prefix._refs)
+    assert kv.allocator.free_blocks == 1
+    # promptless gate (conservative resume path): 4 blocks needed, one
+    # free, nothing evictable -> refuse
+    assert not kv.can_admit(len(p2), 4)
+    # with the prompt the 3 cached blocks charge nothing -> admit
+    assert kv.can_admit(len(p2), 4, prompt=p2)
+
+    # satellite guard: raw-freeing a shared block is alias corruption
+    shared = next(iter(kv.prefix._refs))
+    with pytest.raises(RuntimeError, match="refcount"):
+        kv._free_block(shared)
+    eng.run()
+    # refcount dropped to zero at retirement but the block is still
+    # registered — only the LRU eviction path may recycle it
+    assert kv.prefix.refcount(shared) == 0
+    with pytest.raises(RuntimeError, match="registered"):
+        kv._free_block(shared)
+
+
+# ---------------------------------------------------------------------------
+# cluster: prefix-affinity routing, bitwise outputs
+# ---------------------------------------------------------------------------
+
+def test_cluster_prefix_affinity_bitwise(setup):
+    cfg, params = setup
+    prompts = _shared_prompts(cfg, n=6, seed=5)
+    want = _outputs(_run(params, cfg, prompts, prefix_cache=False))
+    clu = ClusterEngine(
+        params, cfg,
+        EngineConfig(kv_cache="paged", kv_block_size=BS, prefix_cache=True,
+                     eos_token=-1, max_batch=2, max_seq_len=96,
+                     max_new_tokens=5),
+        ClusterConfig(n_prefill=2, n_decode=2))
+    for p in prompts:
+        clu.submit(p)
+    clu.run()
+    assert _outputs(clu) == want
+    s = clu.summary()
+    assert s["prefix_routed"] >= 1 and s["prefix_hits"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# analytical mirror: exact hit/miss/eviction replay
+# ---------------------------------------------------------------------------
+
+QUANTUM = 0.01
+_MIRROR_KEYS = ("prefix_hits", "prefix_lookups", "prefix_hit_tokens",
+                "prefix_evictions")
+
+
+@pytest.mark.parametrize("sched", ["blocking", "slo"])
+def test_simulator_mirrors_engine_prefix_schedule(setup, sched):
+    """Same PrefixIndex, same arithmetic: the trace mirror reproduces
+    the engine's admission order, preemptions, per-step schedule, and
+    the full hit/eviction ledger under pool pressure."""
+    cfg, params = setup
+    tr = make_named_trace("sharedprefix", vocab_size=cfg.vocab_size, seed=1)
+    eng = ServingEngine(params, cfg, EngineConfig(
+        scheduler=sched, kv_cache="paged", kv_block_size=BS, kv_blocks=6,
+        prefix_cache=True, eos_token=-1, max_batch=4, max_seq_len=96,
+        max_new_tokens=16))
+    rep = replay(eng, tr, step_quantum_s=QUANTUM)
+    sim = LLMSimulator(cfg, HW.PIM_AI_SERVER, SimConfig())
+    r = sim.serve(trace=tr, scheduler=sched, kv_cache="paged",
+                  kv_block_size=BS, kv_blocks=6, prefix_cache=True,
+                  max_batch=4, max_seq_len=96, step_quantum_s=QUANTUM)
+    s = rep["summary"]
+    assert r["admission_order"] == rep["admission_order"]
+    assert r["preemption_log"] == rep["preemption_log"]
+    assert r["steps"] == rep["steps"]
+    assert r["decode_steps"] == rep["decode_steps"]
+    for k in _MIRROR_KEYS:
+        assert r[k] == s[k], k
+    assert ({rid: q.ttft_s for rid, q in r["requests"].items()}
+            == {rid: q.ttft_s for rid, q in rep["requests"].items()})
+    assert s["prefix_hits"] >= 1 and s["prefix_evictions"] >= 1
+
+
+def test_simulator_mirrors_cluster_prefix_routing(setup):
+    cfg, params = setup
+    tr = make_named_trace("sharedprefix", vocab_size=cfg.vocab_size, seed=0)
+    clu = ClusterEngine(params, cfg, EngineConfig(
+        scheduler="blocking", kv_cache="paged", kv_block_size=BS,
+        kv_blocks=12, prefix_cache=True, eos_token=-1, max_batch=4,
+        max_seq_len=96, max_new_tokens=16),
+        ClusterConfig(n_prefill=2, n_decode=2))
+    rep = replay(clu, tr, step_quantum_s=QUANTUM)
+    sim = LLMSimulator(cfg, HW.PIM_AI_SERVER, SimConfig())
+    r = sim.serve(trace=tr, cluster=(2, 2), kv_cache="paged",
+                  kv_block_size=BS, kv_blocks=12, prefix_cache=True,
+                  max_batch=4, max_seq_len=96, step_quantum_s=QUANTUM)
+    s = rep["summary"]
+    assert r["steps"] == rep["steps"]
+    assert r["handoffs"] == clu.handoffs
+    assert r["prefix_routed"] == s["prefix_routed"]
+    for k in _MIRROR_KEYS:
+        assert r[k] == s[k], k
+    assert ({rid: q.ttft_s for rid, q in r["requests"].items()}
+            == {rid: q.ttft_s for rid, q in rep["requests"].items()})
+    assert s["prefix_routed"] >= 1 and s["prefix_hits"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# workload + scenario plumbing
+# ---------------------------------------------------------------------------
+
+def test_sharedprefix_trace_shares_within_tenant_only():
+    tr = make_named_trace("sharedprefix", vocab_size=1000, seed=1)
+    tr2 = make_named_trace("sharedprefix", vocab_size=1000, seed=1)
+    for a, b in zip(tr.requests, tr2.requests):
+        np.testing.assert_array_equal(a.prompt, b.prompt)
+    by_tenant: dict = {}
+    for r in tr.requests:
+        by_tenant.setdefault(r.tenant, []).append(np.asarray(r.prompt))
+    heads = {}
+    for t in ("assist", "rag"):
+        ps = by_tenant[t]
+        assert len(ps) >= 2
+        assert len({p[:48].tobytes() for p in ps}) == 1
+        heads[t] = ps[0][:48].tobytes()
+    assert heads["assist"] != heads["rag"]
+    # adhoc tenant has no preamble: tails actually differ
+    if len(by_tenant.get("adhoc", [])) >= 2:
+        a, b = by_tenant["adhoc"][:2]
+        assert a[: min(len(a), len(b))].tobytes() != \
+            b[: min(len(a), len(b))].tobytes()
+
+
+def test_prefix_sweep_hit_rate_lowers_ttft_and_tco():
+    from repro.core.scenarios import run_cloud_trace
+    out = run_cloud_trace(prefix_sweep=(0, 48))
+    rows = out["prefix_sweep"]
+    assert [r["prefix_len"] for r in rows] == [0, 48]
+    assert rows[0]["prefix_hit_rate"] == 0.0
+    assert rows[1]["prefix_hit_rate"] > 0.3
+    assert rows[1]["ttft_p99_s"] < rows[0]["ttft_p99_s"]
+    assert rows[1]["tco_per_qps"] < rows[0]["tco_per_qps"]
+
+
+# ---------------------------------------------------------------------------
+# property: interleaved preemption never leaks or corrupts shared blocks
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def prop_ref(setup):
+    cfg, params = setup
+    prompts = _shared_prompts(cfg, n=5, seed=7)
+    return prompts, _outputs(_run(params, cfg, prompts, prefix_cache=False))
+
+
+def _drive_with_preemptions(params, cfg, prompts, kv_cache, plan):
+    kw = {"kv_blocks": 8} if kv_cache == "paged" else {}
+    eng = ServingEngine(params, cfg, EngineConfig(
+        kv_cache=kv_cache, kv_block_size=BS, prefix_cache=True,
+        eos_token=-1, scheduler="blocking", max_batch=2, max_seq_len=96,
+        max_new_tokens=5, **kw))
+    for p in prompts:
+        eng.submit(p)
+    it = 0
+    while eng.has_work():
+        assert it < 500, "interleaving failed to drain"
+        live = [i for i, r in enumerate(eng.slot_req) if r is not None]
+        if live and it < len(plan) and plan[it] is not None:
+            eng.preempt_slot(live[plan[it] % len(live)])
+        eng.step()
+        it += 1
+    return eng
+
+
+def _check_interleaving(params, cfg, prompts, want, plan):
+    """Invariant under any admit/preempt/resume/retire interleaving:
+    outputs stay bitwise cold-prefill, every shared-block refcount
+    returns to zero, and the pool balances exactly (no leak, no
+    premature free) — on the paged backend and the contiguous fallback
+    where prefix_cache is a no-op."""
+    eng = _drive_with_preemptions(params, cfg, prompts, "paged", plan)
+    assert _outputs(eng) == want
+    kv = eng.kv
+    assert all(v == 0 for v in kv.prefix._refs.values())
+    assert kv.allocator.allocated_blocks == kv.prefix.resident_blocks
+    assert (kv.allocator.free_blocks + kv.prefix.resident_blocks
+            == kv.allocator.num_blocks)
+
+    ctg = _drive_with_preemptions(params, cfg, prompts, "contiguous", plan)
+    assert _outputs(ctg) == want
+    assert ctg.summary()["prefix_hit_rate"] == 0.0
+
+
+@pytest.mark.parametrize("plan", [
+    (),                                    # no preemption at all
+    (0,) * 24,                             # hammer the first live slot
+    (None, 1, None, 0, 3, None, 2) * 3,    # scattered mixed victims
+    (None, None, None, 1, 1, 1, 1, 1),     # burst mid-run
+])
+def test_preemption_interleavings_never_leak(setup, prop_ref, plan):
+    cfg, params = setup
+    prompts, want = prop_ref
+    _check_interleaving(params, cfg, prompts, want, plan)
+
+
+def test_random_preemption_interleavings_never_leak(setup, prop_ref):
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    cfg, params = setup
+    prompts, want = prop_ref
+
+    @settings(max_examples=10, deadline=None)
+    @given(plan=st.lists(st.one_of(st.none(), st.integers(0, 3)),
+                         max_size=24))
+    def check(plan):
+        _check_interleaving(params, cfg, prompts, want, tuple(plan))
+
+    check()
