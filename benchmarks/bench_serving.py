@@ -117,11 +117,12 @@ def _workload(kind: str, rng):
 
 
 def _drive(params, cfg, lens, rng, kv_cache, scheduler="blocking",
-           max_seq=MAX_SEQ, chunk=CHUNK, gamma=GAMMA, draft_layers=0):
+           max_seq=MAX_SEQ, chunk=CHUNK, gamma=GAMMA, draft_layers=0,
+           mesh=None, out_engines=None):
     eng = ServingEngine(params, cfg, EngineConfig(
         max_batch=MAX_BATCH, max_seq_len=max_seq, max_new_tokens=N_NEW,
         kv_cache=kv_cache, scheduler=scheduler, chunk_tokens=chunk,
-        spec_gamma=gamma, spec_draft_layers=draft_layers))
+        spec_gamma=gamma, spec_draft_layers=draft_layers, mesh=mesh))
     prompts = [rng.integers(0, cfg.vocab_size, size=int(n)) for n in lens]
     # warm every prefill bucket/chunk shape + the decode dispatch out of
     # the timing
@@ -139,6 +140,8 @@ def _drive(params, cfg, lens, rng, kv_cache, scheduler="blocking",
     for p in prompts:
         eng.submit(p)
     done = eng.run()
+    if out_engines is not None:  # dispatch-audit hook for gate sections
+        out_engines[kv_cache] = eng
     outputs = {r.rid: r.output for r in done}
     wall = time.time() - t0
     s = eng.summary()
@@ -164,6 +167,10 @@ def _drive(params, cfg, lens, rng, kv_cache, scheduler="blocking",
             [r.ttft_s for r in short], 99)) if short else 0.0,
         "resident_kv_bytes": s["resident_kv_bytes"],
         "contiguous_kv_bytes": s["contiguous_kv_bytes"],
+        "mesh": s["mesh"],
+        "mesh_devices": s["mesh_devices"],
+        "kv_partitions": s["kv_partitions"],
+        "resident_kv_bytes_per_device": s["resident_kv_bytes_per_device"],
         "draft_dispatches": s["draft_dispatches"],
         "verify_dispatches": s["verify_dispatches"],
         "accepted_tokens_per_step": s["accepted_tokens_per_step"],
@@ -324,6 +331,114 @@ def _run_cluster_section(params, cfg, results, mismatched):
         [[k, r3(v["tco_per_qps"])] for k, v in het["tco"].items()]
         + [["engines/xpu", r3(het["engines_per_xpu"])],
            ["KV moved/batch", f"{het['kv_transfer']['bytes']/2**30:.1f}G"]])
+
+
+def _run_mesh_section(params, cfg, results, mismatched, mesh):
+    """The --mesh benchmark: one ServingEngine on a (data, model) device
+    mesh, hard-gating
+
+    - bitwise-identical greedy outputs vs. the single-device engine on
+      both KV backends (tensor/sequence parallelism must not change a
+      single token of the greedy stream),
+    - the one-jitted-dispatch-per-step invariant (sharding happens
+      *inside* the dispatch, never as extra launches),
+    - a clean dispatch audit (the traced closures stay meshless, so the
+      static pricer sees the exact same jaxprs),
+    - actual KV partitioning: resident KV bytes per device strictly
+      below the total,
+
+    then mirrors the same shape analytically (``LLMSimulator.serve``
+    with ``mesh=``) and lands the ``run_cloud_mesh`` scaling sweep in
+    the JSON artifact."""
+    import jax as _jax
+
+    from repro.core import costmodel as CM
+    from repro.core.scenarios import run_cloud_mesh
+
+    d, m = mesh
+    results["mesh"] = {"mesh": [d, m],
+                       "devices": [str(x) for x in _jax.devices()],
+                       "engine": [], "analytical": []}
+    rows = []
+    lens = _workload("ragged", np.random.default_rng(8))
+    for kv in ("contiguous", "paged"):
+        base = _drive(params, cfg, lens, np.random.default_rng(9), kv)
+        engines = {}
+        mm = _drive(params, cfg, lens, np.random.default_rng(9), kv,
+                    mesh=mesh, out_engines=engines)
+        for label, r in (("single", base), (f"{d}x{m}", mm)):
+            rows.append([kv, label, r["requests"], r3(r["tok_s"]),
+                         r3(r["disp_per_step"]), r["kv_partitions"],
+                         f"{r['resident_kv_bytes'] / 1024:.0f}K",
+                         f"{r['resident_kv_bytes_per_device'] / 1024:.0f}K"])
+        same = mm["outputs"] == base["outputs"]
+        results["mesh"]["engine"].append(
+            {"kv_cache": kv, "matches_single_device": same,
+             **{k: v for k, v in mm.items() if k != "outputs"}})
+        if not same:
+            mismatched.append(
+                f"mesh/{kv}: greedy outputs diverged from the "
+                "single-device engine")
+        if mm["disp_per_step"] != 1.0:
+            mismatched.append(
+                f"mesh/{kv}: {mm['disp_per_step']:.2f} dispatches/step "
+                "— sharding must stay inside the single dispatch")
+        if mm["resident_kv_bytes_per_device"] >= mm["resident_kv_bytes"]:
+            mismatched.append(
+                f"mesh/{kv}: per-device resident KV not below total — "
+                "the cache is not actually partitioned")
+        try:
+            audit = CM.audit_engine(engines[kv])
+            CM.assert_no_drift(audit)
+        except Exception as e:  # noqa: BLE001 — audit drift is the gate
+            mismatched.append(f"mesh/{kv}: dispatch audit failed: {e}")
+    print_table(
+        f"mesh-sharded engine (data={d} x model={m} over "
+        f"{len(_jax.devices())} devices)",
+        ["kv_cache", "run", "reqs", "tok/s", "disp/step", "kv parts",
+         "resident KV", "KV/device"],
+        rows)
+
+    # analytical mirror on the paper's hardware: same (d, m) split
+    full = registry.get_config(MODEL)
+    sim_rows = []
+    lens4 = _workload("ragged", np.random.default_rng(8))[:MAX_BATCH]
+    for kv in ("contiguous", "paged"):
+        for hw in (HW.PIM_AI_CHIP, HW.DGX_H100):
+            sim = LLMSimulator(full, hw, SimConfig())
+            r = sim.serve(lens4, N_NEW, kv_cache=kv, max_seq_len=MAX_SEQ,
+                          mesh=mesh)
+            sim_rows.append(
+                [kv, hw.name, r3(r["tokens_per_s"]),
+                 r3(r["energy_per_token_j"] * 1e3), r["kv_partitions"],
+                 f"{r['resident_kv_bytes_per_device'] / 2**20:.0f}M"])
+            results["mesh"]["analytical"].append(
+                {"kv_cache": kv, "profile": hw.name,
+                 "tokens_per_s": r["tokens_per_s"],
+                 "energy_per_token_j": r["energy_per_token_j"],
+                 "ttft_s": r["ttft_s"],
+                 "kv_partitions": r["kv_partitions"],
+                 "resident_kv_bytes_per_device":
+                     r["resident_kv_bytes_per_device"]})
+    print_table(
+        f"analytical mesh serve (Table-1 profiles, data={d} x model={m})",
+        ["kv_cache", "profile", "tok/s", "mJ/token", "kv parts",
+         "KV/device"],
+        sim_rows)
+
+    # mesh-shape scaling sweep: the quantitative few-engines-many-DIMMs
+    # argument (model axis ~linear per device, data axis pays weight
+    # replication)
+    sweep = run_cloud_mesh("llama2-70b", "gqa", n_out=16, batch=4)
+    results["mesh"]["scaling"] = sweep
+    print_table(
+        "mesh scaling sweep (llama2-70b/gqa, PIM-AI chip)",
+        ["mesh", "tok/s", "tok/s/device", "J/token", "KV/device"],
+        [[k, r3(v["tokens_per_s"]),
+          r3(v["tokens_per_s"] / v["devices"]),
+          r3(v["energy_per_token_j"]),
+          f"{v['resident_kv_bytes_per_device'] / 2**30:.1f}G"]
+         for k, v in sweep["meshes"].items()])
 
 
 def _run_trace_section(params, cfg, results, mismatched, trace_name):
@@ -634,7 +749,7 @@ def _run_prefix_section(params, cfg, results, mismatched):
 
 def run(json_path: str | None = None, scheduler: str = "blocking",
         cluster: bool = False, trace: str | None = None,
-        prefix: bool = False):
+        prefix: bool = False, mesh: tuple | None = None):
     cfg = registry.get_smoke_config(MODEL).replace(dtype="float32")
     params = MD.init_params(jax.random.PRNGKey(0), cfg)
 
@@ -645,6 +760,18 @@ def run(json_path: str | None = None, scheduler: str = "blocking",
                "speculative": []}
     rows = []
     mismatched = []
+    if mesh is not None:
+        # the --mesh flavor is its own CI step: one engine on a
+        # (data, model) device mesh with bitwise/dispatch/audit/
+        # partition gates plus the analytical mirror and scaling sweep
+        _run_mesh_section(params, cfg, results, mismatched, mesh)
+        if json_path:
+            with open(json_path, "w") as f:
+                json.dump(results, f, indent=2, default=float)
+            print(f"\n[wrote {json_path}]")
+        if mismatched:
+            raise SystemExit(f"serving invariants violated: {mismatched}")
+        return results
     if prefix:
         # the --prefix flavor is its own CI step: warm-vs-cold replay of
         # the shared-preamble trace with bitwise/TTFT/audit/mirror/
@@ -893,6 +1020,17 @@ if __name__ == "__main__":
                          "with bitwise-output, p99-TTFT, dispatch-audit, "
                          "mirror-exactness and affinity-routing gates, "
                          "plus the hit-rate TCO sweep")
+    ap.add_argument("--mesh", default=None, metavar="D,M",
+                    help="run the mesh-sharded engine benchmark instead: "
+                         "one engine on a (data, model) device mesh "
+                         "(e.g. --mesh 2,4 on an 8-device world) with "
+                         "bitwise-output, single-dispatch, audit and "
+                         "KV-partition gates, plus the analytical "
+                         "mirror and the run_cloud_mesh scaling sweep")
     args = ap.parse_args()
+    mesh_arg = None
+    if args.mesh:
+        d, m = (int(x) for x in args.mesh.split(","))
+        mesh_arg = (d, m)
     run(args.json, scheduler=args.scheduler, cluster=args.cluster,
-        trace=args.trace, prefix=args.prefix)
+        trace=args.trace, prefix=args.prefix, mesh=mesh_arg)

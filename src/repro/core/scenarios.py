@@ -98,6 +98,57 @@ def run_cloud(model: str = "llama2-70b", attn: str = "gqa",
     }
 
 
+def run_cloud_mesh(model: str = "llama2-70b", attn: str = "gqa",
+                   n_out: int = N_OUT_DEFAULT,
+                   meshes: tuple = ((1, 1), (1, 2), (1, 4), (2, 4)),
+                   batch: int = 8) -> dict:
+    """Mesh-shape sweep for one serving engine: how the (data, model)
+    split of ``EngineConfig.mesh`` trades throughput against KV
+    residency per device on PIM-AI chips.
+
+    The model axis aggregates chip bandwidth behind one engine (the
+    DIMM-stacking argument of §3.4) and pays the per-layer
+    partial-result exchange; the data axis replicates weights per KV
+    shard — so decode, weight-stream-bound, gains little from ``data``
+    but scales with ``model`` until the interconnect term bites. That
+    asymmetry is the quantitative reason the cloud layout stacks DIMMs
+    under few engines instead of replicating engines per device."""
+    cfg = registry.get_config(model)
+    if attn == "mha":
+        cfg = mha_variant(cfg)
+    sim = LLMSimulator(
+        cfg, HW.PIM_AI_CHIP,
+        SimConfig(orchestration_s=CLOUD_ORCHESTRATION_S))
+    # ragged workload around the paper's 1000-in standard
+    lens = [(N_IN_DEFAULT * (i % 4 + 1)) // 4 for i in range(batch)]
+    rows = {}
+    for mesh in meshes:
+        r = sim.serve(lens, n_out, kv_cache="paged",
+                      mesh=(None if mesh == (1, 1) else mesh))
+        rows[mesh] = {
+            "tokens_per_s": r["tokens_per_s"],
+            "energy_per_token_j": r["energy_per_token_j"],
+            "ttft_s": r["ttft_s"],
+            "devices": int(mesh[0]) * int(mesh[1]),
+            "kv_partitions": r.get("kv_partitions", 1),
+            "resident_kv_bytes": r["resident_kv_bytes"],
+            "resident_kv_bytes_per_device": r.get(
+                "resident_kv_bytes_per_device", r["resident_kv_bytes"]),
+        }
+    base = rows[meshes[0]]
+    return {
+        "model": model, "attn": attn, "n_out": n_out, "batch": batch,
+        "meshes": {str(k): v for k, v in rows.items()},
+        "ratios": {str(k): {
+            "tokens_per_s": v["tokens_per_s"] / base["tokens_per_s"],
+            "tokens_per_s_per_device": (v["tokens_per_s"] / v["devices"])
+            / base["tokens_per_s"],
+            "energy_per_token": (v["energy_per_token_j"]
+                                 / base["energy_per_token_j"]),
+        } for k, v in rows.items()},
+    }
+
+
 def run_cloud_disaggregated(model: str = "llama2-70b", attn: str = "gqa",
                             n_in: int = N_IN_DEFAULT,
                             n_out: int = N_OUT_DEFAULT) -> dict:

@@ -976,7 +976,8 @@ class LLMSimulator:
               max_batch: int = 8, kv_blocks: int = 0,
               cluster_opts: dict | None = None,
               prefill_sim: "LLMSimulator | None" = None,
-              prefix_cache: bool = False) -> dict:
+              prefix_cache: bool = False,
+              mesh: tuple | None = None) -> dict:
         """Continuous-batching cloud scenario (matches ``ServingEngine``):
         per-request prefill + one fully-ragged decode dispatch per step
         over the whole batch, each row's KV span growing from its own
@@ -1040,6 +1041,27 @@ class LLMSimulator:
         avoided prefix prefill + KV ingest is the saving)."""
         from repro.serving.kv_cache import (contiguous_kv_bytes,
                                             paged_resident_kv_bytes)
+        if mesh is not None:
+            d, m = int(mesh[0]), int(mesh[1])
+            if d < 1 or m < 1:
+                raise ValueError(
+                    f"mesh={mesh!r} must be a (data, model) pair of "
+                    "positive axis sizes (mirrors EngineConfig.mesh)")
+            if trace is not None or cluster is not None:
+                raise ValueError(
+                    "mesh= mirrors one mesh-sharded ServingEngine; the "
+                    "cluster/trace mirrors compose at the worker level "
+                    "(each worker is its own sub-mesh) — price each "
+                    "worker's serve(mesh=...) separately instead")
+            if scheduler != "blocking":
+                raise ValueError(
+                    f"mesh serving mirrors the blocking engine, got "
+                    f"scheduler={scheduler!r}")
+            if n_ins is None:
+                raise TypeError("serve(mesh=...) needs an n_ins workload")
+            return self._serve_mesh(
+                n_ins, n_out, d=d, m=m, kv_cache=kv_cache,
+                kv_block_size=kv_block_size, max_seq_len=max_seq_len)
         if trace is not None:
             if scheduler not in ("blocking", "slo"):
                 raise ValueError(
@@ -1145,6 +1167,96 @@ class LLMSimulator:
                        spec_gamma=gamma, draft_dispatches=0,
                        draft_kv_bytes=0)
         return out
+
+    def _serve_mesh(self, n_ins, n_out: int, *, d: int, m: int,
+                    kv_cache: str, kv_block_size: int,
+                    max_seq_len: int | None) -> dict:
+        """Analytical mirror of one mesh-sharded ``ServingEngine``
+        (``EngineConfig.mesh=(d, m)``), matching the engine's layout:
+
+        - **model axis** (``m``): one engine spans ``m`` devices in
+          tensor parallel — aggregate bandwidth/compute
+          (:meth:`HardwareProfile.scaled`, the same convention the
+          ``pim_engine`` tp_degree=128 profile uses) plus the per-layer
+          partial-result exchange ``_tp_collective`` charges through
+          ``tp_degree`` (the gather-rows all-gathers of the bitwise TP
+          layout move the same per-token d_model bytes).
+        - **data axis** (``d``): the slot batch splits round-robin
+          across ``d`` KV shards that decode concurrently inside the
+          one jitted dispatch — charged as ``d`` parallel serves merged
+          with seconds = max, energy/bytes/ops = sum.
+
+        Reports the engine's mesh accounting keys: ``mesh``,
+        ``kv_partitions`` (heads-over-model and, for contiguous,
+        batch-over-data — mirroring ``cache_shardings`` /
+        ``pool_shardings`` in the divisible case), and
+        ``resident_kv_bytes_per_device``."""
+        from dataclasses import replace as dc_replace
+
+        from repro.serving.kv_cache import contiguous_kv_bytes
+        cap = max_seq_len or (max(int(n) for n in n_ins) + n_out)
+        sub = self
+        if m > 1:
+            sub = LLMSimulator(
+                self.cfg, self.hw.scaled(m, name=f"{self.hw.name}@tp{m}"),
+                dc_replace(self.sim, tp_degree=self.sim.tp_degree * m))
+            # share the dispatch-trace memos: the jaxprs are identical
+            # (sharding never changes the traced graph), only the
+            # hardware they are priced on differs
+            sub.pricer = self.pricer
+            sub._decode_linear = self.pricer.decode_linear
+            sub._prefill_cache = self.pricer.prefill_cache
+            sub._chunk_cache = self.pricer.chunk_cache
+            sub._verify_linear = self.pricer.verify_linear
+        shards = [list(n_ins[i::d]) for i in range(d)]
+        shards = [s for s in shards if s]
+        runs = [sub.serve(s, n_out, kv_cache=kv_cache,
+                          kv_block_size=kv_block_size, max_seq_len=cap)
+                for s in shards]
+
+        def merged(key):
+            out = PhaseResult()
+            for f in ("seconds", "compute_s", "memory_s", "host_s"):
+                setattr(out, f, max(getattr(r[key], f) for r in runs))
+            for f in ("energy_j", "ops", "mem_bytes", "host_bytes"):
+                setattr(out, f, sum(getattr(r[key], f) for r in runs))
+            return out
+
+        enc, dec = merged("encode"), merged("decode")
+        batch = len(n_ins)
+        ttfts = [0.0] * batch
+        for i, run in enumerate(runs):
+            for j, t in enumerate(run["ttft_per_req_s"]):
+                ttfts[i + j * len(shards)] = t
+        resident = sum(r["resident_kv_bytes"] for r in runs)
+        heads = getattr(self.cfg, "n_kv_heads", 0) or self.cfg.n_heads
+        if kv_cache == "paged":
+            # pools shard heads-over-model only; replicate otherwise
+            parts = m if heads % m == 0 else 1
+        else:
+            # batch over data and heads (or, failing that, the
+            # sequence) over model
+            parts = len(shards) * m
+        return {
+            "encode": enc,
+            "decode": dec,
+            "ttft_s": sum(ttfts) / batch,
+            "ttft_per_req_s": ttfts,
+            "tokens_per_s": batch * n_out / dec.seconds,
+            "energy_per_token_j": dec.energy_j / (batch * n_out),
+            "qps": batch / (enc.seconds + dec.seconds),
+            "decode_dispatches": n_out,   # still one per step: the mesh
+            "kv_cache": kv_cache,         # shards inside the dispatch
+            "scheduler": "blocking",
+            "prefill_chunks": batch,
+            "resident_kv_bytes": resident,
+            "contiguous_kv_bytes": contiguous_kv_bytes(
+                self.cfg, batch, cap),
+            "mesh": (d, m),
+            "mesh_devices": d * m,
+            "kv_partitions": parts,
+            "resident_kv_bytes_per_device": -(-resident // parts),
+        }
 
     def _serve_chunked(self, n_ins, n_out: int, *, kv_cache: str,
                        kv_block_size: int, cap: int,

@@ -71,6 +71,12 @@ CHEAP_PRIMS = {
     # access — on-chip, never main-memory traffic (the kernel's HBM
     # traffic is derived from its BlockSpecs in _pallas_record)
     "program_id", "num_programs", "get", "swap", "addupdate",
+    # GSPMD layout metadata, not compute: a hint jaxpr carries these
+    # when the closure was first traced under hints.use_mesh (jax
+    # caches inner traces by (fn, avals), not by the hint contextvar).
+    # Local cost is zero; the implied collective traffic is priced by
+    # the simulator's interconnect term, never from the jaxpr.
+    "sharding_constraint",
 }
 REDUCE_PRIMS = {"reduce_sum", "reduce_max", "reduce_min", "reduce_prod",
                 "reduce_and", "reduce_or", "argmax", "argmin",

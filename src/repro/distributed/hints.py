@@ -22,15 +22,27 @@ import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 _MESH = contextvars.ContextVar("repro_hint_mesh", default=None)
+_GATHER_ROWS = contextvars.ContextVar("repro_hint_gather_rows", default=False)
 
 
 @contextlib.contextmanager
-def use_mesh(mesh):
+def use_mesh(mesh, *, gather_rows: bool = False):
+    """Activate sharding hints for code traced inside the block.
+
+    ``gather_rows=True`` (serving): additionally arm :func:`row_input`,
+    which all-gathers activations ahead of row-parallel matmuls instead
+    of letting GSPMD pick partial-sum all-reduces — the bitwise-exact
+    tensor-parallel layout the serving engine's greedy-equivalence gate
+    relies on. Training leaves it off (partial sums are cheaper and
+    training has no bitwise contract).
+    """
     tok = _MESH.set(mesh)
+    tok2 = _GATHER_ROWS.set(gather_rows)
     try:
         yield mesh
     finally:
         _MESH.reset(tok)
+        _GATHER_ROWS.reset(tok2)
 
 
 def current_mesh():
@@ -70,11 +82,20 @@ def hidden(x, mode: str = "none"):
       XLA inserts all-gather before each layer's first matmul and
       reduce-scatter after the last).
     - ``seq``: sequence over the ``model`` axis (attention all-gathers).
+
+    Under ``use_mesh(..., gather_rows=True)`` (bitwise serving) the
+    batch dim is pinned *replicated* instead: XLA:CPU gemm kernels pick
+    K-accumulation order by local output-block shape, so splitting the
+    token batch across ``data`` inside a matmul that is also
+    model-split can change low bits vs the single-device graph. The KV
+    cache and attention still shard the slot batch over ``data`` (the
+    memory that matters at decode); projection/MLP token compute is
+    replicated — negligible at decode widths.
     """
     mesh = _MESH.get()
     if mesh is None:
         return x
-    b_ax = _batch_axes(mesh, x.shape[0])
+    b_ax = None if _GATHER_ROWS.get() else _batch_axes(mesh, x.shape[0])
     model = "model" if "model" in mesh.axis_names else None
     s_ax = d_ax = None
     if x.ndim >= 3 and model:
@@ -90,14 +111,38 @@ def hidden(x, mode: str = "none"):
 
 
 def logits(x):
-    """(..., V) logits: batch over FSDP, vocab over model."""
+    """(..., V) logits: batch over FSDP, vocab over model.
+
+    Bitwise serving (``gather_rows=True``) keeps the batch dim
+    replicated like :func:`hidden` does — a data-split here would
+    back-propagate batch-split compute (and its shape-dependent local
+    gemm kernels) through the tail of the decode graph."""
     mesh = _MESH.get()
     if mesh is None:
         return x
     model = "model" if "model" in mesh.axis_names else None
     if model and not _div(x.shape[-1], mesh, model):
         model = None
-    spec = P(_batch_axes(mesh, x.shape[0]), *(None,) * (x.ndim - 2), model)
+    b_ax = None if _GATHER_ROWS.get() else _batch_axes(mesh, x.shape[0])
+    spec = P(b_ax, *(None,) * (x.ndim - 2), model)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def row_input(x):
+    """Activation feeding a row-parallel matmul (``wo`` / ``w_down``):
+    gather the contraction dim over ``model`` so the matmul contracts
+    the full dim locally, in canonical order. GSPMD's default for a
+    model-sharded activation against a replicated weight is to reshard
+    the *weight* and emit partial-sum + all-reduce — numerically fine
+    but not bitwise-stable against the single-device graph (float
+    addition order differs per device count). Serving's greedy streams
+    are gated bitwise-identical across mesh shapes, so decode pays one
+    small all-gather per row matmul instead. No-op outside
+    ``use_mesh(..., gather_rows=True)``."""
+    mesh = _MESH.get()
+    if mesh is None or not _GATHER_ROWS.get():
+        return x
+    spec = P(*(None,) * x.ndim)
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
 
 

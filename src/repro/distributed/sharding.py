@@ -79,7 +79,7 @@ _ROW = {"wo", "w_down", "w_ff_down", "out_proj"}
 _EMBED = {"table", "head"}
 
 
-def _param_spec(path_names, leaf, mesh, fsdp) -> P:
+def _param_spec(path_names, leaf, mesh, fsdp, serve=False) -> P:
     shape = leaf.shape
     name = path_names[-1] if path_names else ""
     in_moe = "moe" in path_names
@@ -122,6 +122,16 @@ def _param_spec(path_names, leaf, mesh, fsdp) -> P:
 
     if name in _ROW:
         i, o = shape[-2], shape[-1]
+        if serve:
+            # Bitwise TP (serving): keep the contraction dim whole and
+            # shard OUT over ``model`` instead. Combined with the
+            # ``hints.row_input`` gather this contracts the full dim
+            # locally in canonical order, so model-sharded decode stays
+            # bitwise-identical to single-device greedy — the serving
+            # gate's contract. Training keeps Megatron row-parallel
+            # partial sums (cheaper, no bitwise requirement).
+            o_ax = MODEL if _div(o, mesh, MODEL) else None
+            return P(*lead(2), None, o_ax)
         i_ax = MODEL if _div(i, mesh, MODEL) else None
         o_ax = fsdp if _div(o, mesh, fsdp) else None
         return P(*lead(2), i_ax, o_ax)
@@ -165,7 +175,8 @@ def param_shardings(mesh: Mesh, params_shape, *, serve: bool = False,
     def one(path, leaf):
         names = [getattr(k, "key", getattr(k, "idx", None)) for k in path]
         names = [str(n) for n in names if n is not None]
-        return NamedSharding(mesh, _param_spec(names, leaf, mesh, fsdp))
+        return NamedSharding(
+            mesh, _param_spec(names, leaf, mesh, fsdp, serve=serve))
 
     return jax.tree_util.tree_map_with_path(one, params_shape)
 
@@ -261,6 +272,29 @@ def cache_shardings(mesh: Mesh, cache_shape, cfg):
         return NamedSharding(mesh, P())
 
     return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+def pool_shardings(mesh: Mesh, pools_shape):
+    """Paged KV block pools ``(L, NB, bs, H, Dh)``: heads over ``model``
+    when divisible, everything else replicated.
+
+    The block/position dims are *never* sharded: splitting positions
+    would turn the decode attention contraction into cross-device
+    partial sums whose accumulation order differs from the
+    single-device graph, breaking the serving engine's bitwise greedy
+    contract. (The contiguous cache's sequence-sharded online-softmax
+    fallback exists for the heads-don't-divide case; paged pools simply
+    replicate there.) The batch dim has no pool analogue either —
+    blocks from different slots interleave freely in ``NB``."""
+    def one(leaf):
+        if leaf.ndim < 2:
+            return NamedSharding(mesh, P())
+        h = leaf.shape[-2]
+        h_ax = MODEL if _div(h, mesh, MODEL) else None
+        return NamedSharding(
+            mesh, P(*(None,) * (leaf.ndim - 2), h_ax, None))
+
+    return jax.tree.map(one, pools_shape)
 
 
 def replicated(mesh: Mesh, tree):

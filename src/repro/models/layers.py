@@ -11,6 +11,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.distributed import hints
+
 Params = dict
 
 
@@ -94,6 +96,11 @@ def init_mlp(key, cfg, d_ff: int | None = None):
 
 
 def apply_mlp(p, cfg, x):
+    # bitwise serving: pin the MLP entry as well as the w_down input —
+    # with the slot batch live on the ``data`` axis (KV cache), GSPMD
+    # otherwise batch-splits the up-projections onto the free axis and
+    # the local gemm's accumulation order drifts from single-device
+    x = hints.row_input(x)
     act = cfg.activation
     if act in ("swiglu", "geglu"):
         g = jnp.einsum("...d,df->...f", x, p["w_gate"])
@@ -109,7 +116,7 @@ def apply_mlp(p, cfg, x):
             h = r * r
         else:
             raise ValueError(f"unknown activation {act}")
-    return jnp.einsum("...f,fd->...d", h, p["w_down"])
+    return jnp.einsum("...f,fd->...d", hints.row_input(h), p["w_down"])
 
 
 # ---------------------------------------------------------------------------

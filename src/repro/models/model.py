@@ -113,7 +113,7 @@ def attn_full(p, cfg, x, *, positions, causal=True, window=None,
     o = attention(q, k, v, causal=causal, window=window,
                   q_offset=0, kv_offset=0, impl=attn_impl,
                   q_chunk=cfg.attn_chunk, kv_chunk=cfg.attn_chunk)
-    o = o.reshape(x.shape[0], x.shape[1], -1)
+    o = hints.row_input(o.reshape(x.shape[0], x.shape[1], -1))
     return jnp.einsum("bse,ed->bsd", o, p["wo"]), (k, v)
 
 
@@ -136,7 +136,7 @@ def attn_decode(p, cfg, x, k_cache, v_cache, cache_len, *, window=None,
     o = decode_attention(q, k_cache, v_cache, cache_len, window=window,
                          extra_k=k1, extra_v=v1,
                          block_tables=block_tables)
-    o = o.reshape(x.shape[0], 1, -1)
+    o = hints.row_input(o.reshape(x.shape[0], 1, -1))
     return jnp.einsum("bse,ed->bsd", o, p["wo"]), k1, v1
 
 
@@ -153,7 +153,7 @@ def attn_chunk(p, cfg, x, k_hist, v_hist, hist_len, *, positions,
         k = L.apply_rope(k, positions, cfg.rope_theta)
     impl = "pallas" if attn_impl == "pallas" else "chunked"
     o = prefill_over_cache(q, k_hist, v_hist, hist_len, k, v, impl=impl)
-    o = o.reshape(x.shape[0], x.shape[1], -1)
+    o = hints.row_input(o.reshape(x.shape[0], x.shape[1], -1))
     return jnp.einsum("bse,ed->bsd", o, p["wo"]), (k, v)
 
 
@@ -227,16 +227,20 @@ def decoder_block_decode(p, cfg, x, k_cache, v_cache, cache_len, *,
     a, k1, v1 = attn_decode(p["attn"], cfg, h, k_cache, v_cache,
                             cache_len, window=window,
                             block_tables=block_tables)
-    x = x + a
+    # pin the residual stream like the other blocks do — without it the
+    # model-sharded wo/w_down outputs leave d_model sharded and the next
+    # rmsnorm becomes a cross-device reduce (order-dependent, breaks the
+    # serving bitwise gate)
+    x = hints.hidden(x + a, cfg.act_shard)
     if cross_k is not None:
         h = L.apply_norm(p["ln_x"], cfg, x)
         q, _, _ = _proj_qkv(p["xattn"], cfg, h)
         o = decode_attention(q, cross_k, cross_v,
                              cross_k.shape[1])  # all slots valid
-        o = o.reshape(x.shape[0], 1, -1)
+        o = hints.row_input(o.reshape(x.shape[0], 1, -1))
         x = x + jnp.einsum("bse,ed->bsd", o, p["xattn"]["wo"])
     h = L.apply_norm(p["ln2"], cfg, x)
-    x = x + _apply_ffn(p, cfg, h)
+    x = hints.hidden(x + _apply_ffn(p, cfg, h), cfg.act_shard)
     return x, k1, v1
 
 

@@ -57,6 +57,7 @@ which other rows share the dispatch, and sampling streams are keyed by
 """
 from __future__ import annotations
 
+import contextlib
 import time
 import warnings
 from collections import deque
@@ -108,20 +109,40 @@ class ClusterConfig:
 
 
 class Worker:
-    """One ServingEngine pinned to a device."""
+    """One ServingEngine pinned to a device — or, with
+    ``EngineConfig.mesh`` set, to a disjoint *group* of devices the
+    engine arranges into its own (data, model) sub-mesh (each cluster
+    worker is then a tensor-parallel engine; the handoff/migration
+    paths are unchanged because packets are host arrays either way)."""
 
     def __init__(self, role: str, idx: int, device, params, cfg,
                  ecfg: EngineConfig, straggler_factor: float):
         self.role = role
         self.idx = idx
-        self.device = device
+        self.device = device      # one jax device, or a tuple (sub-mesh)
         self.alive = True
         self.draining = False
         self.steps = 0
         self.monitor = StragglerMonitor(factor=straggler_factor)
-        with jax.default_device(device):
-            self.params = jax.device_put(params, device)
-            self.eng = ServingEngine(self.params, cfg, ecfg)
+        if isinstance(device, (tuple, list)):
+            # mesh worker: sharded placement pins every buffer to the
+            # group, so no default_device context is needed (or valid —
+            # there is no single device to pin)
+            self.params = params
+            self.eng = ServingEngine(params, cfg, ecfg,
+                                     devices=tuple(device))
+        else:
+            with jax.default_device(device):
+                self.params = jax.device_put(params, device)
+                self.eng = ServingEngine(self.params, cfg, ecfg)
+
+    def ctx(self):
+        """Context for host-driven engine calls: pin the worker's
+        device, or nothing for a mesh group (committed sharded buffers
+        already dictate placement)."""
+        if isinstance(self.device, (tuple, list)):
+            return contextlib.nullcontext()
+        return jax.default_device(self.device)
 
     def live_slots(self) -> list[int]:
         return [i for i, r in enumerate(self.eng.slot_req) if r is not None]
@@ -154,18 +175,33 @@ class ClusterEngine:
                 "have to migrate too)")
         devices = list(ccfg.devices) or list(jax.devices())
         n = ccfg.n_prefill + ccfg.n_decode
-        if len(devices) < n:
-            warnings.warn(
-                f"cluster wants {n} devices but only {len(devices)} "
-                "available; workers share devices round-robin (no "
-                "hardware parallelism, placement still exercised)",
-                stacklevel=2)
+        if ecfg.mesh is not None:
+            # each worker takes a disjoint group of d*m devices and
+            # builds its own (data, model) sub-mesh — sub-meshes must
+            # not overlap (two engines dispatching onto shared devices
+            # would serialize and the "worker" boundary would be fake)
+            per = ecfg.mesh[0] * ecfg.mesh[1]
+            if len(devices) < n * per:
+                raise ValueError(
+                    f"cluster of {n} workers with per-worker mesh "
+                    f"{ecfg.mesh} needs {n * per} devices, but only "
+                    f"{len(devices)} are available")
+            groups = [tuple(devices[i * per:(i + 1) * per])
+                      for i in range(n)]
+        else:
+            if len(devices) < n:
+                warnings.warn(
+                    f"cluster wants {n} devices but only {len(devices)} "
+                    "available; workers share devices round-robin (no "
+                    "hardware parallelism, placement still exercised)",
+                    stacklevel=2)
+            groups = [devices[i % len(devices)] for i in range(n)]
         self.prefill_workers = [
-            Worker("prefill", i, devices[i % len(devices)], params, cfg,
+            Worker("prefill", i, groups[i], params, cfg,
                    ecfg, ccfg.straggler_factor)
             for i in range(ccfg.n_prefill)]
         self.decode_workers = [
-            Worker("decode", i, devices[(ccfg.n_prefill + i) % len(devices)],
+            Worker("decode", i, groups[ccfg.n_prefill + i],
                    params, cfg, ecfg, ccfg.straggler_factor)
             for i in range(ccfg.n_decode)]
         self.waiting: deque[Request] = deque()
@@ -249,7 +285,7 @@ class ClusterEngine:
             if not w.alive or not w.live_slots():
                 continue
             t0 = time.time()
-            with jax.default_device(w.device):
+            with w.ctx():
                 w.eng.step()
             breached = w.monitor.observe(w.steps, time.time() - t0)
             w.steps += 1
@@ -373,7 +409,7 @@ class ClusterEngine:
             quota -= 1
             w = self._pick_prefill_worker(pws, self.waiting[0])
             req = self.waiting.popleft()
-            with jax.default_device(w.device):
+            with w.ctx():
                 w.eng.waiting.append(req)
                 w.eng.scheduler.admit(w.eng)
             self._collect(w.eng)  # admit-time retirements finish here
@@ -418,7 +454,7 @@ class ClusterEngine:
         same ``_pack_slot`` snapshot the SLO policy uses to preempt)."""
         eng = w.eng
         req = eng.slot_req[slot]
-        with jax.default_device(w.device):
+        with w.ctx():
             pkt = eng._pack_slot(slot)
         hops = self._req_hops.get(req.rid, 0) + (1 if migration else 0)
         self._req_hops[req.rid] = hops
@@ -457,7 +493,7 @@ class ClusterEngine:
                 still.append(pkt)  # transient: capacity frees as slots
                 continue           # retire; budget throttles admission
             slot = w.free_slot()
-            with jax.default_device(w.device):
+            with w.ctx():
                 w.eng._unpack_slot(pkt, slot)
         self.pending = still
 

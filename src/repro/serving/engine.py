@@ -98,7 +98,10 @@ from dataclasses import dataclass, field
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh
 
+from repro.distributed import hints
+from repro.distributed import sharding as SH
 from repro.models import model as MD
 from repro.serving.kv_cache import (ContiguousCache, contiguous_kv_bytes,
                                     make_kv_cache)
@@ -217,6 +220,17 @@ class EngineConfig:
     spec_draft_layers: int = 0    # self-draft depth; 0 -> n_layers // 2
                                   # (>= 1); == n_layers makes the draft
                                   # the target (acceptance -> 100%)
+    mesh: tuple | None = None     # (data, model): run this engine's
+                                  # dispatches on a jax device mesh —
+                                  # attention heads / MoE experts
+                                  # tensor-parallel over ``model``, the
+                                  # KV slot batch over ``data``, via the
+                                  # serve-mode sharding rules. Greedy
+                                  # streams stay bitwise identical to
+                                  # the single-device engine (the
+                                  # gather-rows TP layout), and the
+                                  # one-dispatch-per-step invariant is
+                                  # untouched. None -> default device.
 
     def __post_init__(self):
         """Reject nonsensical configs with clear errors instead of
@@ -245,6 +259,13 @@ class EngineConfig:
                     "longest-accepted-prefix verification is exact only "
                     "against the target argmax (stochastic acceptance "
                     "would need rejection sampling)")
+        if self.mesh is not None:
+            m = tuple(int(x) for x in self.mesh)
+            if len(m) != 2 or any(x < 1 for x in m):
+                raise ValueError(
+                    f"mesh={self.mesh!r} must be a (data, model) pair "
+                    "of positive axis sizes")
+            self.mesh = m
         if self.scheduler == "chunked":
             if self.chunk_tokens < 1:
                 raise ValueError(
@@ -363,12 +384,35 @@ def request_breakdowns(done) -> dict:
 
 class ServingEngine:
     def __init__(self, params, cfg, ecfg: EngineConfig, *,
-                 draft_params=None, draft_cfg=None):
-        self.params = params
+                 draft_params=None, draft_cfg=None, devices=None):
         self.cfg = cfg
         self.ecfg = ecfg
         B, C = ecfg.max_batch, ecfg.max_seq_len
-        self.kv = make_kv_cache(cfg, ecfg)
+        # tensor/sequence-parallel serving: an ``ecfg.mesh`` of
+        # (data, model) places this engine on a device mesh — weights
+        # under the serve-mode sharding rules (model-axis only when the
+        # model fits the budget, so each ``data`` replica reads local
+        # weights), the KV pool batch-over-data / heads-over-model.
+        # ``devices`` restricts the mesh to an explicit device group
+        # (the cluster hands each worker a disjoint sub-mesh).
+        self.mesh = None
+        if ecfg.mesh is not None:
+            d, m = ecfg.mesh
+            devs = list(devices) if devices is not None else jax.devices()
+            if len(devs) < d * m:
+                raise ValueError(
+                    f"mesh={ecfg.mesh} needs {d * m} devices, but only "
+                    f"{len(devs)} are "
+                    + ("in the worker's device group" if devices
+                       is not None else "visible to jax"))
+            self.mesh = Mesh(
+                np.asarray(devs[:d * m]).reshape(d, m), ("data", "model"))
+            params = jax.device_put(
+                params,
+                SH.param_shardings(
+                    self.mesh, jax.eval_shape(lambda: params), serve=True))
+        self.params = params
+        self.kv = make_kv_cache(cfg, ecfg, mesh=self.mesh)
         # host-side slot bookkeeping
         self.slot_req: list[Request | None] = [None] * B
         self.slot_len = np.zeros(B, np.int32)     # tokens generated
@@ -439,19 +483,23 @@ class ServingEngine:
         self.dispatch_log: list[dict] = []
         self.step_index = 0
         # the dispatch graphs: built at module level so the static cost
-        # model traces literally the same function objects we jit here
+        # model traces literally the same function objects we jit here.
+        # On a mesh, each jit is wrapped to trace under the armed
+        # sharding hints (bitwise gather-rows TP); the *closures* stay
+        # the untouched module-level functions — the pricer/audit trace
+        # them meshless and see the exact same jaxprs as ever.
         self._closures = build_closures(cfg, C)
-        self._prefill_one = jax.jit(
+        self._prefill_one = self._jit(
             self._closures["prefill"])  # one compile per bucket
-        self._decode_ragged = jax.jit(
+        self._decode_ragged = self._jit(
             self._closures["decode"])  # one compile total
-        self._verify_ragged = jax.jit(
+        self._verify_ragged = self._jit(
             self._closures["verify"])  # one compile total
         # chunked prefill: slot/hist_len/logit_idx traced -> one compile
         # per chunk shape (two for vlm: first chunk carries the images)
         self._chunk_fns = {
-            "contiguous": jax.jit(self._closures["chunk_contiguous"]),
-            "paged": jax.jit(self._closures["chunk_paged"])}
+            "contiguous": self._jit(self._closures["chunk_contiguous"]),
+            "paged": self._jit(self._closures["chunk_paged"])}
         self._sample = jax.jit(self._make_sampler())
         # speculative draft: a second, smaller model with its own
         # (always-contiguous) KV cache that shadows the committed
@@ -462,6 +510,24 @@ class ServingEngine:
         self.draft_pos = np.zeros(B, np.int32)  # draft-valid KV per slot
         if self.scheduler.name == "speculative":
             self._init_draft(draft_params, draft_cfg)
+
+    def _jit(self, fn):
+        """``jax.jit`` a dispatch closure; on a mesh, enter the armed
+        sharding-hint context around every call. The hints are
+        contextvars read at *trace* time, so the first call of each
+        shape lowers to the gather-rows tensor-parallel graph and later
+        calls hit the compiled cache — still exactly one jitted
+        dispatch per step. Outside a mesh this is plain ``jax.jit``."""
+        jitted = jax.jit(fn)
+        if self.mesh is None:
+            return jitted
+        mesh = self.mesh
+
+        def armed(*args, **kwargs):
+            with hints.use_mesh(mesh, gather_rows=True):
+                return jitted(*args, **kwargs)
+
+        return armed
 
     def _init_draft(self, draft_params, draft_cfg):
         """Resolve the draft pair: explicit params, a registry arch id
@@ -499,15 +565,21 @@ class ServingEngine:
                 "prefix must occupy identical positions — and the "
                 "shared stub image batch identical feature width — in "
                 "both caches")
+        if self.mesh is not None:
+            draft_params = jax.device_put(
+                draft_params,
+                SH.param_shardings(
+                    self.mesh, jax.eval_shape(lambda: draft_params),
+                    serve=True))
         self.draft_params, self.draft_cfg = draft_params, dcfg
-        self.draft_kv = ContiguousCache(dcfg, ecfg)
+        self.draft_kv = ContiguousCache(dcfg, ecfg, mesh=self.mesh)
         # the draft's dispatch graphs are the same module-level
         # closures, built for the draft config (speculative policies
         # only resolve on attention families, so masked is never hit)
         self._draft_closures = build_closures(dcfg, ecfg.max_seq_len)
-        self._draft_prefill = jax.jit(
+        self._draft_prefill = self._jit(
             self._draft_closures["prefill"])  # per bucket
-        self._draft_decode = jax.jit(
+        self._draft_decode = self._jit(
             self._draft_closures["decode"])   # one compile total
 
     def _make_sampler(self):
@@ -1144,6 +1216,13 @@ class ServingEngine:
         ttft = [r.ttft_s for r in done]
         toks = sum(len(r.output) for r in done)
         wall = max(r.t_done for r in done) - min(r.t_submit for r in done)
+        resident = (self.kv.peak_resident_kv_bytes
+                    + (self.draft_kv.peak_resident_kv_bytes
+                       if self.draft_kv is not None else 0))
+        # per-device residency: the KV arrays are partitioned over
+        # ``kv_partitions`` devices (heads over ``model``, slot batch
+        # over ``data`` for contiguous; 1 without a mesh)
+        parts = int(getattr(self.kv, "kv_partitions", 1))
         return {
             "requests": len(done),
             "tokens": toks,
@@ -1211,10 +1290,15 @@ class ServingEngine:
             # shadow cache — report it, and charge it to the total
             "draft_kv_bytes": (self.draft_kv.peak_resident_kv_bytes
                                if self.draft_kv is not None else 0),
-            "resident_kv_bytes": (
-                self.kv.peak_resident_kv_bytes
-                + (self.draft_kv.peak_resident_kv_bytes
-                   if self.draft_kv is not None else 0)),
+            "resident_kv_bytes": resident,
             "contiguous_kv_bytes": contiguous_kv_bytes(
                 self.cfg, self.ecfg.max_batch, self.ecfg.max_seq_len),
+            # mesh-serving accounting: the (data, model) shape (None on
+            # a single device), devices spanned, and the residency each
+            # device actually holds of the sharded KV pool
+            "mesh": self.ecfg.mesh,
+            "mesh_devices": (self.mesh.devices.size
+                             if self.mesh is not None else 1),
+            "kv_partitions": parts,
+            "resident_kv_bytes_per_device": -(-resident // parts),
         }

@@ -60,12 +60,25 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.distributed import sharding as SH
 from repro.models import model as MD
 
 
 # ---------------------------------------------------------------------------
 # shared byte accounting (engine summary + analytical simulator)
 # ---------------------------------------------------------------------------
+
+def kv_partition_count(arr) -> int:
+    """Devices holding *distinct* shards of ``arr`` (1 when replicated
+    or unsharded) — the divisor that turns the backend's logical
+    resident-KV accounting into per-device bytes."""
+    try:
+        shard = arr.sharding.shard_shape(tuple(arr.shape))
+    except AttributeError:
+        return 1
+    total = int(np.prod(arr.shape)) or 1
+    per = int(np.prod(shard)) or 1
+    return max(1, total // per)
 
 def kv_bytes_per_token(cfg) -> int:
     """Bytes of self-attention KV state one cached position occupies
@@ -415,10 +428,22 @@ class ContiguousCache:
 
     name = "contiguous"
 
-    def __init__(self, cfg, ecfg):
+    def __init__(self, cfg, ecfg, mesh=None):
         self.cfg = cfg
         B, C = ecfg.max_batch, ecfg.max_seq_len
         self._cache = MD.init_cache(cfg, B, C)
+        self.kv_partitions = 1
+        if mesh is not None:
+            # serve-mode mesh: batch over ``data``, heads over ``model``
+            # (sequence-sharded fallback when heads don't divide) — the
+            # same rule the dry-run lowers under, so the resident pool
+            # lives sharded next to the attention heads that read it.
+            self._cache = jax.device_put(
+                self._cache,
+                SH.cache_shardings(
+                    mesh, jax.eval_shape(lambda: self._cache), cfg))
+            if "k" in self._cache:
+                self.kv_partitions = kv_partition_count(self._cache["k"])
         axes = MD.cache_batch_axes(self._cache)
         self._footprint = contiguous_kv_bytes(cfg, B, C)
         # occupancy, for the double-import guard: the dense layout has
@@ -568,7 +593,7 @@ class PagedCache:
 
     name = "paged"
 
-    def __init__(self, cfg, ecfg):
+    def __init__(self, cfg, ecfg, mesh=None):
         if cfg.family not in MD.TRANSFORMER_FAMILIES:
             raise ValueError(f"paged cache does not support family "
                              f"{cfg.family!r}")
@@ -587,6 +612,15 @@ class PagedCache:
         self.num_blocks = NB = ecfg.kv_blocks or ecfg.max_batch * W
         self._bytes_per_token = kv_bytes_per_token(cfg)
         self._pool_k, self._pool_v = MD.init_paged_pools(cfg, NB, bs)
+        self.kv_partitions = 1
+        if mesh is not None:
+            # heads over ``model``; block/position dims stay whole (a
+            # position split would break the bitwise decode contract)
+            pk, pv = jax.eval_shape(lambda: (self._pool_k, self._pool_v))
+            self._pool_k, self._pool_v = jax.device_put(
+                (self._pool_k, self._pool_v),
+                SH.pool_shardings(mesh, (pk, pv)))
+            self.kv_partitions = kv_partition_count(self._pool_k)
         B = ecfg.max_batch
         # NB is the sentinel "no block" id: jitted scatters drop it,
         # gathers clamp it onto a real (masked-off) block.
@@ -984,12 +1018,15 @@ class PagedCache:
 # factory
 # ---------------------------------------------------------------------------
 
-def make_kv_cache(cfg, ecfg) -> KVCacheManager:
+def make_kv_cache(cfg, ecfg, mesh=None) -> KVCacheManager:
     """Build the configured backend; families the paged layout cannot
-    express (recurrent state, rolling SWA) fall back to contiguous."""
+    express (recurrent state, rolling SWA) fall back to contiguous.
+    ``mesh`` (a ``jax.sharding.Mesh`` with ``data``/``model`` axes)
+    places the resident pool sharded — batch/heads for contiguous,
+    heads-only for paged — next to the engine's sharded dispatches."""
     kind = getattr(ecfg, "kv_cache", "contiguous")
     if kind == "contiguous":
-        return ContiguousCache(cfg, ecfg)
+        return ContiguousCache(cfg, ecfg, mesh=mesh)
     if kind == "paged":
         if (cfg.family not in MD.TRANSFORMER_FAMILIES
                 or cfg.sliding_window is not None):
@@ -997,6 +1034,6 @@ def make_kv_cache(cfg, ecfg) -> KVCacheManager:
                 f"paged KV cache unsupported for family={cfg.family!r} "
                 f"sliding_window={cfg.sliding_window}; falling back to "
                 "contiguous", stacklevel=2)
-            return ContiguousCache(cfg, ecfg)
-        return PagedCache(cfg, ecfg)
+            return ContiguousCache(cfg, ecfg, mesh=mesh)
+        return PagedCache(cfg, ecfg, mesh=mesh)
     raise ValueError(f"unknown kv_cache backend {kind!r}")

@@ -22,6 +22,7 @@ from repro.configs import registry
 from repro.distributed import hints
 from repro.distributed import sharding as SH
 from repro.launch import steps as ST
+from repro.launch.dryrun import peak_memory_bytes
 from repro.launch.mesh import make_mesh
 from repro.models import model as MD
 from repro.optim import AdamW, OptConfig
@@ -43,7 +44,7 @@ for arch in %(archs)s:
         lowered = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh)).lower(
             params_shape, opt_shape, batch)
         compiled = lowered.compile()
-        out[arch] = int(compiled.memory_analysis().peak_memory_in_bytes)
+        out[arch] = peak_memory_bytes(compiled.memory_analysis())
 print("RESULT " + json.dumps(out))
 """
 
@@ -70,6 +71,69 @@ def test_train_step_compiles_on_8dev_mesh_dense_and_moe():
 def test_train_step_compiles_on_multipod_8dev_mesh():
     out = run_sub(["zamba2-2.7b"], (2, 2, 2), ("pod", "data", "model"))
     assert out["zamba2-2.7b"] > 0
+
+
+SERVE_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax
+from functools import partial
+
+from repro.configs import registry
+from repro.distributed import hints
+from repro.distributed import sharding as SH
+from repro.launch import steps as ST
+from repro.launch.dryrun import peak_memory_bytes
+from repro.launch.mesh import make_mesh
+from repro.models import model as MD
+
+out = {}
+for arch in %(archs)s:
+    cfg = registry.get_smoke_config(arch)
+    mesh = make_mesh(%(mesh)s, %(axes)s)
+    with hints.use_mesh(mesh):
+        params_shape = jax.eval_shape(
+            partial(MD.init_params, cfg=cfg), jax.random.PRNGKey(0))
+        p_sh = SH.param_shardings(mesh, params_shape, serve=True)
+        # serve mode must empty the FSDP axes for a smoke model: row
+        # weights shard OUT over model only, nothing over data
+        flat = jax.tree_util.tree_flatten_with_path(p_sh)[0]
+        row = [s for p, s in flat
+               if str(getattr(p[-1], "key", "")) in ("wo", "w_down")]
+        assert row, "no row-parallel weights found"
+        assert all("data" not in jax.tree.leaves(
+            [ax for ax in s.spec if ax is not None]) for s in row), \
+            f"serve-mode row weights sharded over data: {row[0].spec}"
+        tokens = MD.batch_spec(cfg, 8, 1, "decode")["tokens"]
+        t_sh = SH.batch_shardings(mesh, tokens)
+        cache_shape = MD.cache_spec(cfg, 8, 64)
+        c_sh = SH.cache_shardings(mesh, cache_shape, cfg)
+        step = ST.build_serve_step(cfg)
+        compiled = jax.jit(step, in_shardings=(p_sh, t_sh, c_sh),
+                           out_shardings=(t_sh, None, c_sh),
+                           donate_argnums=(2,)).lower(
+            params_shape, tokens, cache_shape).compile()
+        out[arch] = peak_memory_bytes(compiled.memory_analysis())
+print("RESULT " + json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_serve_decode_step_compiles_on_8dev_mesh():
+    """Serve-mode sharding (empty FSDP axes, OUT-over-model row weights)
+    lowers and compiles a decode step on a real (2, 4) device world —
+    the launch-layer mirror of the mesh serving engine's layout."""
+    script = SERVE_SCRIPT % {
+        "archs": repr(["qwen1.5-0.5b", "deepseek-moe-16b"]),
+        "mesh": repr((2, 4)), "axes": repr(("data", "model"))}
+    r = subprocess.run([sys.executable, "-c", script],
+                       capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, r.stderr[-3000:]
+    line = [l for l in r.stdout.splitlines()
+            if l.startswith("RESULT ")][-1]
+    out = json.loads(line[len("RESULT "):])
+    assert all(v > 0 for v in out.values())
 
 
 # ---------------------------------------------------------------------------

@@ -101,6 +101,23 @@ def test_bottleneck_is_argmax():
     assert c["bottleneck"] == "collective"
 
 
+def test_peak_bytes_tolerates_memory_schema_drift():
+    """Records survive the jax memory_analysis() API churn: old spelling,
+    new spelling, and records written by a jax that dropped the peak
+    field entirely (falls back to argument+output+temp)."""
+    old = A.analyze_record(fake_record())
+    assert old["peak_bytes_per_chip"] == 1 << 30
+    new = A.analyze_record(fake_record(
+        memory={"peak_memory_bytes": 1 << 29}))
+    assert new["peak_bytes_per_chip"] == 1 << 29
+    bare = A.analyze_record(fake_record(
+        memory={"argument_size_in_bytes": 100,
+                "output_size_in_bytes": 20, "temp_size_in_bytes": 3}))
+    assert bare["peak_bytes_per_chip"] == 123
+    assert A.analyze_record(fake_record(memory={}))[
+        "peak_bytes_per_chip"] == 0
+
+
 def test_load_records_dedupes_latest(tmp_path):
     import json
     p = tmp_path / "d.jsonl"
