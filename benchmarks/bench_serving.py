@@ -47,6 +47,16 @@ Invariants under test:
   staying bitwise. The hit-rate → TTFT → TCO-per-QPS sweep
   (``run_cloud_trace(prefix_sweep=...)``) lands in the JSON.
 
+- ``--telemetry``: every scheduler on both KV backends under one shared
+  ``Telemetry`` hub. Hard-fails unless instrumented outputs are bitwise
+  identical to the uninstrumented engine, every dispatch audit is
+  clean, the profiler joins 100% of every ``dispatch_log``, every
+  exercised dispatch kind (and the required prefill/decode/verify/
+  draft/chunk set) carries a finite measured-vs-predicted ratio, the
+  metrics registry validates clean, and the Perfetto export passes
+  schema validation. Writes ``<json>-trace.json`` (load in
+  ui.perfetto.dev) and ``<json>-metrics.prom`` next to the JSON.
+
 Also cross-checks against the analytical simulator's continuous-batching
 path (``LLMSimulator.serve``) on Table-1 cloud profiles, which charges
 the same single-dispatch ragged decode graph — and, under
@@ -118,11 +128,12 @@ def _workload(kind: str, rng):
 
 def _drive(params, cfg, lens, rng, kv_cache, scheduler="blocking",
            max_seq=MAX_SEQ, chunk=CHUNK, gamma=GAMMA, draft_layers=0,
-           mesh=None, out_engines=None):
+           mesh=None, out_engines=None, telemetry=None, label=None):
     eng = ServingEngine(params, cfg, EngineConfig(
         max_batch=MAX_BATCH, max_seq_len=max_seq, max_new_tokens=N_NEW,
         kv_cache=kv_cache, scheduler=scheduler, chunk_tokens=chunk,
-        spec_gamma=gamma, spec_draft_layers=draft_layers, mesh=mesh))
+        spec_gamma=gamma, spec_draft_layers=draft_layers, mesh=mesh),
+        telemetry=telemetry, telemetry_label=label)
     prompts = [rng.integers(0, cfg.vocab_size, size=int(n)) for n in lens]
     # warm every prefill bucket/chunk shape + the decode dispatch out of
     # the timing
@@ -747,9 +758,133 @@ def _run_prefix_section(params, cfg, results, mismatched):
          for p in priced["prefix_sweep"]])
 
 
+def _run_telemetry_section(params, cfg, results, mismatched, json_path):
+    """The --telemetry benchmark: drive blocking + chunked + speculative
+    on both KV backends with one shared :class:`Telemetry` hub,
+    hard-gating
+
+    - bitwise-identical greedy outputs vs. the uninstrumented engine on
+      every (backend, scheduler) pair — observation must never perturb
+      the stream,
+    - a clean dispatch audit on every instrumented engine (the spans
+      wrap the *same* logged dispatches the static pricer traces),
+    - 100% profiler join: every ``dispatch_log`` entry has a measured
+      wall-time sample,
+    - a measured/predicted pair with a **finite** model-error ratio for
+      every dispatch kind the workloads exercise — including the
+      required set {prefill, decode, verify, draft_prefill,
+      draft_decode, chunk_<backend>} per backend,
+    - a healthy metrics registry (no NaN/negative histogram state) and
+      a Perfetto export that passes schema validation,
+
+    and writes the trace-event JSON + Prometheus text dump next to the
+    main JSON artifact."""
+    from repro.core import costmodel as CM
+    from repro.serving import (Telemetry, dispatch_calibration,
+                               format_calibration, join_coverage,
+                               validate_trace_events)
+
+    tel = Telemetry()
+    results["telemetry"] = {"backends": {}, "artifacts": {},
+                            "spans": 0, "metric_series": 0}
+    lens = _workload("ragged", np.random.default_rng(10))
+    rows = []
+    for kv in ("contiguous", "paged"):
+        kv_engines = []
+        for sched in ("blocking", "chunked", "speculative"):
+            base = _drive(params, cfg, lens, np.random.default_rng(11),
+                          kv, sched)
+            out = {}
+            m = _drive(params, cfg, lens, np.random.default_rng(11),
+                       kv, sched, telemetry=tel, label=f"{kv}-{sched}",
+                       out_engines=out)
+            eng = out[kv]
+            kv_engines.append(eng)
+            same = m["outputs"] == base["outputs"]
+            if not same:
+                mismatched.append(
+                    f"telemetry/{kv}/{sched}: instrumented outputs "
+                    "diverged from the uninstrumented engine")
+            audit_ok = True
+            try:
+                CM.assert_no_drift(CM.audit_engine(eng))
+            except Exception as e:  # noqa: BLE001 — drift is the gate
+                audit_ok = False
+                mismatched.append(
+                    f"telemetry/{kv}/{sched}: dispatch audit failed: {e}")
+            joined, total = join_coverage(eng, tel)
+            if joined != total or total == 0:
+                mismatched.append(
+                    f"telemetry/{kv}/{sched}: profiler joined only "
+                    f"{joined}/{total} dispatch-log entries")
+            agg = tel.engine_aggregates(eng.tel_label)
+            rows.append([kv, sched, m["requests"], str(same),
+                         str(audit_ok), f"{joined}/{total}",
+                         agg["spans"],
+                         r3(agg["dispatch_wall_s"] * 1e3)])
+
+        calib = dispatch_calibration(kv_engines, tel)
+        observed = {e["kind"] for eng in kv_engines
+                    for e in eng.dispatch_log}
+        required = observed | {"prefill", "decode", "verify",
+                               "draft_prefill", "draft_decode",
+                               f"chunk_{kv}"}
+        for kind in sorted(required):
+            r = calib.get(kind)
+            if r is None or r["n"] < 1:
+                mismatched.append(
+                    f"telemetry/{kv}: dispatch kind {kind!r} lacks a "
+                    "measured/predicted pair")
+            elif not (r["predicted_s"] > 0
+                      and np.isfinite(r["model_error_ratio"])):
+                mismatched.append(
+                    f"telemetry/{kv}: non-finite model-error ratio for "
+                    f"dispatch kind {kind!r}")
+        print(f"\ndispatch calibration — {kv} backend (host reference "
+              "roofline; CI gates finiteness, not absolute error):")
+        print(format_calibration(calib))
+        results["telemetry"]["backends"][kv] = {
+            "calibration": calib,
+            "kinds_required": sorted(required),
+            "engines": [eng.tel_label for eng in kv_engines],
+        }
+    print_table(
+        "telemetry overhead + coverage (shared hub, ragged workload)",
+        ["kv_cache", "scheduler", "reqs", "bitwise", "audit", "join",
+         "spans", "disp ms"],
+        rows)
+
+    problems = tel.metrics.validate()
+    if problems:
+        mismatched.append(f"telemetry: unhealthy metrics registry: "
+                          f"{problems}")
+    trace = tel.tracer.trace_events()
+    trace_problems = validate_trace_events(trace)
+    if trace_problems:
+        mismatched.append(f"telemetry: Perfetto export failed schema "
+                          f"validation: {trace_problems}")
+    results["telemetry"]["spans"] = len(tel.tracer.spans)
+    results["telemetry"]["metric_series"] = len(tel.metrics.snapshot())
+    results["telemetry"]["metrics_problems"] = problems
+    results["telemetry"]["trace_problems"] = trace_problems
+
+    if json_path:
+        stem = json_path[:-5] if json_path.endswith(".json") else json_path
+        trace_path = f"{stem}-trace.json"
+        prom_path = f"{stem}-metrics.prom"
+        with open(trace_path, "w") as f:
+            json.dump(trace, f)
+        with open(prom_path, "w") as f:
+            f.write(tel.metrics.to_prometheus() + "\n")
+        results["telemetry"]["artifacts"] = {"trace": trace_path,
+                                             "metrics": prom_path}
+        print(f"\n[wrote {trace_path}]\n[wrote {prom_path}]")
+
+
 def run(json_path: str | None = None, scheduler: str = "blocking",
         cluster: bool = False, trace: str | None = None,
-        prefix: bool = False, mesh: tuple | None = None):
+        prefix: bool = False, mesh: tuple | None = None,
+        telemetry: bool = False):
     cfg = registry.get_smoke_config(MODEL).replace(dtype="float32")
     params = MD.init_params(jax.random.PRNGKey(0), cfg)
 
@@ -760,6 +895,20 @@ def run(json_path: str | None = None, scheduler: str = "blocking",
                "speculative": []}
     rows = []
     mismatched = []
+    if telemetry:
+        # the --telemetry flavor is its own CI step: every scheduler on
+        # both KV backends under one shared Telemetry hub, with
+        # bitwise/audit/join/finite-calibration/schema gates, writing
+        # the Perfetto trace + Prometheus dump next to the JSON
+        _run_telemetry_section(params, cfg, results, mismatched,
+                               json_path)
+        if json_path:
+            with open(json_path, "w") as f:
+                json.dump(results, f, indent=2, default=float)
+            print(f"\n[wrote {json_path}]")
+        if mismatched:
+            raise SystemExit(f"serving invariants violated: {mismatched}")
+        return results
     if mesh is not None:
         # the --mesh flavor is its own CI step: one engine on a
         # (data, model) device mesh with bitwise/dispatch/audit/
@@ -1020,6 +1169,16 @@ if __name__ == "__main__":
                          "with bitwise-output, p99-TTFT, dispatch-audit, "
                          "mirror-exactness and affinity-routing gates, "
                          "plus the hit-rate TCO sweep")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="run the telemetry benchmark instead: every "
+                         "scheduler on both KV backends under one "
+                         "shared Telemetry hub, hard-gating bitwise "
+                         "outputs, clean dispatch audits, 100%% "
+                         "profiler join, a finite measured-vs-"
+                         "predicted ratio for every dispatch kind, "
+                         "healthy histograms and a schema-valid "
+                         "Perfetto export; writes <json>-trace.json "
+                         "and <json>-metrics.prom artifacts")
     ap.add_argument("--mesh", default=None, metavar="D,M",
                     help="run the mesh-sharded engine benchmark instead: "
                          "one engine on a (data, model) device mesh "
@@ -1033,4 +1192,5 @@ if __name__ == "__main__":
         d, m = (int(x) for x in args.mesh.split(","))
         mesh_arg = (d, m)
     run(args.json, scheduler=args.scheduler, cluster=args.cluster,
-        trace=args.trace, prefix=args.prefix, mesh=mesh_arg)
+        trace=args.trace, prefix=args.prefix, mesh=mesh_arg,
+        telemetry=args.telemetry)

@@ -48,7 +48,17 @@ you can watch live slots migrate. Prints TTFT and the KV bytes that
 crossed worker boundaries; greedy outputs stay bitwise identical to the
 single engine.
 
+Telemetry (``--telemetry``): the backend-comparison engines share one
+``Telemetry`` hub — every engine phase (admit, prefill, decode
+dispatch, KV commit/splice, sampling, retire) records a nested span and
+every jitted dispatch is wall-timed with ``block_until_ready``. The
+demo prints the top-5 slowest spans and the per-kind achieved-vs-
+predicted calibration table that joins those wall times against the
+static cost model's traced FLOPs/bytes — outputs stay bitwise
+identical with telemetry on.
+
 Run:  PYTHONPATH=src python examples/serve_batched.py
+      PYTHONPATH=src python examples/serve_batched.py --telemetry
       PYTHONPATH=src python examples/serve_batched.py --scheduler chunked
       PYTHONPATH=src python examples/serve_batched.py \
           --scheduler speculative --gamma 4
@@ -65,7 +75,8 @@ from repro.core import profiles as HW
 from repro.core.simulator import LLMSimulator, SimConfig
 from repro.models import model as MD
 from repro.serving import (ClusterConfig, ClusterEngine, EngineConfig,
-                           ServingEngine)
+                           ServingEngine, Telemetry, dispatch_calibration,
+                           format_calibration)
 
 
 def main():
@@ -79,6 +90,11 @@ def main():
     ap.add_argument("--cluster", default=None, metavar="N,M",
                     help="also run the disaggregated cluster demo with "
                          "N prefill and M decode workers (e.g. 1,2)")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="instrument the backend-comparison runs with a "
+                         "shared Telemetry hub and print the top-5 "
+                         "slowest spans plus the per-kind achieved-vs-"
+                         "predicted dispatch calibration table")
     args = ap.parse_args()
 
     cfg = registry.get_smoke_config("phi3-mini-3.8b")
@@ -90,12 +106,15 @@ def main():
     print(f"submitting 10 requests (prompt lens 8-24) into 4 slots "
           f"({args.scheduler} scheduler)...")
 
+    tel = Telemetry() if args.telemetry else None
+    tel_engines = []
     outputs = {}
     for kv in ("contiguous", "paged"):
         eng = ServingEngine(params, cfg, EngineConfig(
             max_batch=4, max_seq_len=96, max_new_tokens=12, kv_cache=kv,
             scheduler=args.scheduler, chunk_tokens=16,
-            spec_gamma=args.gamma))
+            spec_gamma=args.gamma), telemetry=tel, telemetry_label=kv)
+        tel_engines.append(eng)
         for p in prompts:
             eng.submit(p)
         eng.run()
@@ -113,6 +132,21 @@ def main():
               f"(max_batch x max_seq_len)")
     print(f"\npaged outputs bitwise-match contiguous: "
           f"{outputs['paged'] == outputs['contiguous']}")
+
+    # -- telemetry: slowest spans + the measured-vs-predicted loop ----------
+    # every engine phase above was wrapped in a span and every jitted
+    # dispatch was wall-timed; join those wall times against the static
+    # cost model's traced FLOPs/bytes for the exact same dispatch-log
+    # entries and the model-error column tells you how far the jaxpr
+    # cost model is from this machine (CI only gates finiteness).
+    if tel is not None:
+        print(f"\ntelemetry: {len(tel.tracer.spans)} spans across "
+              f"{len(tel_engines)} engines; top-5 slowest:")
+        for s in tel.tracer.slowest(5):
+            print(f"  {s.wall_dur_s*1e3:9.2f} ms  [{s.tid}] "
+                  f"{'  ' * s.depth}{s.name} ({s.cat})")
+        print("\ndispatch calibration (host reference roofline):")
+        print(format_calibration(dispatch_calibration(tel_engines, tel)))
 
     # -- scheduling: head-of-line blocking demo -----------------------------
     # one 72-token prompt queued ahead of the shorts: under the blocking

@@ -221,6 +221,44 @@ def _spec_tree(tree):
         if hasattr(x, "shape") and hasattr(x, "dtype") else x, tree)
 
 
+def entry_tracer(engine):
+    """Memoized ``dispatch_log`` entry -> traced op stream for one engine.
+
+    This is the exact join the drift audit uses: ``kind`` selects the
+    engine's own jitted closure (``draft_*`` kinds route to the draft
+    model's closures and params), and the entry's operand spec tree is
+    re-traced through it. Shared by :func:`audit_engine` and the
+    telemetry layer's measured-vs-predicted calibration
+    (``repro.serving.telemetry.dispatch_calibration``), so the seconds
+    the profiler measured and the FLOPs/bytes the model predicts refer
+    to the same compiled graph. Raises ``KeyError`` for a kind with no
+    closure.
+    """
+    closures = engine._closures
+    draft_closures = getattr(engine, "_draft_closures", None)
+    pspec = _spec_tree(engine.params)
+    dspec = (_spec_tree(engine.draft_params)
+             if getattr(engine, "draft_params", None) is not None else None)
+    traced = {}  # (kind, spec repr) -> op stream, traced once
+
+    def trace_entry(entry):
+        kind = entry["kind"]
+        if kind.startswith("draft_"):
+            fn = (draft_closures or {}).get(kind[len("draft_"):])
+            ps = dspec
+        else:
+            fn = closures.get(kind)
+            ps = pspec
+        if fn is None or ps is None:
+            raise KeyError(f"no closure for dispatch kind {kind!r}")
+        key = (kind, repr(entry["spec"]))
+        if key not in traced:
+            traced[key] = T.trace_ops(fn, ps, *entry["spec"])
+        return traced[key]
+
+    return trace_entry
+
+
 def audit_engine(engine, *, other_bytes_threshold: float = 4096.0) -> dict:
     """Map every dispatch an engine actually issued to a priced graph.
 
@@ -243,32 +281,12 @@ def audit_engine(engine, *, other_bytes_threshold: float = 4096.0) -> dict:
       structurally from the log rather than from counters).
     """
     log = engine.dispatch_log
-    closures = engine._closures
-    draft_closures = getattr(engine, "_draft_closures", None)
-    pspec = _spec_tree(engine.params)
-    dspec = (_spec_tree(engine.draft_params)
-             if getattr(engine, "draft_params", None) is not None else None)
     report = {
         "dispatches": len(log), "priced": 0, "kinds": Counter(),
         "unpriced": [], "unknown_prims": [], "zero_flop_kernels": [],
         "stream_mismatch": [], "invariant_violations": [],
     }
-    traced = {}  # (kind, spec repr) -> op stream, traced once
-
-    def trace_entry(entry):
-        kind = entry["kind"]
-        if kind.startswith("draft_"):
-            fn = (draft_closures or {}).get(kind[len("draft_"):])
-            ps = dspec
-        else:
-            fn = closures.get(kind)
-            ps = pspec
-        if fn is None or ps is None:
-            raise KeyError(f"no closure for dispatch kind {kind!r}")
-        key = (kind, repr(entry["spec"]))
-        if key not in traced:
-            traced[key] = T.trace_ops(fn, ps, *entry["spec"])
-        return traced[key]
+    trace_entry = entry_tracer(engine)
 
     seen_streams = set()
     pricer = DispatchPricer(engine.cfg)

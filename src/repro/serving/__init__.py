@@ -30,6 +30,18 @@ from repro.serving.kv_cache import (  # noqa: F401
     make_kv_cache,
     paged_resident_kv_bytes,
 )
+from repro.serving.telemetry import (  # noqa: F401
+    NULL_TELEMETRY,
+    DispatchProfiler,
+    MetricsRegistry,
+    SpanTracer,
+    Telemetry,
+    dispatch_calibration,
+    format_calibration,
+    join_coverage,
+    merge_snapshots,
+    validate_trace_events,
+)
 from repro.serving.workload import (  # noqa: F401
     TenantSpec,
     Trace,

@@ -69,6 +69,7 @@ import numpy as np
 from repro.distributed.fault_tolerance import StragglerMonitor
 from repro.serving.engine import (EngineConfig, Request, ServingEngine,
                                   SlotPacket, request_breakdowns)
+from repro.serving.telemetry import NULL_TELEMETRY
 from repro.serving.scheduler import slo_sort_key
 from repro.serving.workload import autoscale_decision
 
@@ -116,7 +117,8 @@ class Worker:
     paths are unchanged because packets are host arrays either way)."""
 
     def __init__(self, role: str, idx: int, device, params, cfg,
-                 ecfg: EngineConfig, straggler_factor: float):
+                 ecfg: EngineConfig, straggler_factor: float, *,
+                 telemetry=None):
         self.role = role
         self.idx = idx
         self.device = device      # one jax device, or a tuple (sub-mesh)
@@ -124,17 +126,25 @@ class Worker:
         self.draining = False
         self.steps = 0
         self.monitor = StragglerMonitor(factor=straggler_factor)
+        # every worker engine shares the cluster's telemetry hub and
+        # gets its own span/metric track, keyed by its creation identity
+        # (autoscaling may later change ``role``; the track name stays)
+        label = f"{role}{idx}"
         if isinstance(device, (tuple, list)):
             # mesh worker: sharded placement pins every buffer to the
             # group, so no default_device context is needed (or valid —
             # there is no single device to pin)
             self.params = params
             self.eng = ServingEngine(params, cfg, ecfg,
-                                     devices=tuple(device))
+                                     devices=tuple(device),
+                                     telemetry=telemetry,
+                                     telemetry_label=label)
         else:
             with jax.default_device(device):
                 self.params = jax.device_put(params, device)
-                self.eng = ServingEngine(self.params, cfg, ecfg)
+                self.eng = ServingEngine(self.params, cfg, ecfg,
+                                         telemetry=telemetry,
+                                         telemetry_label=label)
 
     def ctx(self):
         """Context for host-driven engine calls: pin the worker's
@@ -161,10 +171,16 @@ class ClusterEngine:
     ``finished``."""
 
     def __init__(self, params, cfg, ecfg: EngineConfig,
-                 ccfg: ClusterConfig | None = None):
+                 ccfg: ClusterConfig | None = None, *,
+                 telemetry=None):
         self.cfg = cfg
         self.ecfg = ecfg
         self.ccfg = ccfg = ccfg or ClusterConfig()
+        # one shared telemetry hub across the router and every worker
+        # engine: cluster-level phases land on the "cluster" track,
+        # per-worker engine phases/dispatches on "<role><idx>" tracks
+        self.telemetry = NULL_TELEMETRY if telemetry is None else telemetry
+        self.tel_label = "cluster"
         if ecfg.scheduler != "blocking":
             raise ValueError(
                 f"ClusterEngine requires scheduler='blocking', got "
@@ -198,11 +214,12 @@ class ClusterEngine:
             groups = [devices[i % len(devices)] for i in range(n)]
         self.prefill_workers = [
             Worker("prefill", i, groups[i], params, cfg,
-                   ecfg, ccfg.straggler_factor)
+                   ecfg, ccfg.straggler_factor, telemetry=telemetry)
             for i in range(ccfg.n_prefill)]
         self.decode_workers = [
             Worker("decode", i, groups[ccfg.n_prefill + i],
-                   params, cfg, ecfg, ccfg.straggler_factor)
+                   params, cfg, ecfg, ccfg.straggler_factor,
+                   telemetry=telemetry)
             for i in range(ccfg.n_decode)]
         self.waiting: deque[Request] = deque()
         self.pending: deque[SlotPacket] = deque()  # awaiting a decode slot
@@ -247,6 +264,14 @@ class ClusterEngine:
     def _now(self) -> float:
         return self.now_s if self.clock == "virtual" else time.time()
 
+    def _vnow(self):
+        return self.now_s if self.clock == "virtual" else None
+
+    def _span(self, name: str, cat: str = "phase", **labels):
+        """A telemetry span on the cluster's own track (no-op when off)."""
+        return self.telemetry.span(name, cat=cat, tid=self.tel_label,
+                                   now_fn=self._vnow, **labels)
+
     def has_work(self) -> bool:
         return bool(self.waiting or self.pending or self._any_live())
 
@@ -272,27 +297,44 @@ class ClusterEngine:
         (least-loaded router), then run one engine step on every decode
         worker that holds live slots."""
         self.steps += 1
-        if self.ccfg.autoscale and self.steps % self.ccfg.autoscale_interval == 0:
-            self._autoscale()
-        if self.ccfg.slo_aware and len(self.waiting) > 1:
-            now = self._now()
-            ordered = sorted(self.waiting, key=lambda r: slo_sort_key(r, now))
-            self.waiting.clear()
-            self.waiting.extend(ordered)
-        self._admit_prefills()
-        self._place_pending()
-        for w in self.decode_workers:
-            if not w.alive or not w.live_slots():
-                continue
-            t0 = time.time()
-            with w.ctx():
-                w.eng.step()
-            breached = w.monitor.observe(w.steps, time.time() - t0)
-            w.steps += 1
-            self._collect(w.eng)
-            if breached and self.ccfg.auto_drain_stragglers \
-                    and not w.draining:
-                self.drain_worker(w.idx)
+        with self._span("cluster_step", step=self.steps):
+            if (self.ccfg.autoscale
+                    and self.steps % self.ccfg.autoscale_interval == 0):
+                with self._span("autoscale"):
+                    self._autoscale()
+            if self.ccfg.slo_aware and len(self.waiting) > 1:
+                now = self._now()
+                ordered = sorted(self.waiting,
+                                 key=lambda r: slo_sort_key(r, now))
+                self.waiting.clear()
+                self.waiting.extend(ordered)
+            with self._span("admit"):
+                self._admit_prefills()
+            with self._span("route"):
+                self._place_pending()
+            for w in self.decode_workers:
+                if not w.alive or not w.live_slots():
+                    continue
+                # straggler detection clocks the worker step with a
+                # monotonic timer (time.time() is wall-of-day and can
+                # step backwards under NTP). Under the virtual clock
+                # (trace replay) wall jitter must never reach the
+                # monitor at all — replay is defined to be
+                # deterministic, and a noisy CI host could otherwise
+                # fire auto_drain_stragglers spuriously — so replay
+                # feeds the monitor a constant 0.0 (never a breach:
+                # the EMA stays 0 and 0 > factor * 0 is false).
+                t0 = time.perf_counter()
+                with w.ctx():
+                    w.eng.step()
+                dt = (0.0 if self.clock == "virtual"
+                      else time.perf_counter() - t0)
+                breached = w.monitor.observe(w.steps, dt)
+                w.steps += 1
+                self._collect(w.eng)
+                if breached and self.ccfg.auto_drain_stragglers \
+                        and not w.draining:
+                    self.drain_worker(w.idx)
 
     # -- fault tolerance ---------------------------------------------------
     def drain_worker(self, idx: int):
@@ -454,17 +496,24 @@ class ClusterEngine:
         same ``_pack_slot`` snapshot the SLO policy uses to preempt)."""
         eng = w.eng
         req = eng.slot_req[slot]
-        with w.ctx():
-            pkt = eng._pack_slot(slot)
+        with self._span("migration" if migration else "handoff",
+                        cat="kv", rid=req.rid, worker=w.idx):
+            with w.ctx():
+                pkt = eng._pack_slot(slot)
         hops = self._req_hops.get(req.rid, 0) + (1 if migration else 0)
         self._req_hops[req.rid] = hops
         pkt.hops = hops
         self.kv_transfer_bytes += pkt.kv["kv_bytes"]
+        kind = "migration" if migration else "handoff"
         if migration:
             self.migrations += 1
             self.migration_bytes += pkt.kv["kv_bytes"]
         else:
             self.handoffs += 1
+        self.telemetry.counter("cluster_kv_transfers_total",
+                               kind=kind).inc()
+        self.telemetry.counter("cluster_kv_transfer_bytes_total",
+                               kind=kind).inc(int(pkt.kv["kv_bytes"]))
         self.pending.append(pkt)
 
     def _route(self, pkt: SlotPacket) -> Worker | None:
@@ -499,13 +548,16 @@ class ClusterEngine:
 
     # -- metrics -----------------------------------------------------------
     def summary(self) -> dict:
+        """Cluster report. Schema-stable: identical key set with zero
+        finished requests (zero/NaN-free defaults) and with N."""
         done = self.finished
-        if not done:
-            return {"requests": 0}
+        n = len(done)
         lat = [r.latency_s for r in done]
         ttft = [r.ttft_s for r in done]
+        itl = [r.itl_s for r in done if len(r.output) > 1]
         toks = sum(len(r.output) for r in done)
-        wall = max(r.t_done for r in done) - min(r.t_submit for r in done)
+        wall = (max(r.t_done for r in done)
+                - min(r.t_submit for r in done)) if done else 0.0
         dws = self.decode_workers
         aws = self.prefill_workers + dws  # every engine, both tiers
         hit_tok = sum(getattr(w.eng.kv, "prefix_hit_tokens", 0)
@@ -513,16 +565,17 @@ class ClusterEngine:
         lookup_tok = sum(getattr(w.eng.kv, "prefix_lookup_tokens", 0)
                          for w in aws)
         return {
-            "requests": len(done),
+            "requests": n,
             "tokens": toks,
-            "tokens_per_s": toks / wall if wall > 0 else float("inf"),
-            "qps": len(done) / wall if wall > 0 else float("inf"),
-            "mean_latency_s": float(np.mean(lat)),
-            "mean_ttft_s": float(np.mean(ttft)),
-            "ttft_p50_s": float(np.percentile(ttft, 50)),
-            "ttft_p99_s": float(np.percentile(ttft, 99)),
-            "mean_itl_s": float(np.mean(
-                [r.itl_s for r in done if len(r.output) > 1] or [0.0])),
+            "tokens_per_s": ((toks / wall if wall > 0 else float("inf"))
+                             if done else 0.0),
+            "qps": ((n / wall if wall > 0 else float("inf"))
+                    if done else 0.0),
+            "mean_latency_s": float(np.mean(lat)) if lat else 0.0,
+            "mean_ttft_s": float(np.mean(ttft)) if ttft else 0.0,
+            "ttft_p50_s": float(np.percentile(ttft, 50)) if ttft else 0.0,
+            "ttft_p99_s": float(np.percentile(ttft, 99)) if ttft else 0.0,
+            "mean_itl_s": float(np.mean(itl)) if itl else 0.0,
             "n_prefill": len(self.prefill_workers),
             "n_decode": len(dws),
             "handoffs": self.handoffs,
@@ -534,7 +587,8 @@ class ClusterEngine:
             "rescale_events": len(self.rescale_log),
             "rescale_log": list(self.rescale_log),
             "preemptions": sum(r.preemptions for r in done),
-            "slo_attainment": sum(r.slo_met for r in done) / len(done),
+            "slo_attainment": (sum(r.slo_met for r in done) / n
+                               if n else 1.0),
             **request_breakdowns(done),
             # prefills over *all* workers: autoscaling moves engines
             # between tiers and their dispatch history moves with them
@@ -579,4 +633,13 @@ class ClusterEngine:
                  "decode_dispatches": w.eng.decode_dispatches,
                  "straggler_events": len(w.monitor.events)}
                 for w in self.prefill_workers + dws],
+            # telemetry fold-in: the cluster's own track plus every
+            # worker engine's aggregates (always present; zero when off)
+            "telemetry": {
+                "cluster": self.telemetry.engine_aggregates(self.tel_label),
+                "workers": {
+                    w.eng.tel_label: self.telemetry.engine_aggregates(
+                        w.eng.tel_label)
+                    for w in self.prefill_workers + dws},
+            },
         }

@@ -106,6 +106,7 @@ from repro.models import model as MD
 from repro.serving.kv_cache import (ContiguousCache, contiguous_kv_bytes,
                                     make_kv_cache)
 from repro.serving.scheduler import PrefillState, make_scheduler
+from repro.serving.telemetry import NULL_TELEMETRY
 
 
 def build_closures(cfg, capacity: int, *, masked: bool | None = None):
@@ -384,9 +385,17 @@ def request_breakdowns(done) -> dict:
 
 class ServingEngine:
     def __init__(self, params, cfg, ecfg: EngineConfig, *,
-                 draft_params=None, draft_cfg=None, devices=None):
+                 draft_params=None, draft_cfg=None, devices=None,
+                 telemetry=None, telemetry_label: str | None = None):
         self.cfg = cfg
         self.ecfg = ecfg
+        # observability: a shared serving.telemetry.Telemetry hub (span
+        # tracer + metrics + dispatch profiler). Defaults to the
+        # disabled singleton — every hook then short-circuits to a
+        # no-op, so the hot path pays one attribute load + branch and
+        # outputs stay bitwise identical either way.
+        self.telemetry = NULL_TELEMETRY if telemetry is None else telemetry
+        self.tel_label = telemetry_label or "engine"
         B, C = ecfg.max_batch, ecfg.max_seq_len
         # tensor/sequence-parallel serving: an ``ecfg.mesh`` of
         # (data, model) places this engine on a device mesh — weights
@@ -660,6 +669,64 @@ class ServingEngine:
             "step": self.step_index, "kind": kind,
             "spec": jax.tree.map(sds, operands)})
 
+    # -- telemetry hooks ---------------------------------------------------
+    def _vnow(self):
+        """Virtual-clock stamp for spans: the replay clock when driven
+        by one, None under the wall clock (spans then carry only their
+        perf_counter interval)."""
+        return self.now_s if self.clock == "virtual" else None
+
+    def _span(self, name: str, cat: str = "phase", **labels):
+        """A telemetry span on this engine's track (no-op when off)."""
+        return self.telemetry.span(name, cat=cat, tid=self.tel_label,
+                                   now_fn=self._vnow, **labels)
+
+    def _dispatch(self, kind: str, fn, params, *args):
+        """Issue one jitted dispatch: always append the audit-log entry;
+        with telemetry enabled, additionally time the dispatch to
+        completion (``block_until_ready``) under a span named exactly
+        like the dispatch kind and feed the profiler a sample keyed to
+        the log entry just written — the join ``dispatch_calibration``
+        later prices. The result value is identical either way (blocking
+        on it early cannot change its bits)."""
+        self._log_dispatch(kind, *args)
+        tel = self.telemetry
+        if not tel.enabled:
+            return fn(params, *args)
+        idx = len(self.dispatch_log) - 1
+        with tel.span(kind, cat="dispatch", tid=self.tel_label,
+                      now_fn=self._vnow):
+            t0 = time.perf_counter()
+            out = jax.block_until_ready(fn(params, *args))
+            dt = time.perf_counter() - t0
+        tel.profiler.record(self.tel_label, idx, kind, dt)
+        tel.counter("engine_dispatches_total", engine=self.tel_label,
+                    kind=kind, kv=self.kv.name).inc()
+        tel.histogram("engine_dispatch_wall_s", engine=self.tel_label,
+                      kind=kind, kv=self.kv.name).observe(dt)
+        return out
+
+    def _finish(self, req: Request):
+        """Retire ``req`` into ``finished`` (all five finish sites
+        funnel here) and record its latency metrics."""
+        self.finished.append(req)
+        tel = self.telemetry
+        if not tel.enabled:
+            return
+        tenant = req.tenant or "default"
+        prio = str(req.priority)
+        tel.counter("engine_requests_total", engine=self.tel_label,
+                    tenant=tenant, priority=prio).inc()
+        tel.counter("engine_tokens_total", engine=self.tel_label,
+                    tenant=tenant, priority=prio).inc(len(req.output))
+        tel.histogram("engine_ttft_s", engine=self.tel_label,
+                      tenant=tenant, priority=prio).observe(
+                          max(0.0, req.ttft_s))
+        if len(req.output) > 1:
+            tel.histogram("engine_itl_s", engine=self.tel_label,
+                          tenant=tenant, priority=prio).observe(
+                              max(0.0, req.itl_s))
+
     def step(self):
         """One engine iteration, orchestrated by the scheduling policy:
         admit -> (at most one prefill-chunk dispatch) -> single ragged
@@ -667,32 +734,46 @@ class ServingEngine:
         exactly one jitted dispatch per step, plus at most one chunk
         dispatch while a prompt is streaming in."""
         self.step_index += 1
-        self.scheduler.admit(self)
-        chunk_slot = self.scheduler.select_chunk(self)
-        if chunk_slot is not None:
-            self._run_chunk(chunk_slot)
-        live = np.array([r is not None and i not in self.prefilling
-                         for i, r in enumerate(self.slot_req)])
-        if live.any():
-            if self.draft_kv is not None:
-                self._spec_step(live)
-            else:
-                self._decode_step(live)
-        self.scheduler.retire(self)
+        with self._span("step", step=self.step_index):
+            with self._span("admit"):
+                self.scheduler.admit(self)
+            chunk_slot = self.scheduler.select_chunk(self)
+            if chunk_slot is not None:
+                self._run_chunk(chunk_slot)
+            live = np.array([r is not None and i not in self.prefilling
+                             for i, r in enumerate(self.slot_req)])
+            if live.any():
+                if self.draft_kv is not None:
+                    self._spec_step(live)
+                else:
+                    self._decode_step(live)
+            with self._span("retire"):
+                self.scheduler.retire(self)
+        tel = self.telemetry
+        if tel.enabled:
+            tel.gauge("engine_live_slots", engine=self.tel_label).set(
+                sum(r is not None for r in self.slot_req))
+            tel.gauge("engine_waiting", engine=self.tel_label).set(
+                len(self.waiting))
+            tel.gauge("engine_resident_kv_bytes",
+                      engine=self.tel_label).set(
+                          self.kv.resident_kv_bytes())
 
     def _decode_step(self, live):
         """The vanilla one-token-per-slot ragged decode dispatch."""
         cache = self.kv.decode_view(self.slot_pos, live)
         args = (jnp.asarray(self.slot_tok), cache,
                 jnp.asarray(self.slot_pos), jnp.asarray(live))
-        self._log_dispatch("decode", *args)
-        logits, new_cache = self._decode_ragged(self.params, *args)
-        self.kv.commit(new_cache)
+        logits, new_cache = self._dispatch(
+            "decode", self._decode_ragged, self.params, *args)
+        with self._span("kv_commit", cat="kv"):
+            self.kv.commit(new_cache)
         self.decode_dispatches += 1
         self.decode_steps += 1
-        new = np.asarray(self._sample(
-            logits, jnp.asarray(self.slot_seed),
-            jnp.asarray(self.slot_rid), jnp.asarray(self.slot_pos)))
+        with self._span("sample"):
+            new = np.asarray(self._sample(
+                logits, jnp.asarray(self.slot_seed),
+                jnp.asarray(self.slot_rid), jnp.asarray(self.slot_pos)))
         for i in np.nonzero(live)[0]:
             req = self.slot_req[i]
             req.output.append(int(new[i]))
@@ -786,16 +867,18 @@ class ServingEngine:
                                     np.minimum(n_write, chain + 1))
         args = (jnp.asarray(toks), cache,
                 jnp.asarray(self.slot_pos), jnp.asarray(live))
-        self._log_dispatch("verify", *args)
-        logits, new_cache = self._verify_ragged(self.params, *args)
-        self.kv.commit(new_cache)
+        logits, new_cache = self._dispatch(
+            "verify", self._verify_ragged, self.params, *args)
+        with self._span("kv_commit", cat="kv"):
+            self.kv.commit(new_cache)
         self.decode_dispatches += 1
         self.decode_steps += 1
         self.verify_dispatches += 1
         self.spec_row_steps += int(live.sum())
-        greedy = np.asarray(self._sample(
-            logits, jnp.asarray(self.slot_seed),
-            jnp.asarray(self.slot_rid), jnp.asarray(self.slot_pos)))
+        with self._span("sample"):
+            greedy = np.asarray(self._sample(
+                logits, jnp.asarray(self.slot_seed),
+                jnp.asarray(self.slot_rid), jnp.asarray(self.slot_pos)))
         # -- host acceptance + commit/rollback
         for i in np.nonzero(live)[0]:
             req = self.slot_req[i]
@@ -828,8 +911,8 @@ class ServingEngine:
         cache = self.draft_kv.decode_view(self.draft_pos, live)
         args = (jnp.asarray(toks), cache,
                 jnp.asarray(self.draft_pos), jnp.asarray(live))
-        self._log_dispatch("draft_decode", *args)
-        logits, new_cache = self._draft_decode(self.draft_params, *args)
+        logits, new_cache = self._dispatch(
+            "draft_decode", self._draft_decode, self.draft_params, *args)
         self.draft_kv.commit(new_cache)
         self.draft_dispatches += 1
         return logits
@@ -871,7 +954,7 @@ class ServingEngine:
             # explicit zero-token request: nothing to generate — never
             # runs prefill, never touches the cache
             req.t_first = req.t_done = self._now()
-            self.finished.append(req)
+            self._finish(req)
             return True
         cap = self._prompt_cap()
         prompt = req.prompt
@@ -923,8 +1006,8 @@ class ServingEngine:
                 else jnp.float32)
         pre_args = (batch, jnp.asarray(n_prompt - 1, jnp.int32),
                     jnp.asarray(n_prompt, jnp.int32))
-        self._log_dispatch("prefill", *pre_args)
-        logits, rows = self._prefill_one(self.params, *pre_args)
+        logits, rows = self._dispatch(
+            "prefill", self._prefill_one, self.params, *pre_args)
         self.prefills += 1
         self.admission_log.append(req.rid)
         req.prefill_chunks = 1
@@ -935,10 +1018,11 @@ class ServingEngine:
         if (budget <= 1 or tok == self.ecfg.eos_token
                 or n_prompt >= self.ecfg.max_seq_len - 1):
             req.t_done = self._now()
-            self.finished.append(req)
+            self._finish(req)
             return True
-        self.kv.splice(rows, slot, n_prompt, budget,
-                       prompt=prompt if self._prefix_on else None)
+        with self._span("kv_splice", cat="kv"):
+            self.kv.splice(rows, slot, n_prompt, budget,
+                           prompt=prompt if self._prefix_on else None)
         if self._prefix_on:
             # publish the prompt's full blocks as shared (a cold miss:
             # the match above was empty) — the next request with this
@@ -948,8 +1032,9 @@ class ServingEngine:
             # speculative: the draft shadows the committed sequence —
             # prefill its cache over the same (bucketed) batch so the
             # chain can propose from position n_prompt immediately
-            self._log_dispatch("draft_prefill", *pre_args)
-            _, drows = self._draft_prefill(self.draft_params, *pre_args)
+            _, drows = self._dispatch(
+                "draft_prefill", self._draft_prefill, self.draft_params,
+                *pre_args)
             self.draft_kv.splice(drows, slot, n_prompt, budget)
             self.draft_dispatches += 1
             self.draft_pos[slot] = n_prompt
@@ -983,9 +1068,10 @@ class ServingEngine:
         args = (batch, view["k"], view["v"], sel,
                 jnp.asarray(h, jnp.int32),
                 jnp.asarray(n_suf - 1, jnp.int32))
-        self._log_dispatch(f"chunk_{view['kind']}", *args)
-        logits, ks, vs = fn(self.params, *args)
-        self.kv.splice_partial(ks, vs, slot, h, n_suf)
+        logits, ks, vs = self._dispatch(
+            f"chunk_{view['kind']}", fn, self.params, *args)
+        with self._span("kv_splice", cat="kv"):
+            self.kv.splice_partial(ks, vs, slot, h, n_suf)
         self.prefill_chunk_dispatches += 1
         self.admission_log.append(req.rid)
         req.prefill_chunks = 1
@@ -997,7 +1083,7 @@ class ServingEngine:
             # already holds KV (aliased prefix + spliced suffix) —
             # release it (shared refs drop back to the LRU queue)
             req.t_done = self._now()
-            self.finished.append(req)
+            self._finish(req)
             self.kv.free(slot)
             return True
         self.kv.register_prefix(slot, prompt, n_prompt)
@@ -1067,9 +1153,10 @@ class ServingEngine:
         args = (batch, view["k"], view["v"], sel,
                 jnp.asarray(st.done, jnp.int32),
                 jnp.asarray(logit_idx, jnp.int32))
-        self._log_dispatch(f"chunk_{view['kind']}", *args)
-        logits, ks, vs = fn(self.params, *args)
-        self.kv.splice_partial(ks, vs, slot, st.done, n_valid)
+        logits, ks, vs = self._dispatch(
+            f"chunk_{view['kind']}", fn, self.params, *args)
+        with self._span("kv_splice", cat="kv"):
+            self.kv.splice_partial(ks, vs, slot, st.done, n_valid)
         self.prefill_chunk_dispatches += 1
         req.prefill_chunks += 1
         st.done += n_valid
@@ -1080,7 +1167,7 @@ class ServingEngine:
         if (st.budget <= 1 or tok == self.ecfg.eos_token
                 or st.n_prompt >= self.ecfg.max_seq_len - 1):
             req.t_done = self._now()
-            self.finished.append(req)
+            self._finish(req)
             self.slot_req[slot] = None
             self.kv.free(slot)
             return
@@ -1095,10 +1182,11 @@ class ServingEngine:
         """Sample the prompt's first token from prefill logits; stamps
         ``t_first`` — TTFT is measured to here, never to an
         intermediate chunk."""
-        tok = int(np.asarray(self._sample(
-            logits, jnp.asarray([seed], jnp.int32),
-            jnp.asarray([req.rid], jnp.int32),
-            jnp.asarray([n_prompt - 1], jnp.int32)))[0])
+        with self._span("sample"):
+            tok = int(np.asarray(self._sample(
+                logits, jnp.asarray([seed], jnp.int32),
+                jnp.asarray([req.rid], jnp.int32),
+                jnp.asarray([n_prompt - 1], jnp.int32)))[0])
         req.t_first = self._now()
         req.output.append(tok)
         return tok
@@ -1118,7 +1206,7 @@ class ServingEngine:
         """Release slot ``i`` (scheduler-decided retirement)."""
         req = self.slot_req[i]
         req.t_done = self._now()
-        self.finished.append(req)
+        self._finish(req)
         self.slot_req[i] = None
         self.slot_len[i] = 0
         self.kv.free(i)
@@ -1137,17 +1225,19 @@ class ServingEngine:
         # req.prompt may have been truncated at admission): the importer
         # re-matches it against its own index and aliases whatever it
         # already holds instead of copying the prefix in
-        pkt = SlotPacket(
-            req=req, seed=int(self.slot_seed[slot]),
-            tok=int(self.slot_tok[slot, 0]), pos=int(self.slot_pos[slot]),
-            gen_len=int(self.slot_len[slot]),
-            n_prompt=n_prompt,
-            budget=self._budget(req),
-            kv=self.kv.export_slot(
-                slot, int(self.slot_pos[slot]),
-                prompt=(req.prompt[:n_prompt]
-                        if self._prefix_on else None),
-                n_prompt=n_prompt if self._prefix_on else None))
+        with self._span("kv_export", cat="kv"):
+            pkt = SlotPacket(
+                req=req, seed=int(self.slot_seed[slot]),
+                tok=int(self.slot_tok[slot, 0]),
+                pos=int(self.slot_pos[slot]),
+                gen_len=int(self.slot_len[slot]),
+                n_prompt=n_prompt,
+                budget=self._budget(req),
+                kv=self.kv.export_slot(
+                    slot, int(self.slot_pos[slot]),
+                    prompt=(req.prompt[:n_prompt]
+                            if self._prefix_on else None),
+                    n_prompt=n_prompt if self._prefix_on else None))
         self.slot_req[slot] = None
         self.slot_len[slot] = 0
         self.kv.free(slot)
@@ -1157,7 +1247,8 @@ class ServingEngine:
         """Land a packet in free slot ``slot`` and rebind the stream
         (inverse of :meth:`_pack_slot`; the import re-runs the
         reservation math, so callers must check ``can_admit`` first)."""
-        self.kv.import_slot(pkt.kv, slot, pkt.n_prompt, pkt.budget)
+        with self._span("kv_import", cat="kv"):
+            self.kv.import_slot(pkt.kv, slot, pkt.n_prompt, pkt.budget)
         self.slot_req[slot] = pkt.req
         self.slot_len[slot] = pkt.gen_len
         self.slot_pos[slot] = pkt.pos
@@ -1186,13 +1277,16 @@ class ServingEngine:
                 "preemption is unsupported under speculative decoding: "
                 "the draft's shadow cache is not part of the export "
                 "packet and cannot resume")
-        pkt = self._pack_slot(slot)
+        with self._span("preempt", rid=req.rid):
+            pkt = self._pack_slot(slot)
         self.preempted_packets[req.rid] = pkt
         req.preemptions += 1
         self.preemptions += 1
         self.preempted_kv_bytes += int(pkt.kv["kv_bytes"])
         self.preemption_log.append((self.step_index, req.rid))
         self.waiting.append(req)
+        self.telemetry.counter("engine_preemptions_total",
+                               engine=self.tel_label).inc()
         return pkt
 
     def _resume_slot(self, slot: int, req: Request) -> bool:
@@ -1209,13 +1303,17 @@ class ServingEngine:
 
     # -- metrics ---------------------------------------------------------------
     def summary(self) -> dict:
+        """Serving report. Schema-stable: the key set is identical with
+        zero finished requests (zero/NaN-free defaults) and with N —
+        callers never guard for missing keys."""
         done = self.finished
-        if not done:
-            return {"requests": 0}
+        n = len(done)
         lat = [r.latency_s for r in done]
         ttft = [r.ttft_s for r in done]
+        itl = [r.itl_s for r in done if len(r.output) > 1]
         toks = sum(len(r.output) for r in done)
-        wall = max(r.t_done for r in done) - min(r.t_submit for r in done)
+        wall = (max(r.t_done for r in done)
+                - min(r.t_submit for r in done)) if done else 0.0
         resident = (self.kv.peak_resident_kv_bytes
                     + (self.draft_kv.peak_resident_kv_bytes
                        if self.draft_kv is not None else 0))
@@ -1224,18 +1322,21 @@ class ServingEngine:
         # over ``data`` for contiguous; 1 without a mesh)
         parts = int(getattr(self.kv, "kv_partitions", 1))
         return {
-            "requests": len(done),
+            "requests": n,
             "tokens": toks,
-            "tokens_per_s": toks / wall if wall > 0 else float("inf"),
-            "qps": len(done) / wall if wall > 0 else float("inf"),
-            "mean_latency_s": float(np.mean(lat)),
-            "mean_ttft_s": float(np.mean(ttft)),
-            "ttft_p50_s": float(np.percentile(ttft, 50)),
-            "ttft_p99_s": float(np.percentile(ttft, 99)),
+            # all-zero-duration runs with output keep the historical
+            # +inf rates; an empty run reports 0.0, not NaN/inf
+            "tokens_per_s": ((toks / wall if wall > 0 else float("inf"))
+                             if done else 0.0),
+            "qps": ((n / wall if wall > 0 else float("inf"))
+                    if done else 0.0),
+            "mean_latency_s": float(np.mean(lat)) if lat else 0.0,
+            "mean_ttft_s": float(np.mean(ttft)) if ttft else 0.0,
+            "ttft_p50_s": float(np.percentile(ttft, 50)) if ttft else 0.0,
+            "ttft_p99_s": float(np.percentile(ttft, 99)) if ttft else 0.0,
             # ITL only over requests that actually decoded (>=2 tokens);
             # admit-time retirements have no inter-token gap to average
-            "mean_itl_s": float(np.mean(
-                [r.itl_s for r in done if len(r.output) > 1] or [0.0])),
+            "mean_itl_s": float(np.mean(itl)) if itl else 0.0,
             "scheduler": self.scheduler.name,
             "prefill_chunks": sum(r.prefill_chunks for r in done),
             "prefill_chunk_dispatches": self.prefill_chunk_dispatches,
@@ -1267,7 +1368,8 @@ class ServingEngine:
             # SLO-policy preemption accounting (0 under other policies)
             "preemptions": self.preemptions,
             "preempted_kv_bytes": self.preempted_kv_bytes,
-            "slo_attainment": sum(r.slo_met for r in done) / len(done),
+            "slo_attainment": (sum(r.slo_met for r in done) / n
+                               if n else 1.0),
             **request_breakdowns(done),
             "kv_cache": self.kv.name,
             # prefix-cache accounting (zeros where the backend has no
@@ -1301,4 +1403,6 @@ class ServingEngine:
                              if self.mesh is not None else 1),
             "kv_partitions": parts,
             "resident_kv_bytes_per_device": -(-resident // parts),
+            # telemetry fold-in: always present; all-zero when disabled
+            "telemetry": self.telemetry.engine_aggregates(self.tel_label),
         }

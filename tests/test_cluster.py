@@ -296,6 +296,78 @@ def test_migration_hops_accumulate(setup):
 
 
 # ---------------------------------------------------------------------------
+# virtual-clock replay determinism (straggler timing)
+# ---------------------------------------------------------------------------
+
+def test_replay_with_auto_drain_is_deterministic(setup):
+    """Regression: ``ClusterEngine.step`` used to clock worker steps
+    with raw wall time even under the virtual clock, so replaying a
+    trace with ``auto_drain_stragglers`` could spuriously drain a
+    healthy worker whenever host jitter tripped the EMA deadline —
+    different schedule every run. Under the virtual clock the monitor
+    now sees a constant, which never breaches: two replays must take
+    identical schedules, drain nothing, and stay bitwise."""
+    from repro.serving.workload import SLO, TenantSpec, make_trace, replay
+
+    cfg, params = setup
+    tr = make_trace(
+        (TenantSpec("t", rate_rps=25.0, prompt_len=(6, 10),
+                    new_tokens=(3, 3), priority=0,
+                    slo=SLO(ttft_s=float("inf"))),),
+        0.3, vocab_size=cfg.vocab_size, seed=4)
+
+    def once():
+        clu = ClusterEngine(
+            params, cfg,
+            EngineConfig(max_batch=2, max_seq_len=64, max_new_tokens=4,
+                         eos_token=-1),
+            # factor=1.0 trips on any step slower than its EMA — the
+            # most drain-happy setting wall-clock jitter could exploit
+            ClusterConfig(n_prefill=1, n_decode=2, straggler_factor=1.0,
+                          auto_drain_stragglers=True))
+        rep = replay(clu, tr, step_quantum_s=0.01)
+        return rep, clu
+
+    rep1, clu1 = once()
+    rep2, clu2 = once()
+    assert rep1["outputs"] and rep1["outputs"] == rep2["outputs"]
+    assert rep1["steps"] == rep2["steps"]
+    for clu in (clu1, clu2):
+        assert all(w.monitor.events == [] for w in clu.decode_workers)
+        assert all(not w.draining for w in clu.decode_workers)
+
+
+def test_cluster_summary_schema_stable_for_zero_and_n_requests(setup):
+    """Mirror of the engine guarantee at cluster scope: identical key
+    set and NaN-free defaults with zero requests."""
+    def _assert_nan_free(obj, path=""):
+        if isinstance(obj, dict):
+            for k, v in obj.items():
+                _assert_nan_free(v, f"{path}.{k}")
+        elif isinstance(obj, (list, tuple)):
+            for i, v in enumerate(obj):
+                _assert_nan_free(v, f"{path}[{i}]")
+        elif isinstance(obj, float):
+            assert obj == obj, f"NaN at {path}"
+
+    cfg, params = setup
+    kw = dict(max_batch=2, max_seq_len=64, max_new_tokens=4)
+    ccfg = ClusterConfig(n_prefill=1, n_decode=2)
+    s0 = ClusterEngine(params, cfg, EngineConfig(**kw), ccfg).summary()
+    clu = ClusterEngine(params, cfg, EngineConfig(**kw), ccfg)
+    for p in _prompts(cfg, [8, 13], seed=8):
+        clu.submit(p)
+    clu.run()
+    sN = clu.summary()
+    assert set(s0) == set(sN)
+    _assert_nan_free(s0)
+    assert s0["requests"] == 0
+    assert s0["tokens_per_s"] == 0.0
+    assert s0["slo_attainment"] == 1.0
+    assert s0["workers_alive"] == 2    # routable decode workers
+
+
+# ---------------------------------------------------------------------------
 # migration property (hypothesis)
 # ---------------------------------------------------------------------------
 

@@ -112,6 +112,38 @@ def test_max_new_tokens_respected(setup):
     assert len(r.output) == 3
 
 
+def _assert_nan_free(obj, path=""):
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            _assert_nan_free(v, f"{path}.{k}")
+    elif isinstance(obj, (list, tuple)):
+        for i, v in enumerate(obj):
+            _assert_nan_free(v, f"{path}[{i}]")
+    elif isinstance(obj, float):
+        assert obj == obj, f"NaN at {path}"
+
+
+def test_summary_schema_stable_for_zero_and_n_requests(setup):
+    """summary() before any request must carry the full key set with
+    NaN-free defaults — dashboards and the JSON artifacts key on the
+    schema, not on whether traffic has arrived yet."""
+    cfg, params = setup
+    kw = dict(max_batch=2, max_seq_len=48, max_new_tokens=3)
+    s0 = ServingEngine(params, cfg, EngineConfig(**kw)).summary()
+    eng = ServingEngine(params, cfg, EngineConfig(**kw))
+    rng = np.random.default_rng(20)
+    for _ in range(3):
+        eng.submit(rng.integers(0, cfg.vocab_size, size=8))
+    eng.run()
+    sN = eng.summary()
+    assert set(s0) == set(sN)
+    _assert_nan_free(s0)
+    assert s0["requests"] == 0 and s0["tokens"] == 0
+    assert s0["tokens_per_s"] == 0.0 and s0["qps"] == 0.0
+    assert s0["slo_attainment"] == 1.0     # vacuously met
+    assert s0["telemetry"]["enabled"] is False
+
+
 def test_summary_metrics(setup):
     cfg, params = setup
     rng = np.random.default_rng(5)
